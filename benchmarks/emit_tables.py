@@ -1,0 +1,54 @@
+"""Emit EXPERIMENTS.md markdown tables from the dry-run records."""
+import json, pathlib, sys
+
+DIR = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+def rows(filt):
+    out = []
+    for p in sorted(DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if filt(r):
+            out.append(r)
+    return out
+
+def baseline_table():
+    print("| arch.shape | mesh | strat | comp_s | mem_s | coll_s | dominant | HBM GiB | useful | frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows(lambda r: r.get("variant") == "baseline"):
+        key = f"{r['arch']}.{r['shape']}"
+        mesh = "1-pod" if r["mesh"] == "pod16x16" else "2-pod"
+        if r.get("skipped"):
+            print(f"| {key} | {mesh} | — | — | — | — | SKIP (full attention) | — | — | — |")
+            continue
+        rl = r["roofline"]
+        print(f"| {key} | {mesh} | {r.get('strategy','?')} | {rl['compute_s']:.3f} | {rl['memory_s']:.3f} | "
+              f"{rl['collective_s']:.3f} | {rl['dominant']} | "
+              f"{r['memory']['peak_hbm_bytes']/2**30:.1f} | {r['useful_flops_ratio']:.2f} | {rl['roofline_fraction']:.2%} |")
+
+def variant_table():
+    print("| cell | variant | strat | comp_s | mem_s | coll_s | bound_s | HBM GiB | frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows(lambda r: r.get("variant") != "baseline" or True):
+        if r.get("skipped") or not r.get("ok"):
+            continue
+        key = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        if key not in VARIANT_CELLS:
+            continue
+        rl = r["roofline"]
+        print(f"| {key} | {r['variant']} | {r.get('strategy','?')} | {rl['compute_s']:.2f} | {rl['memory_s']:.2f} | "
+              f"{rl['collective_s']:.2f} | {rl['step_s_bound']:.2f} | "
+              f"{r['memory']['peak_hbm_bytes']/2**30:.1f} | {rl['roofline_fraction']:.2%} |")
+
+VARIANT_CELLS = {
+    "deepseek_67b.train_4k.pod16x16",
+    "deepseek_67b.train_4k.pod2x16x16",
+    "starcoder2_7b.prefill_32k.pod16x16",
+    "yi_9b.train_4k.pod16x16",
+    "rwkv6_3b.train_4k.pod2x16x16",
+}
+
+if __name__ == "__main__":
+    if sys.argv[1:] == ["variants"]:
+        variant_table()
+    else:
+        baseline_table()

@@ -1,0 +1,67 @@
+"""Paper §3.1 / §5(1): object-size tradeoff sweep.
+
+'The challenge is to find a size that both aligns with workload access
+patterns and strikes a good balance between parallel access and load
+balancing (smaller is better), and independent access and metadata
+overhead (larger is better).'
+
+For one dataset and one scan workload we sweep the target object size
+and report: object count (metadata overhead), per-OSD load imbalance
+(max/mean bytes), wall time of a parallel full-scan aggregate, and wall
+time of a small random row-range read (independent access).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import objclass as oc
+from repro.core.logical import Column, LogicalDataset, RowRange
+from repro.core.partition import PartitionPolicy
+from repro.core.store import make_store
+from repro.core.vol import GlobalVOL
+
+N_ROWS = 200_000
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    table = {"x": rng.normal(size=N_ROWS),
+             "g": rng.integers(0, 64, N_ROWS).astype(np.int32)}
+    print(f"objsize_sweep ({N_ROWS} rows x 12 B, 8 OSDs)")
+    print(f"{'target':>9}{'objects':>9}{'imbalance':>11}{'scan_ms':>9}"
+          f"{'point_ms':>10}")
+    for target_kb in (16, 64, 256, 1024, 4096):
+        ds = LogicalDataset(
+            "sweep", (Column("x", "float64"), Column("g", "int32")),
+            N_ROWS, 512)
+        store = make_store(8, replicas=2)
+        vol = GlobalVOL(store)
+        omap = vol.create(ds, PartitionPolicy(
+            target_object_bytes=target_kb << 10,
+            max_object_bytes=max(target_kb << 12, 4 << 20)))
+        vol.write(omap, table)
+
+        sizes = [v for v in store.stats()["osd_bytes"].values() if v]
+        imbalance = max(sizes) / (sum(sizes) / len(sizes))
+
+        t0 = time.perf_counter()
+        res, _ = vol.query(omap, [oc.op("agg", col="x", fn="sum")])
+        scan_ms = (time.perf_counter() - t0) * 1e3
+
+        t0 = time.perf_counter()
+        for _ in range(20):
+            r0 = int(rng.integers(0, N_ROWS - 64))
+            vol.read(omap, RowRange(r0, r0 + 64), columns=["x"])
+        point_ms = (time.perf_counter() - t0) * 1e3 / 20
+
+        print(f"{target_kb:>7}KB{omap.n_objects:>9}{imbalance:>11.2f}"
+              f"{scan_ms:>9.1f}{point_ms:>10.2f}")
+    print("tradeoff: small objects -> balance/parallelism; large objects "
+          "-> fewer metadata entries, cheaper point reads")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Render the roofline table from the dry-run cell records.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun)
+and prints, per (arch x shape x mesh x variant): the three roofline terms
+in seconds, the dominant term, peak HBM, MODEL_FLOPS/HLO_FLOPS, and the
+roofline fraction.  This is a pure reporting pass — no compilation.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+DIR = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(pattern: str = "*.json") -> list[dict]:
+    recs = [json.loads(p.read_text()) for p in sorted(DIR.glob(pattern))]
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    key = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+    if r.get("variant", "baseline") != "baseline":
+        key += f".{r['variant']}"
+    if r.get("skipped"):
+        return f"{key:<58}SKIP ({r['reason'][:40]})"
+    if not r.get("ok"):
+        return f"{key:<58}FAIL {r.get('error', '')[:60]}"
+    rl = r["roofline"]
+    return (f"{key:<58}"
+            f"{rl['compute_s']:>9.3f}{rl['memory_s']:>9.3f}"
+            f"{rl['collective_s']:>9.3f}  {rl['dominant']:<10}"
+            f"{r['memory']['peak_hbm_bytes'] / 2**30:>7.2f}"
+            f"{r['useful_flops_ratio']:>7.2f}"
+            f"{rl['roofline_fraction']:>7.2%}")
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        print("no dry-run records; run: PYTHONPATH=src python -m "
+              "repro.launch.dryrun --all --mesh both")
+        return
+    print(f"{'cell':<58}{'comp_s':>9}{'mem_s':>9}{'coll_s':>9}"
+          f"  {'dominant':<10}{'HBM_GiB':>7}{'useful':>7}{'frac':>7}")
+    n_ok = n_fail = n_skip = 0
+    for r in recs:
+        print(fmt_row(r))
+        if r.get("skipped"):
+            n_skip += 1
+        elif r.get("ok"):
+            n_ok += 1
+        else:
+            n_fail += 1
+    print(f"\n{n_ok} ok, {n_fail} failed, {n_skip} skipped "
+          f"(long_500k on full-attention archs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Table 1: dataset creation — native vs forwarding plugin x N OSDs.
+
+The paper writes a 3 GB HDF5 dataset:
+  native (no plugin), 1 node ........ 26.28 s
+  forwarding plugin, 1 node ......... 61.12 s   (2.33x native)
+  forwarding plugin, 2 nodes ........ 36.07 s   (1.37x)
+  forwarding plugin, 3 nodes ........ 29.34 s   (1.12x)
+  => >= 3 nodes of parallelism offset the plugin overhead.
+
+We reproduce the *shape* of that result at 1/16 scale (192 MB) with the
+store's transport model (client NIC 100 MB/s shared across writers;
+100 MB/s disk per OSD — the paper's gigabit-era testbed): the native
+path serializes once to a local disk; the forwarding path pays the
+client hop + replication, and N parallel OSDs amortize the disk time
+while the shared NIC sets the floor.  The claim validated is the ratio
+structure (fwd_1 > native; fwd_N decreasing toward ~1x), not absolute
+seconds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.logical import Column, LogicalDataset
+from repro.core.partition import PartitionPolicy
+from repro.core.store import make_store
+from repro.core.vol import GlobalVOL, LocalVOL
+
+TOTAL_BYTES = 192 << 20
+PAPER = {"native_1": 26.28, "fwd_1": 61.12, "fwd_2": 36.07,
+         "fwd_3": 29.34}
+
+
+def build_world(n_osds: int):
+    n_rows = TOTAL_BYTES // 1024
+    ds = LogicalDataset(
+        "t1", (Column("payload", "uint8", (1024,)),), n_rows, 2048)
+    store = make_store(max(n_osds, 1), replicas=min(2, n_osds), n_pgs=64,
+                       client_bw=100 << 20, disk_bw=100 << 20)
+    # forwarding path pays the plugin work; keep bitpack off so both
+    # paths serialize the same bytes (paper writes raw HDF5 either way)
+    vol = GlobalVOL(store, local=LocalVOL(bitpack_ints=False))
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=8 << 20,
+                                          max_object_bytes=32 << 20))
+    rng = np.random.default_rng(0)
+    table = {"payload": rng.integers(0, 255, (n_rows, 1024),
+                                     dtype=np.uint8)}
+    return store, vol, omap, table
+
+
+def run() -> dict:
+    rows = {}
+    # native: one writer, no partitioning/replication — single blob write
+    store, vol, omap, table = build_world(1)
+    t0 = time.perf_counter()
+    vol.write(omap, table, forwarding=False)
+    rows["native_1"] = time.perf_counter() - t0
+
+    for n in (1, 2, 3, 4):
+        store, vol, omap, table = build_world(n)
+        t0 = time.perf_counter()
+        vol.write(omap, table, workers=n)
+        rows[f"fwd_{n}"] = time.perf_counter() - t0
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    native = rows["native_1"]
+    print("table1_forwarding (192MB scale; paper ratios at 3GB)")
+    print(f"{'config':<10}{'time_s':>9}{'vs_native':>11}{'paper':>8}")
+    for k, t in rows.items():
+        paper = PAPER.get(k)
+        pr = f"{paper / PAPER['native_1']:.2f}x" if paper else "-"
+        print(f"{k:<10}{t:>9.2f}{t / native:>10.2f}x{pr:>8}")
+    # the paper's qualitative claims:
+    assert rows["fwd_1"] > rows["native_1"], "plugin must cost overhead"
+    assert rows["fwd_2"] < rows["fwd_1"] and rows["fwd_3"] < rows["fwd_2"], \
+        "parallel writers must amortize the overhead"
+    print("claims: fwd_1 > native; fwd_N monotonically amortizes -> OK")
+
+
+if __name__ == "__main__":
+    main()

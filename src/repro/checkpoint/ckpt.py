@@ -1,0 +1,181 @@
+"""Checkpoints AS datasets: train state mapped to objects via core.
+
+The train-state pytree is flattened to named leaves; each leaf's bytes
+are partitioned into objects by ``core.partition`` (same grouping /
+splitting / sizing machinery as any dataset — the checkpoint IS a mapped
+dataset), placed and replicated by CRUSH, and committed atomically with
+a manifest-last protocol:
+
+  ckpt/<tag>/step-<n>/<leaf objects...>     (replicated data)
+  ckpt/<tag>/step-<n>/.manifest             (commit record, written last)
+
+A checkpoint without a readable manifest is invisible to ``restore`` —
+a crash mid-save can never be restored from.  OSD failures are tolerated
+up to replicas-1 per object; ``ObjectStore.recover`` heals the rest.
+
+``CheckpointManager`` adds async double-buffered saves (serialization +
+store writes overlap the next train steps) and retention.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.logical import Column, LogicalDataset
+from repro.core.partition import PartitionPolicy, plan_partition
+from repro.core.store import ObjectNotFound, ObjectStore
+
+_DEFAULT_POLICY = PartitionPolicy(target_object_bytes=8 << 20,
+                                  max_object_bytes=32 << 20)
+
+
+def _flatten(state) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in flat}
+
+
+def _leaf_dataset(tag: str, step: int, idx: int,
+                  arr: np.ndarray) -> LogicalDataset:
+    return LogicalDataset(
+        f"ckpt/{tag}/step-{step}/leaf-{idx:05d}",
+        (Column("bytes", "uint8"),),
+        n_rows=arr.nbytes, unit_rows=max(arr.nbytes, 1))
+
+
+def save(store: ObjectStore, state: Any, step: int, *, tag: str = "train",
+         policy: PartitionPolicy = _DEFAULT_POLICY, workers: int = 8,
+         extra: dict | None = None) -> dict:
+    """Write a checkpoint; returns the manifest."""
+    leaves = _flatten(state)
+    manifest: dict = {"step": step, "tag": tag, "leaves": {},
+                      "extra": extra or {}}
+
+    def put_leaf(item) -> tuple[str, dict]:
+        idx, (key, arr) = item
+        raw = arr.tobytes()
+        ds = _leaf_dataset(tag, step, idx, arr)
+        omap = plan_partition(ds, policy)
+        for ext in omap:
+            store.put(ext.name, raw[ext.row_start:ext.row_stop])
+        return key, {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                     "objects": [[e.name, e.row_start, e.row_stop]
+                                 for e in omap],
+                     "crc": zlib.crc32(raw)}
+
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        for key, meta in pool.map(put_leaf,
+                                  enumerate(sorted(leaves.items()))):
+            manifest["leaves"][key] = meta
+
+    # commit record LAST — atomicity point
+    store.put(f"ckpt/{tag}/step-{step}/.manifest",
+              json.dumps(manifest).encode())
+    return manifest
+
+
+def latest_step(store: ObjectStore, *, tag: str = "train") -> int | None:
+    steps = []
+    for name in store.list_objects(f"ckpt/{tag}/step-"):
+        if name.endswith("/.manifest"):
+            try:
+                steps.append(int(name.split("step-")[1].split("/")[0]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore(store: ObjectStore, state_like: Any, *, step: int | None = None,
+            tag: str = "train", workers: int = 8) -> tuple[Any, dict]:
+    """Rebuild the pytree (structured like ``state_like``) from objects."""
+    if step is None:
+        step = latest_step(store, tag=tag)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint for tag {tag!r}")
+    manifest = json.loads(
+        store.get(f"ckpt/{tag}/step-{step}/.manifest").decode())
+
+    def get_leaf(meta: dict) -> np.ndarray:
+        raw = b"".join(store.get(n) for n, _, _ in meta["objects"])
+        if zlib.crc32(raw) != meta["crc"]:
+            raise IOError("checkpoint leaf corrupt")
+        return np.frombuffer(raw, dtype=meta["dtype"]).reshape(
+            meta["shape"]).copy()
+
+    keys = sorted(manifest["leaves"])
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        arrays = list(pool.map(
+            lambda k: get_leaf(manifest["leaves"][k]), keys))
+    by_key = dict(zip(keys, arrays))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = by_key[key]
+        want = tuple(getattr(leaf, "shape", ()) or ())
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: shape {arr.shape} != {want}")
+        out.append(arr)
+    state = jax.tree_util.tree_unflatten(treedef, out)
+    return state, manifest
+
+
+class CheckpointManager:
+    """Async saves + retention.  ``maybe_save`` snapshots to host
+    (blocking, cheap) then writes to the store on a background thread so
+    training overlaps the object writes."""
+
+    def __init__(self, store: ObjectStore, *, tag: str = "train",
+                 every_steps: int = 100, keep: int = 3,
+                 policy: PartitionPolicy = _DEFAULT_POLICY):
+        self.store = store
+        self.tag = tag
+        self.every_steps = every_steps
+        self.keep = keep
+        self.policy = policy
+        self._pending: threading.Thread | None = None
+        self.saved_steps: list[int] = []
+
+    def maybe_save(self, state: Any, step: int,
+                   extra: dict | None = None) -> bool:
+        if step % self.every_steps:
+            return False
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # device->host snap
+
+        def work():
+            save(self.store, host_state, step, tag=self.tag,
+                 policy=self.policy, extra=extra)
+            self.saved_steps.append(step)
+            self._retire()
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+        return True
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _retire(self) -> None:
+        while len(self.saved_steps) > self.keep:
+            old = self.saved_steps.pop(0)
+            prefix = f"ckpt/{self.tag}/step-{old}/"
+            # delete manifest FIRST so a partially-deleted ckpt is invisible
+            try:
+                self.store.delete(prefix + ".manifest")
+            except ObjectNotFound:
+                pass
+            for name in self.store.list_objects(prefix):
+                self.store.delete(name)

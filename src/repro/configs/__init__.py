@@ -1,0 +1,11 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    ShapeSpec,
+    SSMConfig,
+    get_config,
+    registry,
+)

@@ -1,0 +1,22 @@
+"""The paper's contribution: dataset -> object-storage mapping with
+storage-side computation (SkyhookDM / HDF5-VOL, in JAX-native form).
+
+Layering (bottom up):
+  placement  — CRUSH-like PG/HRW placement from a compact cluster map
+  store      — RADOS-like replicated object store + objclass execution
+  format     — physical block format, codecs, layout transformation
+  logical    — access-library-facing datasets (rows, columns, units)
+  partition  — logical units -> objects (grouping/splitting/sizing)
+  objclass   — storage-side op registry (select/project/filter/agg/...)
+  vol        — GlobalVOL (client plugin) / LocalVOL (storage plugin)
+  skyhook    — driver/worker query engine over vol+objclass
+  pushdown_jax — the TPU data plane: compute-at-shard via shard_map
+"""
+
+from repro.core.logical import Column, LogicalDataset, RowRange  # noqa: F401
+from repro.core.partition import (  # noqa: F401
+    ObjectMap, PartitionPolicy, plan_partition)
+from repro.core.placement import ClusterMap  # noqa: F401
+from repro.core.store import ObjectStore, make_store  # noqa: F401
+from repro.core.vol import GlobalVOL, LocalVOL  # noqa: F401
+from repro.core.skyhook import Query, SkyhookDriver  # noqa: F401

@@ -1,0 +1,220 @@
+"""Physical block format + codecs ("physical design management", paper §5).
+
+Objects hold *blocks*: a self-describing serialization of a column table
+(standing in for the paper's Flatbuffers/Arrow wrappers).  A block has:
+
+  header (json): schema, n_rows, layout ("row"|"col"), per-column codec,
+                 per-column zone map (min/max) for object pruning — the
+                 paper's RocksDB-index analogue, kept *inside* the object
+                 plus mirrored into OSD xattrs.
+  body: per-column encoded buffers (col layout) or one interleaved buffer
+        (row layout).
+
+Codecs:
+  none          — raw little-endian buffer
+  zlib          — DEFLATE (cheap stand-in for generic compression)
+  bitpack<b>    — planar bitpack for unsigned ints < 2**b: each group of
+                  32 values becomes b uint32 words, word k holding bit k
+                  of all 32 values.  TPU-friendly: decode is shift/mask
+                  vector ops only (see kernels/codec) so the *storage
+                  side* decompression can run on the device that owns the
+                  shard — the paper's `compress` offload adapted to TPU.
+
+Layout transformation (row<->col) is lossless and is the mechanism behind
+``LocalVOL``'s physical-design optimization.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+import zlib
+from typing import Mapping
+
+import numpy as np
+
+from repro.core.logical import Column
+
+_MAGIC = b"SKYB"
+_VERSION = 2
+
+
+# --------------------------------------------------------------------------
+# planar bitpack codec (numpy reference; kernels/codec has the Pallas twin)
+# --------------------------------------------------------------------------
+
+
+def bitpack_width(max_value: int) -> int:
+    """Bits needed for values in [0, max_value]."""
+    return max(1, int(max_value).bit_length())
+
+
+def bitpack_encode(values: np.ndarray, bits: int) -> np.ndarray:
+    """(n,) uint32-able -> (ceil(n/32), bits) uint32, planar layout."""
+    v = np.ascontiguousarray(values, dtype=np.uint32).ravel()
+    if v.size and int(v.max()) >= (1 << bits):
+        raise ValueError(f"value {int(v.max())} needs more than {bits} bits")
+    n = v.size
+    n_groups = -(-n // 32) if n else 0
+    padded = np.zeros((n_groups * 32,), np.uint32)
+    padded[:n] = v
+    g = padded.reshape(n_groups, 32)                       # (G, 32)
+    lane = np.arange(32, dtype=np.uint32)
+    out = np.zeros((n_groups, bits), np.uint32)
+    for k in range(bits):
+        out[:, k] = (((g >> np.uint32(k)) & np.uint32(1)) << lane).sum(
+            axis=1, dtype=np.uint32)
+    return out
+
+
+def bitpack_decode(words: np.ndarray, bits: int, n: int) -> np.ndarray:
+    """(G, bits) uint32 -> (n,) uint32."""
+    w = np.ascontiguousarray(words, dtype=np.uint32).reshape(-1, bits)
+    lane = np.arange(32, dtype=np.uint32)
+    vals = np.zeros((w.shape[0], 32), np.uint32)
+    for k in range(bits):
+        vals |= (((w[:, k:k + 1] >> lane) & np.uint32(1))
+                 << np.uint32(k)).astype(np.uint32)
+    return vals.ravel()[:n]
+
+
+# --------------------------------------------------------------------------
+# per-column encode/decode
+# --------------------------------------------------------------------------
+
+
+def _encode_column(a: np.ndarray, codec: str) -> bytes:
+    raw = np.ascontiguousarray(a)
+    if codec == "none":
+        return raw.tobytes()
+    if codec == "zlib":
+        return zlib.compress(raw.tobytes(), level=1)
+    if codec.startswith("bitpack"):
+        bits = int(codec[len("bitpack"):])
+        if not np.issubdtype(raw.dtype, np.integer):
+            raise TypeError(f"bitpack needs ints, got {raw.dtype}")
+        return bitpack_encode(raw.ravel(), bits).tobytes()
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def _decode_column(buf: bytes, codec: str, dtype: str,
+                   shape: tuple[int, ...]) -> np.ndarray:
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 0
+    if codec == "none":
+        return np.frombuffer(buf, dtype=dtype).reshape(shape).copy()
+    if codec == "zlib":
+        return np.frombuffer(zlib.decompress(buf), dtype=dtype).reshape(
+            shape).copy()
+    if codec.startswith("bitpack"):
+        bits = int(codec[len("bitpack"):])
+        words = np.frombuffer(buf, dtype=np.uint32)
+        return bitpack_decode(words, bits, n).astype(dtype).reshape(shape)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+# --------------------------------------------------------------------------
+# block encode/decode
+# --------------------------------------------------------------------------
+
+
+def zone_map(table: Mapping[str, np.ndarray]) -> dict:
+    """Per-column min/max for numeric columns (object-pruning index)."""
+    zm = {}
+    for k, a in table.items():
+        a = np.asarray(a)
+        if a.size and np.issubdtype(a.dtype, np.number):
+            zm[k] = [float(a.min()), float(a.max())]
+    return zm
+
+
+def encode_block(
+    table: Mapping[str, np.ndarray],
+    *,
+    layout: str = "col",
+    codecs: Mapping[str, str] | None = None,
+) -> bytes:
+    """Serialize a column table into a block."""
+    if layout not in ("row", "col"):
+        raise ValueError(layout)
+    codecs = dict(codecs or {})
+    cols = []
+    n_rows = None
+    for name, a in table.items():
+        a = np.asarray(a)
+        if n_rows is None:
+            n_rows = a.shape[0] if a.ndim else 0
+        elif a.shape[0] != n_rows:
+            raise ValueError(f"ragged block: {name}")
+        cols.append({"name": name, "dtype": str(a.dtype),
+                     "shape": list(a.shape),
+                     "codec": codecs.get(name, "none")})
+
+    bufs: list[bytes] = []
+    if layout == "col":
+        for c in cols:
+            bufs.append(_encode_column(np.asarray(table[c["name"]]),
+                                       c["codec"]))
+    else:  # row layout: interleave via a structured scratch array
+        if any(c["codec"] != "none" for c in cols):
+            raise ValueError("row layout supports codec 'none' only")
+        fields = [(c["name"], c["dtype"],
+                   tuple(c["shape"][1:]) or ()) for c in cols]
+        rec = np.zeros(n_rows or 0, dtype=np.dtype(fields))
+        for c in cols:
+            rec[c["name"]] = table[c["name"]]
+        bufs.append(rec.tobytes())
+
+    header = {"v": _VERSION, "layout": layout, "n_rows": int(n_rows or 0),
+              "columns": cols, "zone_map": zone_map(table),
+              "lens": [len(b) for b in bufs]}
+    hjson = json.dumps(header).encode()
+    return b"".join([_MAGIC, struct.pack("<I", len(hjson)), hjson, *bufs])
+
+
+def block_header(blob: bytes) -> dict:
+    if blob[:4] != _MAGIC:
+        raise ValueError("not a block")
+    (hlen,) = struct.unpack("<I", blob[4:8])
+    return json.loads(blob[8:8 + hlen])
+
+
+def decode_block(blob: bytes,
+                 columns: list[str] | None = None) -> dict[str, np.ndarray]:
+    """Deserialize (optionally projecting a column subset without touching
+    other columns' bytes — col layout only reads what it needs)."""
+    header = block_header(blob)
+    (hlen,) = struct.unpack("<I", blob[4:8])
+    off = 8 + hlen
+    out: dict[str, np.ndarray] = {}
+    if header["layout"] == "col":
+        for c, blen in zip(header["columns"], header["lens"]):
+            if columns is None or c["name"] in columns:
+                out[c["name"]] = _decode_column(
+                    blob[off:off + blen], c["codec"], c["dtype"],
+                    tuple(c["shape"]))
+            off += blen
+    else:
+        fields = [(c["name"], c["dtype"],
+                   tuple(c["shape"][1:]) or ()) for c in header["columns"]]
+        rec = np.frombuffer(blob[off:off + header["lens"][0]],
+                            dtype=np.dtype(fields))
+        for c in header["columns"]:
+            if columns is None or c["name"] in columns:
+                out[c["name"]] = np.ascontiguousarray(rec[c["name"]])
+    if columns is not None:
+        missing = set(columns) - set(out)
+        if missing:
+            raise KeyError(f"columns not in block: {sorted(missing)}")
+    return out
+
+
+def transform_layout(blob: bytes, to: str,
+                     codecs: Mapping[str, str] | None = None) -> bytes:
+    """Row<->col physical transformation (paper §5 'physical design')."""
+    table = decode_block(blob)
+    return encode_block(table, layout=to, codecs=codecs)
+
+
+def schema_columns(blob: bytes) -> list[Column]:
+    return [Column(c["name"], c["dtype"], tuple(c["shape"][1:]))
+            for c in block_header(blob)["columns"]]

@@ -1,0 +1,152 @@
+"""Logical datasets — the access-library-facing data model (paper §2 Fig 1).
+
+This is the "application facing" half of an access library: named, typed,
+table/array datasets addressed by a row coordinate system, independent of
+any storage-system assumption.  The unit of storage mapping is the
+*logical unit* (HDF5 chunk / ROOT basket / Parquet row group): a
+contiguous slab of rows.  ``core.partition`` maps logical units to
+objects; nothing in this module knows about objects or OSDs — that is the
+point of the paper's split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Column:
+    """A named, typed column.  ``shape`` is the per-row trailing shape —
+    e.g. a token-sequence table has Column("tokens", "int32", (4096,))."""
+
+    name: str
+    dtype: str
+    shape: tuple[int, ...] = ()
+
+    @property
+    def row_nbytes(self) -> int:
+        return int(np.dtype(self.dtype).itemsize * int(np.prod(self.shape, dtype=np.int64)) if self.shape else np.dtype(self.dtype).itemsize)
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "dtype": self.dtype,
+                "shape": list(self.shape)}
+
+    @staticmethod
+    def from_json(d: dict) -> "Column":
+        return Column(d["name"], d["dtype"], tuple(d["shape"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class RowRange:
+    """Half-open row interval [start, stop)."""
+
+    start: int
+    stop: int
+
+    def __post_init__(self):
+        if self.start < 0 or self.stop < self.start:
+            raise ValueError(f"bad RowRange [{self.start}, {self.stop})")
+
+    def __len__(self) -> int:
+        return self.stop - self.start
+
+    def intersect(self, other: "RowRange") -> "RowRange | None":
+        s, e = max(self.start, other.start), min(self.stop, other.stop)
+        return RowRange(s, e) if s < e else None
+
+    def shift(self, delta: int) -> "RowRange":
+        return RowRange(self.start + delta, self.stop + delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalDataset:
+    """A table of ``n_rows`` rows split into logical units of
+    ``unit_rows`` rows (last unit may be short)."""
+
+    name: str
+    columns: tuple[Column, ...]
+    n_rows: int
+    unit_rows: int
+
+    def __post_init__(self):
+        if self.unit_rows <= 0:
+            raise ValueError("unit_rows must be positive")
+        names = [c.name for c in self.columns]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate column names: {names}")
+
+    # ------------------------------------------------------------ columns
+    def column(self, name: str) -> Column:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.name}: no column {name!r}")
+
+    @property
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.columns)
+
+    @property
+    def row_nbytes(self) -> int:
+        return sum(c.row_nbytes for c in self.columns)
+
+    # ------------------------------------------------------------ units
+    @property
+    def n_units(self) -> int:
+        return max(1, -(-self.n_rows // self.unit_rows))
+
+    def unit_range(self, unit_id: int) -> RowRange:
+        if not 0 <= unit_id < self.n_units:
+            raise IndexError(unit_id)
+        start = unit_id * self.unit_rows
+        return RowRange(start, min(start + self.unit_rows, self.n_rows))
+
+    def unit_nbytes(self, unit_id: int) -> int:
+        return len(self.unit_range(unit_id)) * self.row_nbytes
+
+    def units_overlapping(self, rows: RowRange) -> range:
+        """Unit ids whose ranges intersect ``rows``."""
+        rows = RowRange(max(rows.start, 0), min(rows.stop, self.n_rows))
+        if len(rows) == 0:
+            return range(0)
+        return range(rows.start // self.unit_rows,
+                     (rows.stop - 1) // self.unit_rows + 1)
+
+    # ------------------------------------------------------------ (de)ser
+    def to_json(self) -> dict:
+        return {"name": self.name,
+                "columns": [c.to_json() for c in self.columns],
+                "n_rows": self.n_rows, "unit_rows": self.unit_rows}
+
+    @staticmethod
+    def from_json(d: dict) -> "LogicalDataset":
+        return LogicalDataset(
+            d["name"], tuple(Column.from_json(c) for c in d["columns"]),
+            d["n_rows"], d["unit_rows"])
+
+
+def validate_table(ds: LogicalDataset,
+                   table: Mapping[str, np.ndarray],
+                   rows: RowRange | None = None) -> None:
+    """Check a concrete column dict against the dataset schema."""
+    n = len(rows) if rows is not None else ds.n_rows
+    for c in ds.columns:
+        if c.name not in table:
+            raise KeyError(f"missing column {c.name!r}")
+        a = table[c.name]
+        want = (n, *c.shape)
+        if tuple(a.shape) != want:
+            raise ValueError(f"{c.name}: shape {a.shape} != {want}")
+        if a.dtype != np.dtype(c.dtype):
+            raise TypeError(f"{c.name}: dtype {a.dtype} != {c.dtype}")
+
+
+def concat_tables(parts: Sequence[Mapping[str, np.ndarray]]) -> dict:
+    if not parts:
+        return {}
+    keys = parts[0].keys()
+    return {k: np.concatenate([np.asarray(p[k]) for p in parts], axis=0)
+            for k in keys}

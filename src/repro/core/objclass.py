@@ -1,0 +1,294 @@
+"""Storage-side operation registry — Ceph object classes / SkyhookDM
+extensions (paper §2 goal 2, §4.2).
+
+An ``ObjOp`` is a named operation executed *inside* an OSD against one
+object's block.  A pipeline ``[select, filter, project, agg]`` runs
+server-side and only the (usually much smaller) result crosses the wire.
+
+Composability (paper §3.2) is explicit: every op declares whether it is
+*decomposable* — i.e. per-object partials exist with an associative
+``combine`` — or *holistic* (median & friends), which forces a gather of
+its input to the client unless an approximate decomposable form is
+accepted (we provide a P² quantile estimator as that approximation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import numpy as np
+
+from repro.core import format as fmt
+
+_PRED = {
+    "<": np.less, "<=": np.less_equal, ">": np.greater,
+    ">=": np.greater_equal, "==": np.equal, "!=": np.not_equal,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjOp:
+    """One pipeline stage: ``op(name, **params)``."""
+
+    name: str
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "params": dict(self.params)}
+
+    @staticmethod
+    def from_json(d: dict) -> "ObjOp":
+        return ObjOp(d["name"], d.get("params", {}))
+
+
+def op(name: str, **params: Any) -> ObjOp:
+    return ObjOp(name, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpImpl:
+    local: Callable[..., Any]              # table -> table | partial
+    combine: Callable[[list], Any] | None  # partials -> result (if decomp.)
+    decomposable: bool
+    table_in: bool = True                  # consumes a table (vs a partial)
+    table_out: bool = True                 # emits a table (vs a partial)
+
+
+_REGISTRY: dict[str, OpImpl] = {}
+
+
+def register(name: str, impl: OpImpl) -> None:
+    if name in _REGISTRY:
+        raise KeyError(f"op {name!r} already registered")
+    _REGISTRY[name] = impl
+
+
+def get_impl(name: str) -> OpImpl:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown objclass op {name!r}; "
+                       f"known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def registered_ops() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------------
+# built-in ops (tables are dict[str, np.ndarray])
+# --------------------------------------------------------------------------
+
+
+def _select(table, rows: tuple[int, int]):
+    s, e = rows
+    return {k: v[s:e] for k, v in table.items()}
+
+
+def _project(table, cols: list[str]):
+    missing = [c for c in cols if c not in table]
+    if missing:
+        raise KeyError(f"project: missing {missing}")
+    return {c: table[c] for c in cols}
+
+
+def _filter(table, col: str, cmp: str, value):
+    mask = _PRED[cmp](table[col], value)
+    flat = mask if mask.ndim == 1 else mask.any(
+        axis=tuple(range(1, mask.ndim)))
+    return {k: v[flat] for k, v in table.items()}
+
+
+# ---- decomposable aggregates: partial = dict of ndarrays ----
+
+
+def _agg_local(table, col: str, fn: str):
+    a = np.asarray(table[col], dtype=np.float64).ravel()
+    if fn == "count":
+        return {"count": np.float64(a.size)}
+    if a.size == 0:  # identity partials
+        if fn == "mean":
+            return {"sum": np.float64(0.0), "count": np.float64(0)}
+        ident = {"sum": 0.0, "min": np.inf, "max": -np.inf}
+        return {fn: np.float64(ident[fn])}
+    if fn == "sum":
+        return {"sum": a.sum()}
+    if fn == "min":
+        return {"min": a.min()}
+    if fn == "max":
+        return {"max": a.max()}
+    if fn == "mean":
+        return {"sum": a.sum(), "count": np.float64(a.size)}
+    raise ValueError(fn)
+
+
+def _agg_combine(partials: list, fn: str, **_):
+    if not partials:  # everything pruned/filtered: identity element
+        return {"sum": 0.0, "count": 0.0, "min": float("inf"),
+                "max": float("-inf"), "mean": 0.0}[fn]
+    if fn == "sum":
+        return float(sum(p["sum"] for p in partials))
+    if fn == "count":
+        return float(sum(p["count"] for p in partials))
+    if fn == "min":
+        return float(min(p["min"] for p in partials))
+    if fn == "max":
+        return float(max(p["max"] for p in partials))
+    if fn == "mean":
+        c = sum(p["count"] for p in partials)
+        return float(sum(p["sum"] for p in partials) / max(c, 1.0))
+    raise ValueError(fn)
+
+
+# ---- holistic: exact median (NOT decomposable) ----
+
+
+def _median_local(table, col: str):
+    # the "local" part of a holistic op can only project its input column
+    return {col: np.asarray(table[col]).ravel()}
+
+
+def median_exact(columns: list[dict], col: str) -> float:
+    allv = np.concatenate([p[col] for p in columns]) if columns else \
+        np.zeros((0,))
+    return float(np.median(allv)) if allv.size else float("nan")
+
+
+# ---- decomposable approximation: fixed-bin quantile sketch ----
+
+
+def _qsketch_local(table, col: str, lo: float, hi: float, bins: int = 1024):
+    a = np.asarray(table[col], dtype=np.float64).ravel()
+    hist, _ = np.histogram(a, bins=bins, range=(lo, hi))
+    return {"hist": hist.astype(np.int32), "lo": lo, "hi": hi,
+            "n": np.int64(a.size)}
+
+
+def _qsketch_combine(partials: list, q: float = 0.5, **_):
+    if not partials:
+        return float("nan")
+    hist = np.sum([p["hist"] for p in partials], axis=0)
+    n = int(sum(int(p["n"]) for p in partials))
+    lo, hi = partials[0]["lo"], partials[0]["hi"]
+    if n == 0:
+        return float("nan")
+    cum = np.cumsum(hist)
+    idx = int(np.searchsorted(cum, q * n))
+    idx = min(idx, len(hist) - 1)
+    edges = np.linspace(lo, hi, len(hist) + 1)
+    return float(0.5 * (edges[idx] + edges[idx + 1]))
+
+
+# ---- codecs as ops (paper's `compress` offload) ----
+
+
+def _recompress(table, codecs: Mapping[str, str]):
+    # physical transformation executed storage-side; returns a table
+    # (the LocalVOL re-encodes with the new codecs on write-back)
+    return table
+
+
+register("select", OpImpl(_select, None, decomposable=True))
+register("project", OpImpl(_project, None, decomposable=True))
+register("filter", OpImpl(_filter, None, decomposable=True))
+register("agg", OpImpl(
+    _agg_local, _agg_combine, decomposable=True, table_out=False))
+register("median", OpImpl(
+    _median_local, None, decomposable=False, table_out=False))
+register("quantile_sketch", OpImpl(
+    _qsketch_local, _qsketch_combine, decomposable=True, table_out=False))
+register("recompress", OpImpl(_recompress, None, decomposable=True))
+
+
+# ---- zero-decode packed-row select (server-local optimization, §3.3) ----
+
+
+def select_packed(blob: bytes, rows: tuple[int, int], col: str) -> dict:
+    """Slice whole rows out of a planar-bitpacked column WITHOUT decoding.
+
+    Works because each row of a (S,)-shaped int column with S % 32 == 0
+    occupies exactly S/32 word-groups: the OSD can serve a row range as a
+    contiguous word slice.  The client (or the TPU shard) does the unpack
+    — this is the storage-side `compress` offload staying compressed all
+    the way down the wire and into HBM.
+    """
+    header = fmt.block_header(blob)
+    if header["layout"] != "col":
+        raise ValueError("select_packed needs col layout")
+    import struct as _struct
+    (hlen,) = _struct.unpack("<I", blob[4:8])
+    off = 8 + hlen
+    for c, blen in zip(header["columns"], header["lens"]):
+        if c["name"] == col:
+            if not c["codec"].startswith("bitpack"):
+                raise ValueError(f"{col} is not bitpacked ({c['codec']})")
+            bits = int(c["codec"][len("bitpack"):])
+            shape = c["shape"]
+            if len(shape) != 2 or shape[1] % 32:
+                raise ValueError(f"need (n_rows, S%32==0), got {shape}")
+            n_rows, S = shape
+            gpr = S // 32                       # word-groups per row
+            words = np.frombuffer(
+                blob, np.uint32, count=n_rows * gpr * bits,
+                offset=off).reshape(n_rows, gpr, bits)
+            s, e = rows
+            return {"packed": words[s:e].copy(),
+                    "bits": np.int64(bits), "seq_len": np.int64(S)}
+        off += blen
+    raise KeyError(col)
+
+
+register("select_packed", OpImpl(
+    lambda *a, **k: None, None, decomposable=True, table_out=False))
+
+
+# --------------------------------------------------------------------------
+# pipeline execution (runs ON the OSD — see core.store)
+# --------------------------------------------------------------------------
+
+
+def pipeline_decomposable(ops: list[ObjOp]) -> bool:
+    return all(get_impl(o.name).decomposable for o in ops)
+
+
+def run_pipeline(blob: bytes, ops: list[ObjOp]) -> Any:
+    """Execute a pipeline against one object's block, server-side.
+
+    Returns either an encoded table block (table-out pipelines) or a
+    partial (dict of small ndarrays) for aggregate tails.  Projection is
+    pushed into block decoding so unneeded columns are never materialized
+    (col layout).
+    """
+    if ops and ops[0].name == "select_packed":
+        if len(ops) != 1:
+            raise ValueError("select_packed must be the only op")
+        return select_packed(blob, **ops[0].params)
+    cols = None
+    for o in ops:
+        if o.name == "project":
+            cols = list(o.params["cols"])
+            break
+        if o.name in ("filter", "agg", "median", "quantile_sketch"):
+            break  # needs the filter/agg columns too: decode all
+    table = fmt.decode_block(blob, columns=cols)
+    out: Any = table
+    for o in ops:
+        impl = get_impl(o.name)
+        if not impl.table_in and not isinstance(out, dict):
+            raise TypeError(f"{o.name}: pipeline type mismatch")
+        out = impl.local(out, **o.params)
+        if not impl.table_out:
+            return out  # partial; must be the last op
+    return fmt.encode_block(out)
+
+
+def combine_partials(ops: list[ObjOp], partials: list) -> Any:
+    """Client/driver-side combine for the pipeline's terminal op."""
+    tail = ops[-1]
+    impl = get_impl(tail.name)
+    if impl.table_out:
+        raise ValueError("pipeline ends in a table; use concat instead")
+    if impl.combine is None:
+        raise ValueError(f"{tail.name} is holistic — no combine; gather "
+                         "its projected inputs and compute centrally")
+    return impl.combine(partials, **tail.params)

@@ -1,0 +1,179 @@
+"""Dataset -> object partitioning (paper §3.1 and §5 'future work' item 1).
+
+Maps logical units to objects of *proper sizes*:
+
+  * grouping: contiguous small units are packed into one object until the
+    target object size is reached (amortizes per-object metadata);
+  * splitting: units larger than ``max_object_bytes`` are split into
+    row sub-ranges across several objects (bounded object size);
+  * co-location: grouping is contiguous in row order, so rows that are
+    accessed together (same logical neighborhood) land in the same object
+    — and an optional ``colocate_rows`` quantum forbids groups from
+    crossing that boundary (e.g. training-batch stripes);
+  * minimum metadata: the resulting ObjectMap stores only the row
+    boundaries and object names — O(n_objects), independent of n_rows.
+
+The ObjectMap is itself serializable and is stored in the object store as
+``<dataset>/.objmap`` so any client can bootstrap from the store alone.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import json
+from typing import Iterator
+
+from repro.core.logical import LogicalDataset, RowRange
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPolicy:
+    target_object_bytes: int = 8 << 20     # Ceph-typical 4-32 MiB sweet spot
+    max_object_bytes: int = 64 << 20       # RADOS-style hard cap
+    colocate_rows: int = 0                 # group boundary quantum (0 = none)
+
+    def __post_init__(self):
+        if self.target_object_bytes <= 0:
+            raise ValueError("target_object_bytes must be positive")
+        if self.max_object_bytes < self.target_object_bytes:
+            raise ValueError("max < target object bytes")
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectExtent:
+    """One object's slice of the dataset: rows [row_start, row_stop)."""
+
+    name: str
+    row_start: int
+    row_stop: int
+
+    @property
+    def rows(self) -> RowRange:
+        return RowRange(self.row_start, self.row_stop)
+
+    def __len__(self) -> int:
+        return self.row_stop - self.row_start
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectMap:
+    """Row-boundary index: object i covers [starts[i], starts[i+1])."""
+
+    dataset: LogicalDataset
+    extents: tuple[ObjectExtent, ...]
+
+    def __post_init__(self):
+        prev = 0
+        for e in self.extents:
+            if e.row_start != prev:
+                raise ValueError(f"gap/overlap at row {prev} ({e})")
+            prev = e.row_stop
+        if self.extents and prev != self.dataset.n_rows:
+            raise ValueError(f"coverage ends at {prev} != "
+                             f"{self.dataset.n_rows}")
+
+    # ------------------------------------------------------------ lookup
+    @property
+    def n_objects(self) -> int:
+        return len(self.extents)
+
+    def lookup(self, rows: RowRange) -> list[tuple[ObjectExtent, RowRange]]:
+        """Objects intersecting ``rows`` + the intersection *local* to the
+        object (row 0 = object's first row)."""
+        rows = RowRange(max(0, rows.start),
+                        min(rows.stop, self.dataset.n_rows))
+        if len(rows) == 0:
+            return []
+        starts = [e.row_start for e in self.extents]
+        i = bisect.bisect_right(starts, rows.start) - 1
+        out = []
+        while i < len(self.extents) and self.extents[i].row_start < rows.stop:
+            e = self.extents[i]
+            inter = e.rows.intersect(rows)
+            if inter is not None:
+                out.append((e, inter.shift(-e.row_start)))
+            i += 1
+        return out
+
+    def object_names(self) -> list[str]:
+        return [e.name for e in self.extents]
+
+    def __iter__(self) -> Iterator[ObjectExtent]:
+        return iter(self.extents)
+
+    # ------------------------------------------------------------ (de)ser
+    def to_json(self) -> dict:
+        return {"dataset": self.dataset.to_json(),
+                "extents": [[e.name, e.row_start, e.row_stop]
+                            for e in self.extents]}
+
+    @staticmethod
+    def from_json(d: dict) -> "ObjectMap":
+        return ObjectMap(
+            LogicalDataset.from_json(d["dataset"]),
+            tuple(ObjectExtent(n, a, b) for n, a, b in d["extents"]))
+
+    def to_bytes(self) -> bytes:
+        return json.dumps(self.to_json()).encode()
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "ObjectMap":
+        return ObjectMap.from_json(json.loads(b.decode()))
+
+
+def objmap_key(dataset_name: str) -> str:
+    return f"{dataset_name}/.objmap"
+
+
+# --------------------------------------------------------------------------
+# planner
+# --------------------------------------------------------------------------
+
+
+def plan_partition(ds: LogicalDataset,
+                   policy: PartitionPolicy = PartitionPolicy()) -> ObjectMap:
+    """Group/split logical units into object extents under the policy."""
+    rb = ds.row_nbytes
+    if rb <= 0:
+        raise ValueError("zero-byte rows")
+    target_rows = max(1, policy.target_object_bytes // rb)
+    max_rows = max(1, policy.max_object_bytes // rb)
+
+    extents: list[ObjectExtent] = []
+
+    def emit(start: int, stop: int) -> None:
+        extents.append(ObjectExtent(
+            f"{ds.name}/obj.{len(extents):06d}", start, stop))
+
+    row = 0
+    acc_start = row
+    for uid in range(ds.n_units):
+        ur = ds.unit_range(uid)
+        # unit bigger than max object: flush accumulator, split the unit
+        if len(ur) > max_rows:
+            if ur.start > acc_start:
+                emit(acc_start, ur.start)
+            s = ur.start
+            while s < ur.stop:
+                e = min(s + max_rows, ur.stop)
+                emit(s, e)
+                s = e
+            acc_start = ur.stop
+            continue
+        # group boundary (co-location quantum): never straddle it
+        if policy.colocate_rows:
+            q = policy.colocate_rows
+            if (ur.stop - 1) // q != acc_start // q and ur.start > acc_start:
+                emit(acc_start, ur.start)
+                acc_start = ur.start
+        # grouping: flush when adding this unit would exceed target
+        if (ur.stop - acc_start) * rb > policy.target_object_bytes \
+                and ur.start > acc_start:
+            emit(acc_start, ur.start)
+            acc_start = ur.start
+    if acc_start < ds.n_rows:
+        emit(acc_start, ds.n_rows)
+    if not extents and ds.n_rows == 0:
+        emit(0, 0)
+    return ObjectMap(ds, tuple(extents))

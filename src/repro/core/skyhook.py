@@ -1,0 +1,198 @@
+"""SkyhookDM-style driver/worker query engine (paper §4.2, Fig. 3/4).
+
+Workflow (Fig. 4): client submits a Query -> the Driver generates object
+names + sub-queries -> Workers (the Dask-worker stand-ins) forward
+sub-queries to the storage extensions (``store.exec``), post-process
+partials if needed, and return them -> the Driver aggregates and answers.
+
+The Driver/Worker split matters beyond parallelism: workers can run
+*non-pushdownable* post-processing near the storage tier (e.g. the final
+combine of an approximate quantile), which is exactly the paper's
+"Workers could further conduct some complicated computations against the
+results returned by Skyhook-Extensions".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any
+
+import numpy as np
+
+from repro.core import format as fmt
+from repro.core import objclass as oc
+from repro.core.logical import concat_tables
+from repro.core.partition import ObjectMap
+from repro.core.store import ObjectStore
+from repro.core.vol import GlobalVOL
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """A declarative query against one mapped dataset."""
+
+    dataset: str
+    filter: tuple | None = None            # (col, cmp, value)
+    projection: tuple[str, ...] | None = None
+    aggregate: tuple | None = None         # (fn, col); fn may be "median"
+    allow_approx: bool = False
+
+    def pipeline(self) -> list[oc.ObjOp]:
+        ops: list[oc.ObjOp] = []
+        if self.filter:
+            col, cmp, value = self.filter
+            ops.append(oc.op("filter", col=col, cmp=cmp, value=value))
+        if self.projection:
+            ops.append(oc.op("project", cols=list(self.projection)))
+        if self.aggregate:
+            fn, col = self.aggregate
+            if fn == "median":
+                ops.append(oc.op("median", col=col))
+            else:
+                ops.append(oc.op("agg", col=col, fn=fn))
+        return ops
+
+
+@dataclasses.dataclass
+class QueryStats:
+    wall_s: float
+    objects_touched: int
+    objects_pruned: int
+    client_rx_bytes: int
+    storage_local_bytes: int
+    pushdown: bool
+    result_rows: int | None = None
+
+    @property
+    def selectivity_gain(self) -> float:
+        """How many storage-side bytes were scanned per byte returned."""
+        return self.storage_local_bytes / max(self.client_rx_bytes, 1)
+
+
+class SkyhookWorker:
+    """Executes sub-queries against a set of objects via the storage
+    extensions; optionally post-processes before returning partials."""
+
+    def __init__(self, store: ObjectStore, worker_id: int):
+        self.store = store
+        self.worker_id = worker_id
+
+    def run(self, names: list[str], ops: list[oc.ObjOp]) -> list[Any]:
+        return [self.store.exec(n, ops) for n in names]
+
+
+class SkyhookDriver:
+    """Schedules sub-queries over workers, combines partials."""
+
+    def __init__(self, vol: GlobalVOL, n_workers: int = 4):
+        self.vol = vol
+        self.store = vol.store
+        self.workers = [SkyhookWorker(self.store, i)
+                        for i in range(n_workers)]
+
+    # ------------------------------------------------------------ execute
+    def execute(self, q: Query) -> tuple[Any, QueryStats]:
+        omap = self.vol.open(q.dataset)
+        ops = q.pipeline()
+        t0 = time.perf_counter()
+        before = self.store.fabric.snapshot()
+        result, vstats = self._dispatch(omap, ops, q)
+        after = self.store.fabric.snapshot()
+        rows = None
+        if isinstance(result, dict) and result:
+            rows = len(next(iter(result.values())))
+        stats = QueryStats(
+            wall_s=time.perf_counter() - t0,
+            objects_touched=vstats["objects_touched"],
+            objects_pruned=vstats["objects_pruned"],
+            client_rx_bytes=after["client_rx"] - before["client_rx"],
+            storage_local_bytes=after["local_bytes"] - before["local_bytes"],
+            pushdown=vstats["pushdown"],
+            result_rows=rows,
+        )
+        return result, stats
+
+    def _dispatch(self, omap: ObjectMap, ops: list[oc.ObjOp],
+                  q: Query) -> tuple[Any, dict]:
+        """Shard object list over workers (Fig. 4's scheduler role), then
+        combine exactly as GlobalVOL.query would."""
+        plan = self.vol.plan(omap, ops)
+        names = [n for n, _ in plan.sub_requests]
+        shards = [names[i::len(self.workers)]
+                  for i in range(len(self.workers))]
+
+        rewritten = False
+        if ops and ops[-1].name == "median" and q.allow_approx:
+            col = ops[-1].params["col"]
+            lo, hi = self.vol._column_bounds(omap, col)
+            ops = ops[:-1] + [oc.op("quantile_sketch", col=col,
+                                    lo=lo, hi=hi)]
+            rewritten = True
+
+        tail = oc.get_impl(ops[-1].name) if ops else None
+        holistic = ops and not tail.table_out and tail.combine is None
+
+        if holistic:  # gather projected inputs through workers
+            col = ops[-1].params["col"]
+            sub_ops = [o for o in ops[:-1]] + [oc.op("project", cols=[col])]
+        else:
+            sub_ops = ops
+
+        with ThreadPoolExecutor(max_workers=len(self.workers)) as pool:
+            parts_nested = list(pool.map(
+                lambda wn: wn[0].run(wn[1], sub_ops),
+                zip(self.workers, shards)))
+        partials = [p for ps in parts_nested for p in ps]
+
+        if not ops or tail.table_out:
+            result = concat_tables([fmt.decode_block(b) for b in partials])
+        elif holistic:
+            col = ops[-1].params["col"]
+            tabs = [fmt.decode_block(b) for b in partials]
+            result = oc.median_exact(
+                [{col: t[col].ravel()} for t in tabs], col)
+        else:
+            result = oc.combine_partials(ops, partials)
+
+        return result, {"objects_touched": len(names),
+                        "objects_pruned": len(plan.pruned),
+                        "pushdown": plan.pushdown and not holistic,
+                        "approx_rewrite": rewritten}
+
+    # ------------------------------------------------------------ baseline
+    def execute_client_side(self, q: Query) -> tuple[Any, QueryStats]:
+        """The no-pushdown baseline: fetch every (non-pruned) object's full
+        bytes to the client and evaluate the pipeline locally."""
+        omap = self.vol.open(q.dataset)
+        ops = q.pipeline()
+        t0 = time.perf_counter()
+        before = self.store.fabric.snapshot()
+        tables = []
+        for extent in omap:
+            blob = self.store.get(extent.name)
+            tables.append(fmt.decode_block(blob))
+        table = concat_tables(tables)
+        result: Any = table
+        for o in ops:
+            impl = oc.get_impl(o.name)
+            if o.name == "median":
+                result = float(np.median(np.asarray(
+                    result[o.params["col"]]).ravel()))
+            elif not impl.table_out:
+                result = impl.combine([impl.local(result, **o.params)],
+                                      **o.params)
+            else:
+                result = impl.local(result, **o.params)
+        after = self.store.fabric.snapshot()
+        rows = None
+        if isinstance(result, dict) and result:
+            rows = len(next(iter(result.values())))
+        stats = QueryStats(
+            wall_s=time.perf_counter() - t0,
+            objects_touched=omap.n_objects, objects_pruned=0,
+            client_rx_bytes=after["client_rx"] - before["client_rx"],
+            storage_local_bytes=after["local_bytes"] - before["local_bytes"],
+            pushdown=False, result_rows=rows)
+        return result, stats

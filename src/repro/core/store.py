@@ -1,0 +1,305 @@
+"""RADOS-like distributed object store (simulated control plane).
+
+OSDs are in-process shards with byte-accurate transfer accounting; the
+semantics — primary/replica writes, objclass execution on the primary,
+failure, peering/recovery — follow Ceph.  The accounting (client<->OSD
+bytes vs OSD-local bytes processed) is what the paper's pushdown claims
+are measured against in ``benchmarks/``.
+
+Failure model: ``fail_osd`` marks an OSD down (its data is *gone*, as a
+disk loss); ``recover`` re-replicates every object that lost a replica
+from a surviving copy, on the new cluster map.  Reads and objclass execs
+transparently fail over to the next replica in the acting set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Iterable
+
+from repro.core.objclass import ObjOp, run_pipeline
+from repro.core.placement import ClusterMap, pg_delta
+
+
+@dataclasses.dataclass
+class Fabric:
+    """Byte/op counters for the client<->storage network."""
+
+    client_tx: int = 0          # client -> OSD (writes)
+    client_rx: int = 0          # OSD -> client (reads / results)
+    replica_bytes: int = 0      # OSD -> OSD primary-copy fan-out
+    recovery_bytes: int = 0     # OSD -> OSD re-replication
+    local_bytes: int = 0        # bytes processed inside OSDs (pushdown)
+    ops: int = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def reset(self) -> None:
+        self.client_tx = self.client_rx = 0
+        self.replica_bytes = self.recovery_bytes = 0
+        self.local_bytes = self.ops = 0
+
+
+class OSDDown(RuntimeError):
+    pass
+
+
+class ObjectNotFound(KeyError):
+    pass
+
+
+class OSD:
+    """One storage server: object data + xattrs + a local op executor.
+
+    ``latency_s`` simulates slow media / stragglers (used by the hedged-
+    read tests); ``disk_bw`` (bytes/s, None = instant) serializes write
+    cost per OSD — parallel writers to different OSDs overlap, writers to
+    the same OSD queue, which is what makes paper-Table-1-style scaling
+    measurable in-process.
+    """
+
+    def __init__(self, osd_id: str, disk_bw: float | None = None):
+        self.osd_id = osd_id
+        self.data: dict[str, bytes] = {}
+        self.xattrs: dict[str, dict] = {}
+        self.latency_s: float = 0.0
+        self.disk_bw = disk_bw
+        self.lock = threading.Lock()
+
+    # -- local primitives (called by ObjectStore only) --
+    def put(self, name: str, blob: bytes, xattr: dict | None = None) -> None:
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        with self.lock:
+            if self.disk_bw:
+                time.sleep(len(blob) / self.disk_bw)  # serial disk
+            self.data[name] = bytes(blob)
+            if xattr is not None:
+                self.xattrs[name] = dict(xattr)
+
+    def get(self, name: str) -> bytes:
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        with self.lock:
+            if name not in self.data:
+                raise ObjectNotFound(name)
+            return self.data[name]
+
+    def exec_cls(self, name: str, ops: list[ObjOp]) -> Any:
+        """Run an objclass pipeline against a local object (SkyhookDM
+        extension / custom read method)."""
+        blob = self.get(name)
+        return run_pipeline(blob, ops), len(blob)
+
+    def nbytes(self) -> int:
+        with self.lock:
+            return sum(len(b) for b in self.data.values())
+
+    def object_names(self) -> set[str]:
+        with self.lock:
+            return set(self.data)
+
+
+class ObjectStore:
+    """The cluster: cluster map + OSD daemons + client entry points.
+
+    ``client_bw`` (bytes/s, None = instant) models the client's shared
+    NIC: all client<->OSD transfers serialize through one link, so
+    parallel writers amortize OSD work but not the forwarding hop — the
+    paper's Table-1 structure.
+    """
+
+    def __init__(self, cluster: ClusterMap, *,
+                 client_bw: float | None = None,
+                 disk_bw: float | None = None):
+        self.cluster = cluster
+        self.client_bw = client_bw
+        self.disk_bw = disk_bw
+        self.osds: dict[str, OSD] = {o: OSD(o, disk_bw)
+                                     for o in cluster.osds}
+        self.fabric = Fabric()
+        self._lock = threading.Lock()
+        self._nic = threading.Lock()
+
+    def _client_xfer(self, nbytes: int) -> None:
+        if self.client_bw:
+            with self._nic:  # one NIC: transfers serialize
+                time.sleep(nbytes / self.client_bw)
+
+    # ------------------------------------------------------------ helpers
+    def _acting(self, name: str) -> tuple[str, ...]:
+        s = self.cluster.locate(name)
+        if not s:
+            raise OSDDown("no up OSDs for " + name)
+        return s
+
+    def _osd(self, osd_id: str) -> OSD:
+        if osd_id in self.cluster.down:
+            raise OSDDown(osd_id)
+        return self.osds[osd_id]
+
+    # ------------------------------------------------------------ client IO
+    def put(self, name: str, blob: bytes, xattr: dict | None = None) -> None:
+        """Replicated write: client -> primary -> (fan-out) replicas.
+        Client pays one transfer; replica fan-out is server-side, matching
+        Ceph's primary-copy replication."""
+        acting = self._acting(name)
+        self.fabric.client_tx += len(blob)
+        self.fabric.ops += 1
+        self._client_xfer(len(blob))
+        for i, osd_id in enumerate(acting):
+            self._osd(osd_id).put(name, blob, xattr)
+            if i > 0:  # replica fan-out is OSD->OSD (cluster network),
+                self.fabric.replica_bytes += len(blob)  # not client bytes
+
+    def get(self, name: str) -> bytes:
+        """Read from the primary, failing over down the acting set."""
+        err: Exception | None = None
+        for osd_id in self._acting(name):
+            try:
+                blob = self._osd(osd_id).get(name)
+                self.fabric.client_rx += len(blob)
+                self.fabric.ops += 1
+                self._client_xfer(len(blob))
+                return blob
+            except (OSDDown, ObjectNotFound) as e:  # failover
+                err = e
+        raise err if err else ObjectNotFound(name)
+
+    def get_hedged(self, name: str, timeout_s: float) -> bytes:
+        """Hedged read (straggler mitigation): fire the primary, and if it
+        does not answer within ``timeout_s``, race a replica."""
+        acting = self._acting(name)
+        if len(acting) == 1:
+            return self.get(name)
+        pool = ThreadPoolExecutor(max_workers=1)
+        fut = pool.submit(self._osd(acting[0]).get, name)
+        try:
+            blob = fut.result(timeout=timeout_s)
+        except Exception:
+            blob = self._osd(acting[1]).get(name)
+        finally:
+            pool.shutdown(wait=False)  # don't block on the straggler
+        self.fabric.client_rx += len(blob)
+        self.fabric.ops += 1
+        return blob
+
+    def exec(self, name: str, ops: list[ObjOp]) -> Any:
+        """Execute an objclass pipeline ON the object's primary OSD and
+        return only the result — the pushdown path.  Only the result size
+        crosses the client<->storage fabric."""
+        err: Exception | None = None
+        for osd_id in self._acting(name):
+            try:
+                result, scanned = self._osd(osd_id).exec_cls(name, ops)
+                self.fabric.local_bytes += scanned
+                self.fabric.client_rx += _result_nbytes(result)
+                self.fabric.ops += 1
+                return result
+            except (OSDDown, ObjectNotFound) as e:
+                err = e
+        raise err if err else ObjectNotFound(name)
+
+    def exec_many(self, names: Iterable[str], ops: list[ObjOp],
+                  workers: int = 8) -> list[Any]:
+        names = list(names)
+        with ThreadPoolExecutor(max_workers=max(1, workers)) as pool:
+            return list(pool.map(lambda n: self.exec(n, ops), names))
+
+    def delete(self, name: str) -> None:
+        for osd_id in self.cluster.up_osds:
+            osd = self.osds[osd_id]
+            with osd.lock:
+                osd.data.pop(name, None)
+                osd.xattrs.pop(name, None)
+
+    def exists(self, name: str) -> bool:
+        return any(name in self.osds[o].data for o in self.cluster.up_osds)
+
+    def list_objects(self, prefix: str = "") -> list[str]:
+        seen: set[str] = set()
+        for o in self.cluster.up_osds:
+            seen |= {n for n in self.osds[o].object_names()
+                     if n.startswith(prefix)}
+        return sorted(seen)
+
+    def xattr(self, name: str) -> dict:
+        for osd_id in self._acting(name):
+            osd = self.osds[osd_id]
+            if name in osd.xattrs:
+                return osd.xattrs[name]
+        return {}
+
+    # ------------------------------------------------------------ failures
+    def fail_osd(self, osd_id: str) -> None:
+        """Disk loss: data gone, OSD marked down, epoch bumped."""
+        old = self.cluster
+        self.cluster = old.mark_down(osd_id)
+        self.osds[osd_id] = OSD(osd_id, self.disk_bw)  # data destroyed
+
+    def add_osds(self, ids: Iterable[str]) -> None:
+        ids = list(ids)
+        self.cluster = self.cluster.add_osds(ids)
+        for i in ids:
+            self.osds[i] = OSD(i, self.disk_bw)
+
+    def recover(self, old_map: ClusterMap | None = None) -> dict:
+        """Peering: for every object, ensure each OSD in the (new) acting
+        set holds a copy, sourcing from any surviving replica.  Returns
+        recovery stats.  Runs after fail_osd/add_osds."""
+        moved = missing = 0
+        for name in self.list_objects():
+            acting = self._acting(name)
+            src_blob = None
+            src_xattr: dict = {}
+            for osd_id in self.cluster.up_osds:
+                osd = self.osds[osd_id]
+                if name in osd.data:
+                    src_blob = osd.data[name]
+                    src_xattr = osd.xattrs.get(name, {})
+                    break
+            if src_blob is None:
+                missing += 1  # all replicas lost (over-failure)
+                continue
+            for osd_id in acting:
+                osd = self._osd(osd_id)
+                if name not in osd.data:
+                    osd.put(name, src_blob, src_xattr)
+                    self.fabric.recovery_bytes += len(src_blob)
+                    moved += 1
+        return {"objects_moved": moved, "objects_lost": missing,
+                "epoch": self.cluster.epoch}
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        return {
+            "fabric": self.fabric.snapshot(),
+            "epoch": self.cluster.epoch,
+            "osd_bytes": {o: self.osds[o].nbytes()
+                          for o in self.cluster.osds},
+            "n_objects": len(self.list_objects()),
+        }
+
+
+def _result_nbytes(result: Any) -> int:
+    if isinstance(result, (bytes, bytearray)):
+        return len(result)
+    if isinstance(result, dict):
+        import numpy as np
+        n = 0
+        for v in result.values():
+            n += np.asarray(v).nbytes
+        return n
+    return 64  # scalar-ish
+
+
+def make_store(n_osds: int, *, replicas: int = 3, n_pgs: int = 128,
+               prefix: str = "osd", client_bw: float | None = None,
+               disk_bw: float | None = None) -> ObjectStore:
+    cm = ClusterMap(tuple(f"{prefix}.{i}" for i in range(n_osds)),
+                    n_pgs=n_pgs, replicas=min(replicas, n_osds))
+    return ObjectStore(cm, client_bw=client_bw, disk_bw=disk_bw)

@@ -1,0 +1,268 @@
+"""The two-plugin VOL architecture (paper §4.1, Fig. 2).
+
+``GlobalVOL`` is the client-side plugin: it intercepts dataset-level
+calls (create/write/read/query), decomposes them into per-object
+sub-requests using the ObjectMap, scatter/gathers against the store, and
+performs *global* optimizations (object pruning via zone maps, parallel
+dispatch, decomposable-op pushdown planning).
+
+``LocalVOL`` is the storage-side plugin: it decides the *physical*
+representation of each object (layout row/col, per-column codec) from
+local information, executes objclass pipelines, and adapts layout to the
+observed workload ("physical design management", paper §5) — all without
+the client or the access library knowing (independent evolution, goal 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core import format as fmt
+from repro.core import objclass as oc
+from repro.core.logical import (
+    LogicalDataset, RowRange, concat_tables, validate_table)
+from repro.core.partition import (
+    ObjectMap, PartitionPolicy, objmap_key, plan_partition)
+from repro.core.store import ObjectStore
+
+
+# --------------------------------------------------------------------------
+# LocalVOL — storage-side physical design
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LocalVOL:
+    """Per-deployment physical design policy.
+
+    ``codec_for`` picks a per-column codec from the column's value range —
+    e.g. token ids bitpack to ceil(log2(vocab)) bits (2-3x over int32).
+    ``access_stats`` counts column-scan vs row-fetch requests; when scans
+    dominate, stored row-layout objects are transformed to columnar
+    (online physical design transformation).
+    """
+
+    default_layout: str = "col"
+    bitpack_ints: bool = True
+    scan_to_row_threshold: float = 0.75
+    access_stats: dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"scan": 0, "fetch": 0})
+
+    def codecs_for(self, table: Mapping[str, np.ndarray]) -> dict[str, str]:
+        out = {}
+        for k, a in table.items():
+            a = np.asarray(a)
+            if (self.bitpack_ints and np.issubdtype(a.dtype, np.integer)
+                    and a.size and int(a.min()) >= 0):
+                bits = fmt.bitpack_width(int(a.max()))
+                if bits <= 24:  # else bitpack loses to raw int32
+                    out[k] = f"bitpack{bits}"
+        return out
+
+    def encode(self, table: Mapping[str, np.ndarray]) -> bytes:
+        layout = self.default_layout
+        codecs = self.codecs_for(table) if layout == "col" else {}
+        return fmt.encode_block(table, layout=layout, codecs=codecs)
+
+    def note_access(self, kind: str) -> None:
+        self.access_stats[kind] = self.access_stats.get(kind, 0) + 1
+
+    def preferred_layout(self) -> str:
+        s, f = self.access_stats["scan"], self.access_stats["fetch"]
+        if s + f == 0:
+            return self.default_layout
+        return "col" if s / (s + f) >= (1 - self.scan_to_row_threshold) \
+            else "row"
+
+
+# --------------------------------------------------------------------------
+# GlobalVOL — client-side decompose / scatter / gather
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadPlan:
+    """The decomposition of one logical request into object sub-requests."""
+
+    sub_requests: tuple            # ((obj_name, local RowRange), ...)
+    pruned: tuple                  # object names skipped via zone maps
+    pushdown: bool                 # ops run storage-side?
+
+
+class GlobalVOL:
+    def __init__(self, store: ObjectStore, *,
+                 local: LocalVOL | None = None, workers: int = 8):
+        self.store = store
+        self.local = local or LocalVOL()
+        self.workers = workers
+
+    # ------------------------------------------------------------ create
+    def create(self, ds: LogicalDataset,
+               policy: PartitionPolicy = PartitionPolicy()) -> ObjectMap:
+        """Plan the dataset->object mapping and persist it to the store."""
+        omap = plan_partition(ds, policy)
+        self.store.put(objmap_key(ds.name), omap.to_bytes())
+        return omap
+
+    def open(self, dataset_name: str) -> ObjectMap:
+        return ObjectMap.from_bytes(self.store.get(objmap_key(dataset_name)))
+
+    # ------------------------------------------------------------ write
+    def write(self, omap: ObjectMap, table: Mapping[str, np.ndarray],
+              *, rows: RowRange | None = None, workers: int | None = None,
+              forwarding: bool = True) -> int:
+        """Scatter a row range to its objects (parallel writers).
+
+        ``forwarding=False`` bypasses the plugin machinery and writes one
+        native blob — the paper's Table-1 native-HDF5 baseline.
+        Returns bytes written (client->store).
+        """
+        ds = omap.dataset
+        rows = rows or RowRange(0, ds.n_rows)
+        validate_table(ds, table, rows)
+        if not forwarding:
+            # native access-library path: the app serializes once and
+            # writes its LOCAL store — no forwarding hop, no replication
+            blob = self.local.encode(dict(table))
+            name = f"{ds.name}/native"
+            self.store.osds[self.store.cluster.primary(name)].put(name,
+                                                                  blob)
+            return len(blob)
+
+        subs = omap.lookup(rows)
+
+        def write_one(sub) -> int:
+            extent, local_rows = sub
+            glob = local_rows.shift(extent.row_start)
+            part = {k: np.asarray(v)[glob.start - rows.start:
+                                     glob.stop - rows.start]
+                    for k, v in table.items()}
+            blob = self.local.encode(part)
+            self.store.put(extent.name, blob,
+                           xattr={"zone_map": fmt.zone_map(part),
+                                  "rows": [glob.start, glob.stop]})
+            return len(blob)
+
+        w = workers or self.workers
+        if w <= 1:
+            return sum(write_one(s) for s in subs)
+        with ThreadPoolExecutor(max_workers=w) as pool:
+            return sum(pool.map(write_one, subs))
+
+    # ------------------------------------------------------------ read
+    def read(self, omap: ObjectMap, rows: RowRange,
+             columns: list[str] | None = None) -> dict[str, np.ndarray]:
+        """Gather a row range; per-object select+project run storage-side
+        so only requested rows/columns move."""
+        subs = omap.lookup(rows)
+
+        def read_one(sub):
+            extent, local = sub
+            pipeline = [oc.op("select", rows=(local.start, local.stop))]
+            if columns is not None:
+                pipeline.append(oc.op("project", cols=list(columns)))
+            blob = self.store.exec(extent.name, pipeline)
+            self.local.note_access("fetch")
+            return fmt.decode_block(blob)
+
+        with ThreadPoolExecutor(max_workers=self.workers) as pool:
+            parts = list(pool.map(read_one, subs))
+        return concat_tables(parts)
+
+    # ------------------------------------------------------------ query
+    def plan(self, omap: ObjectMap, ops: list[oc.ObjOp]) -> ReadPlan:
+        """Global optimization: prune objects whose zone maps cannot match
+        a leading filter; decide pushdown vs gather."""
+        pushdown = oc.pipeline_decomposable(ops)
+        prunable = [o for o in ops if o.name == "filter"]
+        keep, pruned = [], []
+        for extent in omap:
+            skip = False
+            for f in prunable:
+                zm = self.store.xattr(extent.name).get("zone_map", {})
+                rng = zm.get(f.params["col"])
+                if rng and _prunable(rng, f.params["cmp"],
+                                     f.params["value"]):
+                    skip = True
+                    break
+            (pruned if skip else keep).append(extent.name)
+        return ReadPlan(tuple((k, None) for k in keep), tuple(pruned),
+                        pushdown)
+
+    def query(self, omap: ObjectMap, ops: list[oc.ObjOp],
+              *, allow_approx: bool = False) -> tuple[Any, dict]:
+        """Execute an op pipeline over the whole dataset.
+
+        Decomposable pipelines push down: each object runs the pipeline on
+        its OSD, partials combine client-side.  Holistic tails (median)
+        gather their projected input instead — unless ``allow_approx``
+        rewrites them to the decomposable sketch (paper §3.2).
+        Returns (result, stats).
+        """
+        ops = list(ops)
+        rewritten = False
+        if ops and ops[-1].name == "median" and allow_approx:
+            col = ops[-1].params["col"]
+            lo, hi = self._column_bounds(omap, col)
+            ops[-1] = oc.op("quantile_sketch", col=col, lo=lo, hi=hi)
+            rewritten = True
+
+        plan = self.plan(omap, ops)
+        names = [n for n, _ in plan.sub_requests]
+        before = self.store.fabric.snapshot()
+        tail = oc.get_impl(ops[-1].name) if ops else None
+
+        if ops and not tail.table_out and tail.combine is not None:
+            partials = self.store.exec_many(names, ops,
+                                            workers=self.workers)
+            for _ in names:
+                self.local.note_access("scan")
+            result = oc.combine_partials(ops, partials)
+        elif ops and not tail.table_out:  # holistic: gather projected input
+            proj = [oc.op(o.name, **o.params) for o in ops[:-1]]
+            col = ops[-1].params["col"]
+            proj.append(oc.op("project", cols=[col]))
+            blobs = self.store.exec_many(names, proj, workers=self.workers)
+            cols = [fmt.decode_block(b) for b in blobs]
+            result = oc.median_exact(
+                [{col: c[col].ravel()} for c in cols], col)
+        else:  # table-out pipeline: gather result tables
+            blobs = self.store.exec_many(names, ops, workers=self.workers)
+            result = concat_tables([fmt.decode_block(b) for b in blobs])
+
+        after = self.store.fabric.snapshot()
+        stats = {k: after[k] - before[k] for k in after}
+        stats.update(objects_touched=len(names),
+                     objects_pruned=len(plan.pruned),
+                     pushdown=plan.pushdown, approx_rewrite=rewritten)
+        return result, stats
+
+    # ------------------------------------------------------------ helpers
+    def _column_bounds(self, omap: ObjectMap, col: str) -> tuple[float, float]:
+        lo, hi = np.inf, -np.inf
+        for extent in omap:
+            zm = self.store.xattr(extent.name).get("zone_map", {})
+            if col in zm:
+                lo, hi = min(lo, zm[col][0]), max(hi, zm[col][1])
+        if not np.isfinite(lo):
+            lo, hi = 0.0, 1.0
+        return float(lo), float(hi) + 1e-9
+
+
+def _prunable(rng: list, cmp: str, value: float) -> bool:
+    lo, hi = rng
+    if cmp == "<":
+        return lo >= value
+    if cmp == "<=":
+        return lo > value
+    if cmp == ">":
+        return hi <= value
+    if cmp == ">=":
+        return hi < value
+    if cmp == "==":
+        return value < lo or value > hi
+    return False

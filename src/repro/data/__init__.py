@@ -1,0 +1,2 @@
+"""Object-store-backed training data pipeline (the paper's infrastructure
+applied to the LM input path)."""

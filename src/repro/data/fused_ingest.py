@@ -1,0 +1,69 @@
+"""Fused in-step ingest: storage-side compression decoded on-device.
+
+The paper's `compress` offload, adapted to the TPU input path: objects
+store tokens planar-bitpacked; the loader ships the *packed words* to the
+device, and the unpack (+ label derivation, which the storage layer knows
+is a row shift — dataset semantics made available to the system, paper
+goal 1) happens inside the compiled train step, shard-locally.
+
+Input-path bytes per token: 8 (tokens+labels int32) -> bits/8 (~2.1 for a
+17-bit vocab) — a 3.8x reduction in host->device and HBM traffic for the
+batch, with zero collectives added (elementwise unpack).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.format import bitpack_width
+from repro.core.pushdown_jax import unpack_bitpacked
+
+
+def pack_batch(tokens: np.ndarray, bits: int) -> np.ndarray:
+    """(B, S) int32 -> (B, S//32, bits) uint32 planar words (host side —
+    i.e. what the OSD already stores; see objclass.select_packed)."""
+    from repro.core.format import bitpack_encode
+    B, S = tokens.shape
+    if S % 32:
+        raise ValueError("S must be a multiple of 32")
+    return bitpack_encode(tokens.ravel(), bits).reshape(B, S // 32, bits)
+
+
+def unpack_tokens(packed: jax.Array) -> jax.Array:
+    """(B, G, bits) uint32 -> (B, G*32) int32, in-graph."""
+    return unpack_bitpacked(packed, packed.shape[-1])
+
+
+def derive_labels(tokens: jax.Array) -> jax.Array:
+    """labels[t] = tokens[t+1]; last position masked.  The shift is the
+    dataset's logical schema, applied where the shard lives."""
+    labels = jnp.roll(tokens, -1, axis=1)
+    return labels.at[:, -1].set(-1)
+
+
+def fused_batch(packed: jax.Array) -> dict[str, jax.Array]:
+    tokens = unpack_tokens(packed)
+    return {"tokens": tokens, "labels": derive_labels(tokens)}
+
+
+def make_fused_train_step(base_train_step):
+    """Wrap a (state, batch)->(state, metrics) step to take packed words.
+
+    The unpack lands inside the same XLA program, so cost_analysis of the
+    fused step shows the input-bytes reduction directly (benchmarked in
+    benchmarks/ingest_fused.py).
+    """
+
+    def fused_step(state, packed):
+        return base_train_step(state, fused_batch(packed))
+
+    return fused_step
+
+
+def packed_input_spec(global_batch: int, seq_len: int, vocab: int):
+    """ShapeDtypeStruct for the packed batch (dry-run input stand-in)."""
+    bits = bitpack_width(vocab - 1)
+    return jax.ShapeDtypeStruct((global_batch, seq_len // 32, bits),
+                                jnp.uint32)

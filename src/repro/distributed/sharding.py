@@ -1,0 +1,194 @@
+"""Logical-axis sharding rules — strategy tables per workload.
+
+Models are written against *logical* axes; a MeshRules instance resolves
+them to mesh axes under one of four parallelism strategies:
+
+  fsdp         TRAIN, single pod.  Pure ZeRO-3: the batch covers EVERY
+               mesh axis (1 seq/device at the assigned shapes), weights
+               are all-gathered layer-by-layer inside the scan.  No
+               tensor parallelism — collectives are per-layer weight
+               gathers (O(params/L)), independent of batch, which beats
+               Megatron's activation gathers whenever
+               tokens/device * D > params/layer.
+  megatron_sp  TRAIN, multi-pod (and MoE giants that cannot hold fp32
+               moments under pure FSDP).  Batch over (pod, data), TP
+               over model (heads / d_ff / experts' F / vocab), residual
+               stream sequence-sharded over model between layers
+               (Megatron-LM SP); attention inputs are re-gathered to
+               full sequence ONCE per layer via an explicit hint so the
+               flash scan loops stay collective-free.
+  fsdp_dp      TRAIN, multi-pod, SSM/hybrid families.  Like fsdp but the
+               batch only covers (pod, data): sequence scans (Mamba/WKV)
+               are sequential in S, so activations stay seq-local.
+  tp_sp        SERVE (prefill/decode).  Params FSDP over data axes + TP
+               over model; decode KV caches sequence-sharded over model
+               ("sp") with the flash-decode softmax combine.
+
+Logical axes:
+  dp           batch dimension of inputs/activations
+  fsdp         dim-0 storage sharding of dense weights
+  fsdp_expert  storage sharding of MoE expert weights (middle dim)
+  tp           tensor-parallel dim (heads / d_ff / vocab / expert F)
+  act_seq      sequence dim of the residual stream between layers
+  sp           sequence dim of decode KV caches
+  tokens       flattened token dim for shard-local MoE dispatch
+  all          every mesh axis
+
+``hint(x, *axes)`` applies with_sharding_constraint when a mesh is
+active and is a no-op otherwise, so model code runs unchanged in
+single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: contextvars.ContextVar["MeshRules | None"] = contextvars.ContextVar(
+    "repro_mesh_rules", default=None)
+
+STRATEGIES = ("fsdp", "megatron_sp", "fsdp_dp", "tp_dp", "tp_sp")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    strategy: str = "tp_sp"
+    # axes already manual in an enclosing shard_map: resolve() drops them
+    # so inner with_sharding_constraints only touch auto axes
+    manual_axes: tuple = ()
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+
+    # ------------------------------------------------------------------
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def table(self) -> dict:
+        dp, allax = self.dp_axes, self.all_axes
+        model = "model" if "model" in allax else None
+        if self.strategy == "fsdp":
+            full = dp + ((model,) if model else ())
+            return {"dp": full, "fsdp": full, "fsdp_expert": full,
+                    "tp": None, "act_seq": None, "sp": model,
+                    "tokens": full}
+        if self.strategy == "megatron_sp":
+            return {"dp": dp, "fsdp": dp, "fsdp_expert": dp,
+                    "tp": model, "act_seq": model, "sp": model,
+                    "tokens": dp + ((model,) if model else ())}
+        if self.strategy == "fsdp_dp":
+            full = dp + ((model,) if model else ())
+            return {"dp": dp, "fsdp": full, "fsdp_expert": full,
+                    "tp": None, "act_seq": None, "sp": model,
+                    "tokens": dp}
+        if self.strategy == "tp_dp":
+            # Megatron-1D without sequence parallelism: batch over
+            # (pod, data), heads/d_ff/state-heads TP over model, full-seq
+            # activations (pair with gradient-accumulation microbatching).
+            # The TP split works for SSM scans too: heads are independent
+            # through time, so Mamba2/WKV states shard over model.
+            return {"dp": dp, "fsdp": dp, "fsdp_expert": dp,
+                    "tp": model, "act_seq": None, "sp": model,
+                    "tokens": dp}
+        return {"dp": dp, "fsdp": dp, "fsdp_expert": dp,  # tp_sp
+                "tp": model, "act_seq": None, "sp": model,
+                "tokens": dp}
+
+    # ------------------------------------------------------------------
+    def resolve(self, logical: Any):
+        """Translate one logical axis name to mesh axes (or None)."""
+        out = self._resolve(logical)
+        if not self.manual_axes or out is None:
+            return out
+        axes = out if isinstance(out, tuple) else (out,)
+        kept = tuple(a for a in axes if a not in self.manual_axes)
+        return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+    def _resolve(self, logical: Any):
+        if logical is None:
+            return None
+        if logical in self.mesh.axis_names:  # explicit mesh axis: pass
+            return logical
+        if logical == "all":
+            return self.all_axes
+        if isinstance(logical, str) and logical.endswith("_nopod"):
+            # variant of a logical axis excluding 'pod' (used when an
+            # array carries an explicit leading pod dim, e.g. per-pod
+            # error-feedback state)
+            axes = self.resolve(logical[:-len("_nopod")])
+            if axes is None:
+                return None
+            if not isinstance(axes, tuple):
+                return None if axes == "pod" else axes
+            rest = tuple(a for a in axes if a != "pod")
+            return rest if len(rest) > 1 else (rest[0] if rest else None)
+        if logical in self.table:
+            axes = self.table[logical]
+            if isinstance(axes, tuple):
+                if not axes:
+                    return None
+                return axes if len(axes) > 1 else axes[0]
+            return axes
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *logical: Any) -> P:
+        return P(*[self.resolve(ax) for ax in logical])
+
+    def sharding(self, *logical: Any) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------------ moe
+    @property
+    def token_axes(self) -> tuple[str, ...]:
+        t = self.table["tokens"]
+        return t if isinstance(t, tuple) else (t,)
+
+    @property
+    def moe_tp(self) -> str | None:
+        return self.table["tp"]
+
+
+def active_rules() -> MeshRules | None:
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: MeshRules | None):
+    token = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(token)
+
+
+def hint(x: jax.Array, *logical: Any) -> jax.Array:
+    """Sharding constraint by logical axes; no-op without an active mesh."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*logical))
+
+
+def spec_tree_to_shardings(rules: MeshRules, spec_tree):
+    """Map a pytree of PartitionSpecs to NamedShardings."""
+    return jax.tree.map(
+        lambda s: rules.named(s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: planar bitpack decode (storage codec offload).
+
+Input layout (core.format planar codec): each group of 32 values is b
+uint32 words; word k holds bit k of all 32 values.  We process 4 groups
+per output row so the output tile is 128-lane aligned for the VPU:
+
+  words  (R, 4, b)  uint32   ->   values (R, 128) int32
+
+Tiling: a (BLOCK_R, 4, b) word tile is (BLOCK_R * 4 * b * 4) bytes of
+VMEM; with BLOCK_R=256 and b=17 that's ~70 KiB in + 128 KiB out — well
+inside the ~16 MiB VMEM budget, leaving room for double buffering.  The
+unpack is shift/mask/sum VPU work with zero MXU involvement, so it
+overlaps cleanly with neighbouring matmul stages when fused into a step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_R = 256
+
+
+def _bitunpack_kernel(w_ref, o_ref, *, bits: int):
+    w = w_ref[...]                                  # (bm, 4, bits) uint32
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 32), 3)
+    sel = (w[..., None] >> lane) & jnp.uint32(1)    # (bm, 4, bits, 32)
+    weight = (jnp.uint32(1) << jnp.arange(bits, dtype=jnp.uint32)
+              )[None, None, :, None]
+    vals = jnp.sum(sel * weight, axis=2, dtype=jnp.uint32)  # (bm, 4, 32)
+    bm = vals.shape[0]
+    o_ref[...] = vals.reshape(bm, 128).astype(jnp.int32)
+
+
+def bitunpack(words: jax.Array, *, bits: int,
+              block_r: int = DEFAULT_BLOCK_R,
+              interpret: bool = False) -> jax.Array:
+    """(R, 4, bits) uint32 -> (R, 128) int32 via pallas_call."""
+    R = words.shape[0]
+    if words.shape[1:] != (4, bits):
+        raise ValueError(f"want (R, 4, {bits}), got {words.shape}")
+    bm = min(block_r, R)
+    if R % bm:
+        raise ValueError(f"R={R} not divisible by block_r={bm}")
+    grid = (R // bm,)
+    return pl.pallas_call(
+        functools.partial(_bitunpack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, 4, bits), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bm, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 128), jnp.int32),
+        interpret=interpret,
+    )(words)

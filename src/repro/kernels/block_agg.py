@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: masked blockwise partial aggregation.
+
+The terminal ``agg`` objclass op when the validity mask is already
+materialized (e.g. tokens != pad, or a composed upstream filter).  One
+VMEM pass per (block_rows, 128) tile emitting [sum, count, min, max]
+partials — associative, so partials combine across tiles, shards, and
+pods in any order (composability, paper §3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _block_agg_kernel(v_ref, m_ref, o_ref):
+    v = v_ref[...].astype(jnp.float32)              # (bm, 128)
+    m = m_ref[...] != 0
+    big = jnp.float32(3.4e38)
+    s = jnp.sum(jnp.where(m, v, 0.0))
+    c = jnp.sum(m.astype(jnp.float32))
+    lo = jnp.min(jnp.where(m, v, big))
+    hi = jnp.max(jnp.where(m, v, -big))
+    row = jnp.stack([s, c, lo, hi])
+    o_ref[...] = jnp.broadcast_to(row[:, None], (4, 128))[None]
+
+
+def block_agg(values: jax.Array, mask: jax.Array, *,
+              block_rows: int = DEFAULT_BLOCK_ROWS,
+              interpret: bool = False) -> jax.Array:
+    """values: (N,) float; mask: (N,) int/bool.  N % (block_rows*128) == 0.
+    Returns (n_blocks, 4, 128) partials (see filter_agg.combine_partials).
+    """
+    N = values.shape[0]
+    tile = block_rows * 128
+    if N % tile:
+        raise ValueError(f"N={N} not divisible by tile={tile}")
+    grid = (N // tile,)
+    v2 = values.reshape(N // 128, 128)
+    m2 = mask.astype(jnp.int32).reshape(N // 128, 128)
+    return pl.pallas_call(
+        _block_agg_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 4, 128), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N // tile, 4, 128), jnp.float32),
+        interpret=interpret,
+    )(v2, m2)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused predicate filter + partial aggregation.
+
+The SkyhookDM `filter -> agg` pipeline as one VMEM pass: stream (8k, 128)
+tiles of the value and filter columns through VMEM, evaluate the
+predicate, and emit one (8, 128) partial accumulator per grid step
+holding [sum, count, min, max] replicated across lanes (row 0..3; rows
+4-7 padding) — reduced to 4 scalars outside.  Only the partials leave
+the block: the kernel is the device twin of ``objclass`` filter+agg and
+the unit the collective-bytes term sees is O(grid), not O(N).
+
+Predicates are compile-time (op id baked into the kernel), values fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_OPS = ("<", "<=", ">", ">=", "==", "!=")
+DEFAULT_BLOCK_ROWS = 64  # x 128 lanes = 8192 values/tile
+
+
+def _pred(opi: int, x, thr):
+    return [
+        lambda: x < thr, lambda: x <= thr, lambda: x > thr,
+        lambda: x >= thr, lambda: x == thr, lambda: x != thr,
+    ][opi]()
+
+
+def _filter_agg_kernel(v_ref, f_ref, o_ref, *, opi: int, thr: float):
+    v = v_ref[...].astype(jnp.float32)              # (bm, 128)
+    f = f_ref[...].astype(jnp.float32)
+    m = _pred(opi, f, jnp.float32(thr))
+    big = jnp.float32(3.4e38)
+    s = jnp.sum(jnp.where(m, v, 0.0))
+    c = jnp.sum(m.astype(jnp.float32))
+    lo = jnp.min(jnp.where(m, v, big))
+    hi = jnp.max(jnp.where(m, v, -big))
+    row = jnp.stack([s, c, lo, hi])                 # (4,)
+    o_ref[...] = jnp.broadcast_to(row[:, None], (4, 128))[None]
+
+
+def filter_agg(values: jax.Array, filter_col: jax.Array, cmp: str,
+               threshold: float, *,
+               block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = False) -> jax.Array:
+    """values/filter_col: (N,) with N % (block_rows*128) == 0.
+    Returns (n_blocks, 4, 128) partials; combine with ``combine_partials``.
+    """
+    opi = _OPS.index(cmp)
+    N = values.shape[0]
+    tile = block_rows * 128
+    if N % tile:
+        raise ValueError(f"N={N} not divisible by tile={tile}")
+    grid = (N // tile,)
+    v2 = values.reshape(N // 128, 128)
+    f2 = filter_col.reshape(N // 128, 128)
+    return pl.pallas_call(
+        functools.partial(_filter_agg_kernel, opi=opi,
+                          thr=float(threshold)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 4, 128), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N // tile, 4, 128), jnp.float32),
+        interpret=interpret,
+    )(v2, f2)
+
+
+def combine_partials(partials: jax.Array) -> dict[str, jax.Array]:
+    """(n_blocks, 4, 128) -> scalars.  Associative; safe under psum."""
+    p = partials[..., 0]                            # lanes identical
+    return {"sum": jnp.sum(p[:, 0]), "count": jnp.sum(p[:, 1]),
+            "min": jnp.min(p[:, 2]), "max": jnp.max(p[:, 3])}

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitunpack_ref(words: jax.Array, bits: int) -> jax.Array:
+    """(R, 4, bits) uint32 -> (R, 128) int32."""
+    lane = jnp.arange(32, dtype=jnp.uint32)
+    sel = (words[..., None] >> lane) & jnp.uint32(1)      # (R,4,b,32)
+    weight = (jnp.uint32(1) << jnp.arange(bits, dtype=jnp.uint32))
+    vals = jnp.sum(sel * weight[None, None, :, None], axis=2,
+                   dtype=jnp.uint32)                       # (R,4,32)
+    return vals.reshape(words.shape[0], 128).astype(jnp.int32)
+
+
+_PREDS = {
+    "<": jnp.less, "<=": jnp.less_equal, ">": jnp.greater,
+    ">=": jnp.greater_equal, "==": jnp.equal, "!=": jnp.not_equal,
+}
+
+
+def filter_agg_ref(values: jax.Array, filter_col: jax.Array, cmp: str,
+                   threshold: float) -> dict[str, jax.Array]:
+    v = values.astype(jnp.float32)
+    m = _PREDS[cmp](filter_col.astype(jnp.float32), jnp.float32(threshold))
+    big = jnp.float32(3.4e38)
+    return {
+        "sum": jnp.sum(jnp.where(m, v, 0.0)),
+        "count": jnp.sum(m.astype(jnp.float32)),
+        "min": jnp.min(jnp.where(m, v, big)),
+        "max": jnp.max(jnp.where(m, v, -big)),
+    }
+
+
+def block_agg_ref(values: jax.Array, mask: jax.Array) -> dict:
+    v = values.astype(jnp.float32)
+    m = mask != 0
+    big = jnp.float32(3.4e38)
+    return {
+        "sum": jnp.sum(jnp.where(m, v, 0.0)),
+        "count": jnp.sum(m.astype(jnp.float32)),
+        "min": jnp.min(jnp.where(m, v, big)),
+        "max": jnp.max(jnp.where(m, v, -big)),
+    }

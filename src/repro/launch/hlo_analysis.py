@@ -1,0 +1,401 @@
+"""Scan-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes by ~L and hides the
+collectives inside the loop.  This analyzer walks the HLO computation
+graph, multiplies loop bodies by their trip counts (recovered from the
+loop condition's comparison constant), and accumulates:
+
+  flops      — dot ops: 2 * prod(result dims) * prod(contracting dims)
+  bytes      — per op: result + operands (fusions count their boundary
+               only — internals live in registers, matching XLA's model;
+               dynamic-update-slice counts the updated window, not the
+               aliased buffer)
+  collective — wire bytes per device with ring-algorithm factors,
+               grouped by kind
+
+Operand shapes are resolved through per-computation symbol tables (the
+optimized dump prints operands by name only).  Cross-checked against
+cost_analysis() on while-free programs in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([a-z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_ATTR_COMP_RE = re.compile(
+    r"(body|condition|to_apply|calls|true_computation|"
+    r"false_computation)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_PARAM_RE = re.compile(r"([\w\.\-]+)\s*:\s*(\(?[^,()]*(?:\([^)]*\))?\)?"
+                       r"(?:\[[0-9,]*\])?(?:\{[^}]*\})?)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ZERO_COST = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+# ops a TPU-grade fusion pass folds into neighbours: their operands/
+# results never round-trip HBM.  The CPU backend fuses far less, so
+# counting every op overstates the memory term ~5-10x; ``bytes_fused``
+# counts only materializing ops (dots, loop/fusion boundaries, layout
+# changes, collectives, dynamic slices) and is the TPU-order estimate
+# the roofline uses; ``bytes`` (everything) is kept as the upper bound.
+_FUSABLE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "tanh", "negate", "abs",
+    "select", "compare", "convert", "and", "or", "xor", "not", "power",
+    "rsqrt", "sqrt", "cbrt", "log", "log-plus-one", "logistic", "floor",
+    "ceil", "sign", "shift-left", "shift-right-logical", "round-nearest-even",
+    "shift-right-arithmetic", "clamp", "broadcast", "reshape", "atan2",
+    "is-finite", "remainder", "cosine", "sine", "tan", "erf", "expm1",
+    "reduce-precision", "stochastic-convert", "popcnt", "clz", "pad",
+    "reverse", "map", "real", "imag",
+}
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(segment: str) -> list[list[int]]:
+    return [[int(d) for d in dims.split(",")] if dims else []
+            for _, dims in _SHAPE_RE.findall(segment)]
+
+
+def _operand_segment(line: str, opcode: str) -> str:
+    """Text inside the opcode's parens (paren-depth matched)."""
+    i = line.find(opcode + "(")
+    if i < 0:
+        return ""
+    j = i + len(opcode)
+    depth = 0
+    for k in range(j, len(line)):
+        if line[k] == "(":
+            depth += 1
+        elif line[k] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[j + 1:k]
+    return line[j + 1:]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0          # upper bound: every op materializes
+    bytes_fused: float = 0.0    # TPU-order: fusable elementwise ops free
+    coll: dict = dataclasses.field(
+        default_factory=lambda: dict.fromkeys(_COLLECTIVES, 0.0))
+    coll_count: float = 0.0
+    dots: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_fused += other.bytes_fused * mult
+        for k in self.coll:
+            self.coll[k] += other.coll[k] * mult
+        self.coll_count += other.coll_count * mult
+        self.dots += other.dots * mult
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[str]] = {}
+        self.symtab: dict[str, dict[str, str]] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+        self._fusable_memo: dict[str, bool] = {}
+
+    # ---------------------------------------------------------------- parse
+    def _parse(self, hlo: str) -> None:
+        cur: str | None = None
+        for line in hlo.splitlines():
+            if cur is None:
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    self.symtab[cur] = {}
+                    if m.group(1):
+                        self.entry = cur
+                    # header params: "name: shape, name: shape"
+                    for pname, pshape in _PARAM_RE.findall(m.group(3)):
+                        self.symtab[cur][pname] = pshape
+            else:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                self.comps[cur].append(line)
+                om = _OP_RE.match(line)
+                if om:
+                    self.symtab[cur][om.group(1)] = om.group(2)
+
+    # ---------------------------------------------------------------- trip
+    def trip_count(self, cond_name: str, body_name: str) -> int:
+        consts = []
+        for line in self.comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        t = max(consts, default=0)
+        if t <= 0:
+            for line in self.comps.get(body_name, []):
+                consts += [int(c) for c in _CONST_RE.findall(line)]
+            t = max(consts, default=1)
+        return max(t, 1)
+
+    # ---------------------------------------------------------------- ops
+    def _operand_bytes(self, comp: str, seg: str) -> tuple[int, list[str]]:
+        names = _OPERAND_NAME_RE.findall(seg)
+        tab = self.symtab[comp]
+        total = 0
+        shapes = []
+        for n in names:
+            s = tab.get(n, "")
+            total += _shape_bytes(s)
+            shapes.append(s)
+        return total, shapes
+
+    def _op_cost(self, comp: str, line: str) -> Cost:
+        c = Cost()
+        m = _OP_RE.match(line)
+        if not m:
+            return c
+        result_seg, opcode = m.group(2), m.group(3)
+        if opcode in _ZERO_COST:
+            return c
+        result_bytes = _shape_bytes(result_seg)
+        operand_seg = _operand_segment(line, opcode)
+        operand_bytes, operand_shapes = self._operand_bytes(
+            comp, operand_seg)
+
+        attr_comps = dict()
+        for k, v in _ATTR_COMP_RE.findall(line):
+            attr_comps.setdefault(k, v)
+
+        if opcode == "while":
+            body, cond = attr_comps.get("body"), attr_comps.get("condition")
+            if body:
+                trips = self.trip_count(cond or "", body)
+                c.add(self.comp_cost(body), trips)
+                if cond:
+                    c.add(self.comp_cost(cond), trips)
+            return c
+
+        if opcode in ("call", "fusion", "reduce", "reduce-window",
+                      "scatter", "sort", "map", "select-and-scatter",
+                      "custom-call"):
+            fusable_body = True
+            for key in ("calls", "to_apply", "true_computation",
+                        "false_computation"):
+                if key in attr_comps:
+                    sub = self.comp_cost(attr_comps[key])
+                    fusable_body &= self._all_fusable(attr_comps[key])
+                    if opcode == "fusion":
+                        part = Cost()
+                        part.add(sub)
+                        part.bytes = 0.0  # internals stay in registers
+                        part.bytes_fused = 0.0
+                        c.add(part)
+                    else:
+                        c.add(sub)
+            c.bytes += result_bytes + operand_bytes
+            # CPU wraps single elementwise ops in kLoop fusions; a TPU
+            # fusion pass would fold those into neighbours entirely.
+            if opcode == "fusion":
+                if not fusable_body:
+                    for key in ("calls",):
+                        if key in attr_comps:
+                            c.bytes_fused += self._fusion_bytes(
+                                attr_comps[key], result_bytes)
+            else:
+                c.bytes_fused += result_bytes + operand_bytes
+            return c
+
+        if opcode == "conditional":
+            names = [v for _, v in _ATTR_COMP_RE.findall(line)]
+            mb = _BRANCHES_RE.search(line)
+            if mb:
+                names += [n.strip().lstrip("%")
+                          for n in mb.group(1).split(",")]
+            for name in set(names):
+                c.add(self.comp_cost(name))  # upper bound: all branches
+            c.bytes += result_bytes + operand_bytes
+            c.bytes_fused += result_bytes + operand_bytes
+            return c
+
+        coll = next((k for k in _COLLECTIVES if opcode.startswith(k)), None)
+        if coll is not None:
+            if opcode.endswith("-done"):
+                return c  # counted at -start
+            n = max(_group_size(line), 1)
+            size = result_bytes
+            if coll == "all-gather":
+                wire = size * (n - 1) / n
+            elif coll == "all-reduce":
+                wire = 2.0 * size * (n - 1) / n
+            elif coll == "reduce-scatter":
+                wire = size * (n - 1)
+            elif coll == "all-to-all":
+                wire = size * (n - 1) / n
+            else:
+                wire = float(size)
+            c.coll[coll] += wire
+            c.coll_count += 1
+            c.bytes += result_bytes + operand_bytes
+            c.bytes_fused += result_bytes + operand_bytes
+            return c
+
+        if opcode == "dot":
+            k = 1
+            mcon = _CONTRACT_RE.search(line)
+            if mcon and operand_shapes:
+                lhs_dims = _shape_dims(operand_shapes[0])
+                lhs = lhs_dims[0] if lhs_dims else []
+                for d in mcon.group(1).split(","):
+                    if d != "" and int(d) < len(lhs):
+                        k *= lhs[int(d)]
+            n_out = 0
+            for dt, dims in _SHAPE_RE.findall(result_seg):
+                n = 1
+                for d in (dims.split(",") if dims else []):
+                    n *= int(d)
+                n_out += n
+            c.flops += 2.0 * n_out * k
+            c.dots += 1
+
+        if opcode == "dynamic-update-slice":
+            upd = _shape_bytes(operand_shapes[1]) if \
+                len(operand_shapes) > 1 else 0
+            c.bytes += 2.0 * upd
+            c.bytes_fused += 2.0 * upd
+        elif opcode == "dynamic-slice":
+            c.bytes += 2.0 * result_bytes
+            c.bytes_fused += 2.0 * result_bytes
+        else:
+            c.bytes += result_bytes + operand_bytes
+            if opcode not in _FUSABLE:
+                c.bytes_fused += result_bytes + operand_bytes
+        return c
+
+    def _fusion_bytes(self, name: str, result_bytes: int) -> float:
+        """HBM bytes at a fusion boundary: every parameter is read in
+        full EXCEPT operands consumed by an inner dynamic-slice /
+        dynamic-update-slice — those only move the slice/update window
+        (the buffer itself is aliased).  Catches the decode-cache
+        pattern where a fusion 'takes' a multi-GB stacked cache but
+        touches one layer's page."""
+        tab = self.symtab.get(name, {})
+        sliced: dict[str, float] = {}
+        has_dus = False
+        params: list[str] = []
+        for line in self.comps.get(name, []):
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            op = m.group(3)
+            if op == "parameter":
+                params.append(m.group(1))
+                continue
+            seg = _operand_segment(line, op)
+            names = _OPERAND_NAME_RE.findall(seg)
+            if op == "dynamic-slice" and names:
+                sliced[names[0]] = 2.0 * _shape_bytes(m.group(2))
+            elif op == "dynamic-update-slice" and len(names) > 1:
+                upd = _shape_bytes(tab.get(names[1], ""))
+                sliced[names[0]] = 2.0 * upd
+                has_dus = True
+        total = 0.0
+        for pname in params:
+            if pname in sliced:
+                total += sliced[pname]
+            else:
+                total += _shape_bytes(tab.get(pname, ""))
+        if not has_dus:  # DUS output aliases its buffer: write counted
+            total += result_bytes
+        return total
+
+    def _all_fusable(self, name: str) -> bool:
+        """True when every op in the computation is elementwise-fusable
+        (used to zero the HBM cost of CPU 'wrapped_*' kLoop fusions)."""
+        if name not in self._fusable_memo:
+            self._fusable_memo[name] = True  # cycle guard
+            ok = True
+            for line in self.comps.get(name, []):
+                m = _OP_RE.match(line)
+                if not m:
+                    continue
+                op = m.group(3)
+                if op in _ZERO_COST or op in _FUSABLE:
+                    continue
+                ok = False
+                break
+            self._fusable_memo[name] = ok
+        return self._fusable_memo[name]
+
+    # ---------------------------------------------------------------- comp
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        total = Cost()
+        for line in self.comps.get(name, []):
+            total.add(self._op_cost(name, line))
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    cost = HloAnalyzer(hlo_text).entry_cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "bytes_fused": cost.bytes_fused,
+        "collective": dict(cost.coll, total=cost.coll_total),
+        "collective_count": cost.coll_count,
+        "dots": cost.dots,
+    }

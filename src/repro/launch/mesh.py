@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Production target: TPU v5e-class pods of 256
+chips arranged (data=16, model=16); the multi-pod mesh adds a leading
+"pod" axis of 2 (512 chips).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(devices)}; set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before importing jax (dry-run only)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_smoke_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many real devices exist (tests)."""
+    return jax.make_mesh(shape, axes)

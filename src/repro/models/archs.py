@@ -1,0 +1,15 @@
+"""Config -> model dispatch."""
+
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.recurrent import RWKVModel, ZambaModel
+from repro.models.transformer import TransformerLM
+
+
+def build_model(cfg: ArchConfig, remat: str = "full"):
+    if cfg.family == "ssm":
+        return RWKVModel(cfg, remat=remat)
+    if cfg.family == "hybrid":
+        return ZambaModel(cfg, remat=remat)
+    return TransformerLM(cfg, remat=remat)

@@ -1,0 +1,424 @@
+"""Attention: GQA/MHA/MQA flash-style scan attention, MLA, and decode paths.
+
+Layout conventions (no sharded-dim reshapes, DESIGN.md §5):
+  q weights  (D, H, hd)      TP on heads when H % tp == 0 else on head_dim
+  kv weights (D, K, hd)      replicated over TP (K is small for GQA/MQA)
+  o weights  (H, hd, D)      TP matches q; FSDP on D
+
+Train/prefill attention is a nested lax.scan over (q-block, kv-block) with
+online softmax — O(S·block) memory so prefill_32k never materializes an
+S×S score tensor.  Decode attends a single query against a KV cache whose
+sequence axis is sharded over the model axis ("SP"); softmax over the
+sharded axis becomes a GSPMD all-reduce (flash-decode combine).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, init_linear
+
+_NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+
+HEAD_TP = "padded"  # "padded" | "head_dim" (dryrun variant comparison)
+
+
+def init_attention(key, cfg: ArchConfig):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    params = {
+        "wq": init_linear(ks[0], d, (H, hd), dt),
+        "wk": init_linear(ks[1], d, (K, hd), dt),
+        "wv": init_linear(ks[2], d, (K, hd), dt),
+        "wo": (init_linear(ks[3], H * hd, d, dt)).reshape(H, hd, d),
+    }
+    if cfg.n_heads % 16 == 0 or HEAD_TP == "padded":
+        # TP on heads.  When H % tp != 0 (starcoder2: 36) GSPMD pads the
+        # head dim to ceil(H/tp)/rank — 75% attention efficiency, but the
+        # flash loops stay collective-free, which beats head_dim TP's
+        # psum-per-block by orders of magnitude (EXPERIMENTS §Perf B2).
+        specs = {"wq": P("fsdp", "tp", None), "wk": P("fsdp", None, None),
+                 "wv": P("fsdp", None, None), "wo": P("tp", None, "fsdp")}
+    else:  # head_dim (contraction) TP — kept for the perf comparison
+        specs = {"wq": P("fsdp", None, "tp"), "wk": P("fsdp", None, "tp"),
+                 "wv": P("fsdp", None, "tp"), "wo": P(None, "tp", "fsdp")}
+    return params, specs
+
+
+def init_mla(key, cfg: ArchConfig):
+    assert cfg.mla is not None
+    m, d, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    dt = cfg.param_dtype
+    params = {
+        "wq": init_linear(ks[0], d, (H, qk_head), dt),
+        "wdkv": init_linear(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "wuk": init_linear(ks[2], m.kv_lora_rank, (H, m.qk_nope_head_dim), dt),
+        "wuv": init_linear(ks[3], m.kv_lora_rank, (H, m.v_head_dim), dt),
+        "wo": init_linear(ks[4], H * m.v_head_dim, d, dt).reshape(
+            H, m.v_head_dim, d),
+    }
+    specs = {
+        "wq": P("fsdp", "tp", None),
+        "wdkv": P("fsdp", None),
+        "wuk": P(None, "tp", None),
+        "wuv": P(None, "tp", None),
+        "wo": P("tp", None, "fsdp"),
+    }
+    return params, specs
+
+
+# --------------------------------------------------------------------------
+# flash attention (train / prefill)
+# --------------------------------------------------------------------------
+#
+# Two implementations, selected by FLASH_IMPL (dryrun variants compare):
+#   "scan" — nested lax.scan with online softmax; autodiff of the scans
+#            stacks (nq x nk) checkpointed inner carries in the backward:
+#            correct but HBM-heavy (the §Perf baseline).
+#   "vjp"  — custom_vjp with the REAL FlashAttention backward: forward
+#            saves only (q, k, v, out, LSE); backward replays the block
+#            loops computing p = exp(s - L) directly and accumulates
+#            dq/dk/dv — O(S) residuals, one extra attention pass.
+
+FLASH_IMPL = "vjp"
+
+
+def _mask_scores(s, causal, qp, kp):
+    if not causal:
+        return s, jnp.ones((qp.shape[0], kp.shape[0]), jnp.float32)
+    mask = (qp[:, None] >= kp[None, :]).astype(jnp.float32)
+    return s * mask + _NEG * (1.0 - mask), mask
+
+
+def _flash_fwd_scan(q, k, v, causal, q_offset, block_q, block_k,
+                    *, checkpoint_inner: bool, need_lse: bool):
+    B, Sq, H, hd = q.shape
+    _, Sk, K, hdv = v.shape
+    G = H // K
+    scale = hd ** -0.5
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, K, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, K, hdv), 1, 0)
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, bq)
+    k_pos = jnp.arange(Sk).reshape(nk, bk)
+
+    def outer(_, qxs):
+        q_i, qp = qxs  # (B, bq, H, hd), (bq,)
+
+        def inner(carry, kxs):
+            m, l, acc = carry
+            k_j, v_j, kp = kxs
+            k_rep = jnp.repeat(k_j, G, axis=2)      # (B, bk, H, hd)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_rep,
+                           preferred_element_type=jnp.float32) * scale
+            s, mask = _mask_scores(s, causal, qp, kp)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None]) * mask  # zero masked rows
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            v_rep = jnp.repeat(v_j, G, axis=2)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_rep.dtype), v_rep,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, H, bq), _NEG, jnp.float32),
+            jnp.zeros((B, H, bq), jnp.float32),
+            jnp.zeros((B, H, bq, hdv), jnp.float32),
+        )
+        body = jax.checkpoint(inner) if checkpoint_inner else inner
+        (m, l, acc), _ = jax.lax.scan(body, init, (kb, vb, k_pos))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-20))    # (B, H, bq)
+        return None, (jnp.moveaxis(out, 1, 2), lse)
+
+    _, (ob, lseb) = jax.lax.scan(outer, None, (qb, q_pos))
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, Sq, H, hdv).astype(q.dtype)
+    if not need_lse:
+        return out, None
+    # lseb: (nq, B, H, bq) -> (B, H, Sq)
+    lse = jnp.moveaxis(lseb, 0, 2).reshape(B, H, Sq)
+    return out, lse
+
+
+def _flash_core(q, k, v, causal, q_offset, block_q, block_k):
+    out, _ = _flash_fwd_scan(q, k, v, causal, q_offset, block_q, block_k,
+                             checkpoint_inner=False, need_lse=False)
+    return out
+
+
+def _flash_core_fwd(q, k, v, causal, q_offset, block_q, block_k):
+    out, lse = _flash_fwd_scan(q, k, v, causal, q_offset, block_q,
+                               block_k, checkpoint_inner=False,
+                               need_lse=True)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, q_offset, block_q, block_k, res, dout):
+    """FlashAttention backward: per (q, kv) block pair recompute
+    p = exp(s - LSE) and accumulate dq (per-q-block output), dk/dv
+    (stacked carry with indexed adds) — no O(nq*nk) residuals."""
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    _, Sk, K, hdv = v.shape
+    G = H // K
+    scale = hd ** -0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nq, nk = Sq // bq, Sk // bk
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, hd), 1, 0)
+    dob = jnp.moveaxis(dout.reshape(B, nq, bq, H, hdv), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, K, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, K, hdv), 1, 0)
+    lseb = jnp.moveaxis(lse.reshape(B, H, nq, bq), 2, 0)   # (nq, B, H, bq)
+    # D_i = rowsum(dout * out) (f32) — the softmax-grad diagonal term
+    D = jnp.einsum("bshd,bshd->bsh", dout.astype(jnp.float32),
+                   out.astype(jnp.float32))
+    Db = jnp.moveaxis(D.reshape(B, nq, bq, H), 1, 0)       # (nq, B, bq, H)
+    q_pos = q_offset + jnp.arange(Sq).reshape(nq, bq)
+    k_pos = jnp.arange(Sk).reshape(nk, bk)
+
+    def outer(carry, qxs):
+        dk_acc, dv_acc = carry        # (nk, B, bk, K, hd/v) f32
+        q_i, do_i, L_i, D_i, qp = qxs
+
+        def inner(c2, kxs):
+            dq_i, dk_acc, dv_acc = c2
+            k_j, v_j, kp, j = kxs
+            k_rep = jnp.repeat(k_j, G, axis=2)
+            v_rep = jnp.repeat(v_j, G, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_rep,
+                           preferred_element_type=jnp.float32) * scale
+            s, mask = _mask_scores(s, causal, qp, kp)
+            p = jnp.exp(s - L_i[..., None]) * mask         # (B, H, bq, bk)
+            dp = jnp.einsum("bqhd,bkhd->bhqk",
+                            do_i.astype(jnp.float32),
+                            v_rep.astype(jnp.float32))
+            ds = p * (dp - jnp.swapaxes(D_i, 1, 2)[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                                     k_rep.astype(jnp.float32))
+            dk_j = jnp.einsum("bhqk,bqhd->bkhd", ds,
+                              q_i.astype(jnp.float32))
+            dv_j = jnp.einsum("bhqk,bqhd->bkhd", p,
+                              do_i.astype(jnp.float32))
+            # fold grouped q heads back onto their kv head
+            dk_j = dk_j.reshape(B, bk, K, G, hd).sum(axis=3)
+            dv_j = dv_j.reshape(B, bk, K, G, hdv).sum(axis=3)
+            dk_acc = dk_acc.at[j].add(dk_j)
+            dv_acc = dv_acc.at[j].add(dv_j)
+            return (dq_i, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((B, bq, H, hd), jnp.float32)
+        (dq_i, dk_acc, dv_acc), _ = jax.lax.scan(
+            inner, (dq0, dk_acc, dv_acc),
+            (kb, vb, k_pos, jnp.arange(nk)))
+        return (dk_acc, dv_acc), dq_i
+
+    init = (jnp.zeros((nk, B, bk, K, hd), jnp.float32),
+            jnp.zeros((nk, B, bk, K, hdv), jnp.float32))
+    (dk_acc, dv_acc), dqb = jax.lax.scan(
+        outer, init, (qb, dob, lseb, Db, q_pos))
+    dq = jnp.moveaxis(dqb, 0, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk_acc, 0, 1).reshape(B, Sk, K, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dv_acc, 0, 1).reshape(B, Sk, K, hdv).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_vjp = jax.custom_vjp(_flash_core, nondiff_argnums=(3, 4, 5, 6))
+_flash_vjp.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(
+    q: jax.Array,             # (B, Sq, H, hd)
+    k: jax.Array,             # (B, Sk, K, hd)
+    v: jax.Array,             # (B, Sk, K, hdv)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,        # absolute position of q[0] (prefill cont.)
+    block_q: int = 512,
+    block_k: int = 512,
+    impl: str | None = None,
+) -> jax.Array:
+    impl = impl or FLASH_IMPL
+    if impl == "vjp":
+        return _flash_vjp(q, k, v, causal, q_offset, block_q, block_k)
+    out, _ = _flash_fwd_scan(q, k, v, causal, q_offset, block_q, block_k,
+                             checkpoint_inner=True, need_lse=False)
+    return out
+
+
+# --------------------------------------------------------------------------
+# GQA layer application
+# --------------------------------------------------------------------------
+
+
+def gqa_forward(cfg: ArchConfig, p, x: jax.Array, positions: jax.Array,
+                *, q_offset: int = 0, kv_out: bool = False):
+    """Train/prefill attention.  Returns (out, (k, v)) — k/v for the cache."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=True, q_offset=q_offset)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, ((k, v) if kv_out else None)
+
+
+def gqa_decode(cfg: ArchConfig, p, x: jax.Array, pos: jax.Array,
+               k_cache: jax.Array, v_cache: jax.Array):
+    """Single-token decode against an S-sharded cache.
+
+    x: (B, 1, D); pos: scalar int32 — the position being written.
+    cache: (B, S_max, K, hd).  Returns (out, k_cache, v_cache).
+    """
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    B, S = k_cache.shape[0], k_cache.shape[1]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+
+    qg = q.reshape(B, K, G, hd)  # q is TP-replicated at decode; reshape is free
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    valid = (jnp.arange(S) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)  # sharded-S reduce -> flash-decode combine
+    o = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache)
+    out = jnp.einsum("bhk,hkd->bd", o.reshape(B, H, hd), p["wo"])[:, None, :]
+    return out.astype(x.dtype), k_cache, v_cache
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(token, kv-head) symmetric int8 over head_dim.
+    x: (..., hd) -> (int8 values, f32 scale without the hd dim)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def gqa_decode_q8(cfg: ArchConfig, p, x: jax.Array, pos: jax.Array,
+                  k_cache, v_cache, k_scale, v_scale):
+    """gqa_decode against an int8-quantized cache (KV bytes halve; the
+    dequant is fused into the attention reads on TPU).  caches:
+    (B, S, K, hd) int8 + (B, S, K) f32 scales."""
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    B, S = k_cache.shape[0], k_cache.shape[1]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, pos, axis=1)
+    k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, pos, axis=1)
+    v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, pos, axis=1)
+
+    qg = q.reshape(B, K, G, hd)
+    # dequant folded into the contraction: s = (q . k_int8) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (hd ** -0.5)
+    s = s * jnp.swapaxes(k_scale, 1, 2)[:, :, None, :]
+    valid = (jnp.arange(S) <= pos)[None, None, None, :]
+    s = jnp.where(valid, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    wv = w * jnp.swapaxes(v_scale, 1, 2)[:, :, None, :]
+    o = jnp.einsum("bkgs,bskd->bkgd", wv, v_cache.astype(jnp.float32))
+    out = jnp.einsum("bhk,hkd->bd", o.reshape(B, H, hd).astype(x.dtype),
+                     p["wo"])[:, None, :]
+    return out.astype(x.dtype), k_cache, v_cache, k_scale, v_scale
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — compressed-latent KV cache
+# --------------------------------------------------------------------------
+
+
+def _mla_project(cfg: ArchConfig, p, x, positions):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    dkv = x @ p["wdkv"]                              # (B, S, r + rope)
+    c_kv = dkv[..., : m.kv_lora_rank]
+    k_rope = apply_rope(dkv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)              # (B, S, 1, rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(cfg: ArchConfig, p, x: jax.Array, positions: jax.Array,
+                *, kv_out: bool = False):
+    """Train/prefill MLA: up-project the latent and run flash with K == H."""
+    m = cfg.mla
+    q_nope, q_rope, c_kv, k_rope = _mla_project(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wuv"])
+    H = cfg.n_heads
+    k_rope_rep = jnp.broadcast_to(k_rope, (*k_rope.shape[:2], H, m.qk_rope_head_dim))
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate([k_nope, k_rope_rep], axis=-1)
+    o = flash_attention(q_cat, k_cat, v, causal=True)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, ((c_kv, k_rope[:, :, 0, :]) if kv_out else None)
+
+
+def mla_decode(cfg: ArchConfig, p, x: jax.Array, pos: jax.Array,
+               ckv_cache: jax.Array, krope_cache: jax.Array):
+    """Absorbed-weight MLA decode: scores/values computed in latent space so
+    the cache stays (B, S, r) + (B, S, rope) — MLA's compression benefit."""
+    m = cfg.mla
+    B = x.shape[0]
+    S = ckv_cache.shape[1]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_project(cfg, p, x, posv)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, k_rope[:, :, 0, :].astype(krope_cache.dtype), pos, axis=1)
+
+    # absorb W_uk into q:  (B,1,H,dn)·(r,H,dn) -> (B,H,r)
+    q_lat = jnp.einsum("bshk,rhk->bhr", q_nope, p["wuk"])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhp,bsp->bhs", q_rope[:, 0], krope_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = (jnp.arange(S) <= pos)[None, None, :]
+    s = jnp.where(valid, s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w.astype(ckv_cache.dtype), ckv_cache)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, p["wuv"])
+    out = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None, :]
+    return out.astype(x.dtype), ckv_cache, krope_cache

@@ -1,0 +1,86 @@
+"""Input specifications per (architecture x shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, zero allocation) together with a
+matching PartitionSpec tree — the dry-run lowers against these directly.
+``make_batch`` materializes concrete random inputs at smoke scale.
+
+Modality frontends are STUBS per the assignment: audio (musicgen) receives
+precomputed EnCodec frame embeddings; vlm (pixtral) receives precomputed
+ViT patch embeddings occupying the first ``n_frontend_tokens`` positions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Inputs for train_step / prefill_step: the full-sequence batch."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "audio_stub":
+        batch = {"frame_embeds": sds((B, S, cfg.d_model), jnp.bfloat16),
+                 "labels": sds((B, S), jnp.int32)}
+        specs = {"frame_embeds": P("dp", None, None), "labels": P("dp", None)}
+    elif cfg.frontend == "vision_stub":
+        Pn = cfg.n_frontend_tokens
+        assert S > Pn, (S, Pn)
+        batch = {"patch_embeds": sds((B, Pn, cfg.d_model), jnp.bfloat16),
+                 "tokens": sds((B, S - Pn), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+        specs = {"patch_embeds": P("dp", None, None),
+                 "tokens": P("dp", None), "labels": P("dp", None)}
+    else:
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+        specs = {"tokens": P("dp", None), "labels": P("dp", None)}
+    if shape.global_batch == 1:  # long-context: can't shard batch
+        specs = jax.tree.map(
+            lambda s: P(*((None,) + tuple(s)[1:])), specs,
+            is_leaf=lambda s: isinstance(s, P))
+    return batch, specs
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """Inputs for serve_step: one new token per sequence."""
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    tokens = sds((B, 1), jnp.int32)
+    spec = P("dp", None) if B > 1 else P(None, None)
+    return tokens, spec
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+    """Concrete random batch at smoke scale."""
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "audio_stub":
+        return {
+            "frame_embeds": jnp.asarray(
+                rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32)
+                * 0.02, cfg.compute_dtype),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        Pn = cfg.n_frontend_tokens
+        labels = rng.integers(0, cfg.vocab_size, (batch, seq))
+        labels[:, :Pn] = -1  # no loss on patch positions
+        return {
+            "patch_embeds": jnp.asarray(
+                rng.normal(size=(batch, Pn, cfg.d_model)).astype(np.float32)
+                * 0.02, cfg.compute_dtype),
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (batch, seq - Pn)),
+                jnp.int32),
+            "labels": jnp.asarray(labels, jnp.int32),
+        }
+    tokens = rng.integers(0, cfg.vocab_size, (batch, seq))
+    return {"tokens": jnp.asarray(tokens, jnp.int32),
+            "labels": jnp.asarray(
+                np.roll(tokens, -1, axis=1), jnp.int32)}

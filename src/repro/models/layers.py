@@ -1,0 +1,211 @@
+"""Shared neural-net building blocks (pure-functional, pytree params).
+
+Every ``init_*`` returns ``(params, specs)`` — a params pytree and a
+structurally identical pytree of ``PartitionSpec`` leaves.  Logical axis
+names used in specs: "fsdp" (ZeRO-3 storage sharding over the data axes),
+"tp" (tensor parallel over the model axis); they are resolved against the
+active mesh by ``repro.distributed.sharding``.
+
+Head-carrying weights are kept in (D, H, head_dim) form and consumed with
+einsum so no sharded-dim reshapes are ever needed (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def _dense_init(key, d_in: int, shape, dtype) -> jax.Array:
+    scale = d_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out, dtype, *, fan_in_dims: int = 1):
+    """Weight of shape (d_in, *d_out) — no bias (llama-style)."""
+    if isinstance(d_out, int):
+        d_out = (d_out,)
+    return _dense_init(key, d_in, (d_in, *d_out), dtype)
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, d: int):
+    if cfg.norm == "layernorm":
+        params = {"scale": jnp.ones((d,), jnp.float32),
+                  "bias": jnp.zeros((d,), jnp.float32)}
+        specs = {"scale": P(None), "bias": P(None)}
+    else:
+        params = {"scale": jnp.ones((d,), jnp.float32)}
+        specs = {"scale": P(None)}
+    return params, specs
+
+
+def apply_norm(cfg: ArchConfig, p, x: jax.Array, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads: (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ArchConfig, d: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu_gated":
+        params = {
+            "w1": init_linear(ks[0], d, d_ff, dtype),
+            "w3": init_linear(ks[1], d, d_ff, dtype),
+            "w2": init_linear(ks[2], d_ff, d, dtype),
+        }
+        specs = {"w1": P("fsdp", "tp"), "w3": P("fsdp", "tp"),
+                 "w2": P("tp", "fsdp")}
+    else:
+        params = {
+            "w1": init_linear(ks[0], d, d_ff, dtype),
+            "w2": init_linear(ks[2], d_ff, d, dtype),
+        }
+        specs = {"w1": P("fsdp", "tp"), "w2": P("tp", "fsdp")}
+    return params, specs
+
+
+def apply_act(cfg: ArchConfig, h: jax.Array, gate: jax.Array | None):
+    if cfg.act == "silu_gated":
+        return jax.nn.silu(gate) * h
+    if cfg.act == "gelu":
+        return jax.nn.gelu(h)
+    if cfg.act == "relu_sq":
+        return jnp.square(jax.nn.relu(h))
+    raise ValueError(cfg.act)
+
+
+def apply_mlp(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    h = x @ p["w1"]
+    gate = x @ p["w3"] if "w3" in p else None
+    h = apply_act(cfg, h, gate)
+    return h @ p["w2"]
+
+
+# --------------------------------------------------------------------------
+# embeddings / logits / loss
+# --------------------------------------------------------------------------
+
+
+def init_embed(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    params = {
+        "tok": _dense_init(k1, cfg.d_model, (cfg.vocab_size, cfg.d_model),
+                           cfg.param_dtype),
+        "head": init_linear(k2, cfg.d_model, cfg.vocab_size, cfg.param_dtype),
+    }
+    specs = {"tok": P("fsdp", None), "head": P("fsdp", "tp")}
+    return params, specs
+
+
+def embed_tokens(p, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+
+
+XENT_MM = "mixed"  # "mixed" | "cast" (dryrun baseline comparison)
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,        # (B, S, D) final hidden states
+    head: jax.Array,          # (D, V) output projection
+    labels: jax.Array,        # (B, S) int32; -1 = masked position
+    *,
+    chunk: int = 1024,
+    z_loss: float = 1e-4,
+):
+    """Cross entropy with the vocab projection fused into an S-chunked scan.
+
+    Keeps the (B, chunk, V) logits block as the peak — never materializes
+    (B, S, V).  Works with V sharded over the model axis: the label pick is
+    a one-hot einsum and the logsumexp reduces over the sharded dim, both of
+    which GSPMD partitions without gathering logits.
+    """
+    B, S, D = hidden.shape
+    V = head.shape[-1]
+    n_chunks = max(S // chunk, 1)
+    chunk = S // n_chunks
+    hs = hidden.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    ls = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot_loss, tot_z, tot_cnt, tot_correct = carry
+        h, lab = xs
+        if XENT_MM == "mixed":
+            # bf16 operands, f32 accumulate — native on the MXU; avoids
+            # materializing an f32 copy of the (D, V) head every chunk
+            logits = jax.lax.dot_general(
+                h, head, (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        else:
+            logits = (h.astype(jnp.float32) @ head.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)                  # (B, c)
+        # label pick via iota-compare masked sum: fuses away — never
+        # materializes a (B, c, V) one-hot, and partitions over sharded V
+        vidx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        tgt = jnp.sum(jnp.where(vidx == lab[..., None], logits, 0.0),
+                      axis=-1)
+        mask = (lab >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * mask
+        zterm = jnp.square(lse) * mask
+        correct = (jnp.argmax(logits, -1) == lab).astype(jnp.float32) * mask
+        return (tot_loss + nll.sum(), tot_z + zterm.sum(),
+                tot_cnt + mask.sum(), tot_correct + correct.sum()), None
+
+    init = (jnp.zeros((), jnp.float32),) * 4
+    (loss_sum, z_sum, cnt, correct), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (hs, ls))
+    cnt = jnp.maximum(cnt, 1.0)
+    loss = loss_sum / cnt + z_loss * z_sum / cnt
+    metrics = {"nll": loss_sum / cnt, "accuracy": correct / cnt,
+               "tokens": cnt}
+    return loss, metrics

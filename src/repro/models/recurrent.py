@@ -1,0 +1,350 @@
+"""Recurrent-family models: RWKV6 (attention-free) and Zamba2 (hybrid).
+
+Both are O(S) in sequence length and therefore run the ``long_500k`` shape.
+Zamba2: 9 groups of 6 Mamba2 layers, each group followed by ONE
+weight-shared attention+MLP block (the shared weights are scan constants,
+so the HLO contains a single copy).  RWKV6: stacked time-mix/channel-mix
+blocks with exact one-step decode recurrence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import hint
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    chunked_softmax_xent,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_norm,
+)
+from repro.models.transformer import _remat, specs_of, stack_specs, stacked_init
+
+# ==========================================================================
+# RWKV6
+# ==========================================================================
+
+
+class RWKVModel:
+    def __init__(self, cfg: ArchConfig, remat: str = "full"):
+        self.cfg = cfg
+        self.remat = remat
+
+    def _init_block(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        core, core_s = ssm.init_rwkv6(ks[0], cfg)
+        n1, n1_s = init_norm(cfg, cfg.d_model)
+        n2, n2_s = init_norm(cfg, cfg.d_model)
+        params = {"ln1": n1, "ln2": n2, **core}
+        specs = {"ln1": n1_s, "ln2": n2_s, **core_s}
+        return params, specs
+
+    def _build(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        emb, emb_s = init_embed(ks[0], cfg)
+        ln_in, ln_in_s = init_norm(cfg, cfg.d_model)
+        fln, fln_s = init_norm(cfg, cfg.d_model)
+        blocks = stacked_init(self._init_block, ks[1], cfg.n_layers)
+        params = {"embed": emb, "ln_in": ln_in, "blocks": blocks,
+                  "final_norm": fln}
+        specs = {"embed": emb_s, "ln_in": ln_in_s,
+                 "blocks": stack_specs(specs_of(self._init_block)),
+                 "final_norm": fln_s}
+        return params, specs
+
+    def init(self, key):
+        return self._build(key)[0]
+
+    def abstract(self):
+        box = {}
+
+        def f(key):
+            params, specs = self._build(key)
+            box["specs"] = specs
+            return params
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, box["specs"]
+
+    # ------------------------------------------------------------ forward
+    def _stack_fwd(self, params, h, *, collect_state: bool = False):
+        cfg = self.cfg
+
+        def body(h, p):
+            a_in = apply_norm(cfg, p["ln1"], h)
+            t_out, wkv_state = ssm.rwkv6_tmix(cfg, p["tmix"], a_in,
+                                              state_out=collect_state)
+            h = hint(h + t_out, "dp", "act_seq", None)
+            m_in = apply_norm(cfg, p["ln2"], h)
+            c_out = ssm.rwkv6_cmix(cfg, p["cmix"], m_in)
+            h = hint(h + c_out, "dp", "act_seq", None)
+            ys = (wkv_state, a_in[:, -1], m_in[:, -1]) if collect_state \
+                else None
+            return h, ys
+
+        return jax.lax.scan(_remat(body, self.remat), h, params["blocks"])
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], batch["tokens"], cfg.compute_dtype)
+        h = apply_norm(cfg, params["ln_in"], h)
+        h, _ = self._stack_fwd(params, h)
+        h = apply_norm(cfg, params["final_norm"], h)
+        loss, metrics = chunked_softmax_xent(
+            h, params["embed"]["head"], batch["labels"])
+        metrics["aux_loss"] = jnp.zeros((), jnp.float32)
+        return loss, metrics
+
+    # ------------------------------------------------------------ serve
+    def abstract_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        L, H, Pd, D = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.d_model
+        bdp = None if batch == 1 else "dp"
+        cache = {
+            "wkv": jax.ShapeDtypeStruct((L, batch, H, Pd, Pd), jnp.float32),
+            "tprev": jax.ShapeDtypeStruct((L, batch, D), cfg.compute_dtype),
+            "cprev": jax.ShapeDtypeStruct((L, batch, D), cfg.compute_dtype),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        specs = {"wkv": P(None, bdp, None, None, "tp"),
+                 "tprev": P(None, bdp, None), "cprev": P(None, bdp, None),
+                 "pos": P()}
+        return cache, specs
+
+    def init_cache(self, batch: int, max_seq: int):
+        shapes, _ = self.abstract_cache(batch, max_seq)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], batch["tokens"], cfg.compute_dtype)
+        h = apply_norm(cfg, params["ln_in"], h)
+        h, (wkv, tprev, cprev) = self._stack_fwd(params, h,
+                                                 collect_state=True)
+        h = apply_norm(cfg, params["final_norm"], h)
+        logits = h[:, -1].astype(jnp.float32) @ \
+            params["embed"]["head"].astype(jnp.float32)
+        cache = {"wkv": wkv, "tprev": tprev, "cprev": cprev,
+                 "pos": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], tokens, cfg.compute_dtype)
+        h = apply_norm(cfg, params["ln_in"], h)
+
+        def body(h, xs):
+            p, wkv, tprev, cprev = xs
+            a_in = apply_norm(cfg, p["ln1"], h)
+            t_out, wkv = ssm.rwkv6_tmix_decode(
+                cfg, p["tmix"], a_in, tprev[:, None].astype(a_in.dtype), wkv)
+            h = h + t_out
+            m_in = apply_norm(cfg, p["ln2"], h)
+            c_out = ssm.rwkv6_cmix(cfg, p["cmix"], m_in,
+                                   cprev[:, None].astype(m_in.dtype))
+            h = h + c_out
+            return h, (wkv, a_in[:, 0], m_in[:, 0])
+
+        h, (wkv, tprev, cprev) = jax.lax.scan(
+            body, h, (params["blocks"], cache["wkv"], cache["tprev"],
+                      cache["cprev"]))
+        h = apply_norm(cfg, params["final_norm"], h)
+        logits = h[:, -1].astype(jnp.float32) @ \
+            params["embed"]["head"].astype(jnp.float32)
+        return logits, {"wkv": wkv, "tprev": tprev, "cprev": cprev,
+                        "pos": cache["pos"] + 1}
+
+
+# ==========================================================================
+# Zamba2 hybrid
+# ==========================================================================
+
+
+class ZambaModel:
+    def __init__(self, cfg: ArchConfig, remat: str = "full"):
+        assert cfg.ssm is not None and cfg.ssm.attn_every
+        self.cfg = cfg
+        self.remat = remat
+        self.n_inner = cfg.ssm.attn_every                      # 6
+        self.n_groups = cfg.n_layers // self.n_inner           # 9
+
+    def _init_mamba_layer(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        core, core_s = ssm.init_mamba2(ks[0], cfg)
+        n, n_s = init_norm(cfg, cfg.d_model)
+        return {"ln": n, "mamba": core}, {"ln": n_s, "mamba": core_s}
+
+    def _init_shared(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        a, a_s = attn.init_attention(ks[0], cfg)
+        m, m_s = init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+        n1, n1_s = init_norm(cfg, cfg.d_model)
+        n2, n2_s = init_norm(cfg, cfg.d_model)
+        return ({"ln1": n1, "attn": a, "ln2": n2, "mlp": m},
+                {"ln1": n1_s, "attn": a_s, "ln2": n2_s, "mlp": m_s})
+
+    def _build(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        emb, emb_s = init_embed(ks[0], cfg)
+        fln, fln_s = init_norm(cfg, cfg.d_model)
+        G, K = self.n_groups, self.n_inner
+        keys = jax.random.split(ks[1], G * K).reshape(G, K, -1)
+        mamba = jax.vmap(jax.vmap(
+            lambda k: self._init_mamba_layer(k)[0]))(keys)
+        shared, shared_s = self._init_shared(ks[2])
+        params = {"embed": emb, "mamba": mamba, "shared": shared,
+                  "final_norm": fln}
+        specs = {"embed": emb_s,
+                 "mamba": stack_specs(specs_of(self._init_mamba_layer), 2),
+                 "shared": shared_s, "final_norm": fln_s}
+        return params, specs
+
+    def init(self, key):
+        return self._build(key)[0]
+
+    def abstract(self):
+        box = {}
+
+        def f(key):
+            params, specs = self._build(key)
+            box["specs"] = specs
+            return params
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, box["specs"]
+
+    # ------------------------------------------------------------ forward
+    def _shared_fwd(self, shared, h, positions, kv_out=False):
+        cfg = self.cfg
+        a_in = apply_norm(cfg, shared["ln1"], h)
+        a_in = hint(a_in, "dp", None, None)  # full seq for attention
+        a_out, kv = attn.gqa_forward(cfg, shared["attn"], a_in, positions,
+                                     kv_out=kv_out)
+        h = hint(h + a_out, "dp", "act_seq", None)
+        m_in = apply_norm(cfg, shared["ln2"], h)
+        h = hint(h + apply_mlp(cfg, shared["mlp"], m_in), "dp", "act_seq", None)
+        return h, kv
+
+    def _stack_fwd(self, params, h, positions, collect: bool = False):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def inner(h, p):
+            a_in = apply_norm(cfg, p["ln"], h)
+            out, state = ssm.mamba2_forward(cfg, p["mamba"], a_in,
+                                            state_out=collect)
+            return hint(h + out, "dp", "act_seq", None), state
+
+        def group(h, gp):
+            h, states = jax.lax.scan(inner, h, gp)
+            h, kv = self._shared_fwd(shared, h, positions, kv_out=collect)
+            return h, (states, kv) if collect else None
+
+        return jax.lax.scan(_remat(group, self.remat), h, params["mamba"])
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], batch["tokens"], cfg.compute_dtype)
+        h = hint(h, "dp", "act_seq", None)
+        B, S = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, _ = self._stack_fwd(params, h, positions)
+        h = apply_norm(cfg, params["final_norm"], h)
+        loss, metrics = chunked_softmax_xent(
+            h, params["embed"]["head"], batch["labels"])
+        metrics["aux_loss"] = jnp.zeros((), jnp.float32)
+        return loss, metrics
+
+    # ------------------------------------------------------------ serve
+    def abstract_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        s = cfg.ssm
+        G, Kn = self.n_groups, self.n_inner
+        d_in, H, Pd, N = ssm.mamba_dims(cfg)
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        dt = cfg.compute_dtype
+        bdp = None if batch == 1 else "dp"
+        sp = "all" if batch == 1 else "sp"
+        cache = {
+            "ssd": jax.ShapeDtypeStruct((G, Kn, batch, H, Pd, N),
+                                        jnp.float32),
+            "conv": jax.ShapeDtypeStruct((G, Kn, batch, s.d_conv - 1, H, Pd),
+                                         dt),
+            "k": jax.ShapeDtypeStruct((G, batch, max_seq, K, hd), dt),
+            "v": jax.ShapeDtypeStruct((G, batch, max_seq, K, hd), dt),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        specs = {
+            "ssd": P(None, None, bdp, "tp", None, None),
+            "conv": P(None, None, bdp, None, "tp", None),
+            "k": P(None, bdp, sp, None, None),
+            "v": P(None, bdp, sp, None, None),
+            "pos": P(),
+        }
+        return cache, specs
+
+    def init_cache(self, batch: int, max_seq: int):
+        shapes, _ = self.abstract_cache(batch, max_seq)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        h = embed_tokens(params["embed"], batch["tokens"], cfg.compute_dtype)
+        B, S = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, (states, kvs) = self._stack_fwd(params, h, positions, collect=True)
+        h = apply_norm(cfg, params["final_norm"], h)
+        logits = h[:, -1].astype(jnp.float32) @ \
+            params["embed"]["head"].astype(jnp.float32)
+        cache = {"ssd": states["ssd"], "conv": states["conv"],
+                 "k": kvs[0], "v": kvs[1],
+                 "pos": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        pos = cache["pos"]
+        h = embed_tokens(params["embed"], tokens, cfg.compute_dtype)
+        shared = params["shared"]
+
+        def inner(h, xs):
+            p, ssd_st, conv_st = xs
+            a_in = apply_norm(cfg, p["ln"], h)
+            out, new_state = ssm.mamba2_decode(
+                cfg, p["mamba"], a_in, {"ssd": ssd_st, "conv": conv_st})
+            return h + out, (new_state["ssd"], new_state["conv"])
+
+        def group(h, xs):
+            gp, ssd_g, conv_g, k_g, v_g = xs
+            h, (ssd_n, conv_n) = jax.lax.scan(inner, h, (gp, ssd_g, conv_g))
+            a_in = apply_norm(cfg, shared["ln1"], h)
+            a_out, k_n, v_n = attn.gqa_decode(cfg, shared["attn"], a_in,
+                                              pos, k_g, v_g)
+            h = h + a_out
+            m_in = apply_norm(cfg, shared["ln2"], h)
+            h = h + apply_mlp(cfg, shared["mlp"], m_in)
+            return h, (ssd_n, conv_n, k_n, v_n)
+
+        h, (ssd, conv, k, v) = jax.lax.scan(
+            group, h, (params["mamba"], cache["ssd"], cache["conv"],
+                       cache["k"], cache["v"]))
+        h = apply_norm(cfg, params["final_norm"], h)
+        logits = h[:, -1].astype(jnp.float32) @ \
+            params["embed"]["head"].astype(jnp.float32)
+        return logits, {"ssd": ssd, "conv": conv, "k": k, "v": v,
+                        "pos": pos + 1}

@@ -1,0 +1,341 @@
+"""State-space layers: Mamba2 (SSD, chunked) and RWKV6 ("Finch").
+
+Both use the chunked linear-attention formulation for train/prefill —
+an outer ``lax.scan`` carries the recurrent state across chunks while the
+intra-chunk part is a masked einsum with decay tensors whose exponents are
+all <= 0 (no overflow; see DESIGN.md §5).  Decode is the exact one-step
+recurrence, so prefill-then-decode equals full-sequence processing
+(asserted by tests).
+
+Head-carrying weights are (D, H, P) so head tensors are produced and
+consumed by einsum without sharded-dim reshapes.  TP: Mamba2 shards heads
+(zamba2: 80 heads), RWKV6 shards the value head_dim (40 heads don't divide
+the model axis).
+
+Simplifications vs. the reference CUDA implementations (recorded here and
+in DESIGN.md): Mamba2 convolves only the x-branch (not B/C); RWKV6 uses
+static token-shift lerps for r/k/v/g and data-dependent (LoRA) decay for w
+— the paper's defining feature.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense_init, init_linear
+
+# ==========================================================================
+# Mamba2
+# ==========================================================================
+
+
+def mamba_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return d_in, n_heads, s.head_dim, s.d_state
+
+
+def init_mamba2(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, Pd, N = mamba_dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+    params = {
+        "wz": _dense_init(ks[0], d, (d, H, Pd), dt),
+        "wx": _dense_init(ks[1], d, (d, H, Pd), dt),
+        "wB": _dense_init(ks[2], d, (d, N), dt),
+        "wC": _dense_init(ks[3], d, (d, N), dt),
+        "wdt": _dense_init(ks[4], d, (d, H), dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),        # A = -exp(A_log) = -1
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "conv_w": _dense_init(ks[5], s.d_conv, (s.d_conv, H, Pd), dt),
+        "norm_scale": jnp.ones((H, Pd), jnp.float32),
+        "wo": _dense_init(ks[6], d_in, (H, Pd, d), dt),
+    }
+    specs = {
+        "wz": P("fsdp", "tp", None), "wx": P("fsdp", "tp", None),
+        "wB": P("fsdp", None), "wC": P("fsdp", None),
+        "wdt": P("fsdp", None), "dt_bias": P(None), "A_log": P(None),
+        "D_skip": P(None), "conv_w": P(None, "tp", None),
+        "norm_scale": P("tp", None), "wo": P("tp", None, "fsdp"),
+    }
+    return params, specs
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds.  x: (B,S,H,P); w: (K,H,P)."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[K - 1 - i]
+    return out
+
+
+def _mamba_gated_out(p, y, z, x_dtype):
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(ms + 1e-5) * p["norm_scale"])
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("bshp,hpd->bsd", y.astype(x_dtype), p["wo"])
+
+
+def _mamba_proj(p, x):
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"])
+    xs = jnp.einsum("bsd,dhp->bshp", x, p["wx"])
+    B_ = x @ p["wB"]
+    C_ = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, xs, B_, C_, dt
+
+
+def mamba2_forward(cfg: ArchConfig, p, x: jax.Array,
+                   state_in: jax.Array | None = None,
+                   *, state_out: bool = False):
+    """Chunked SSD.  x: (B,S,D).  state: (B,H,P,N)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    d_in, H, Pd, N = mamba_dims(cfg)
+    c = min(s.chunk, S)
+    assert S % c == 0
+    nc = S // c
+
+    z, xs_raw, B_, C_, dt = _mamba_proj(p, x)
+    xs = jax.nn.silu(_causal_conv(xs_raw, p["conv_w"]))
+    a_log = -jnp.exp(p["A_log"]) * dt                 # (B,S,H), <= 0
+
+    xc = jnp.moveaxis(xs.reshape(B, nc, c, H, Pd), 1, 0)
+    Bc = jnp.moveaxis(B_.reshape(B, nc, c, N), 1, 0)
+    Cc = jnp.moveaxis(C_.reshape(B, nc, c, N), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B, nc, c, H), 1, 0)
+    ac = jnp.moveaxis(a_log.reshape(B, nc, c, H), 1, 0)
+
+    if state_in is None:
+        state_in = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    def chunk_step(h0, xs_):
+        xk, Bk, Ck, dtk, ak = xs_
+        cum = jnp.cumsum(ak, axis=1)                  # (B,c,H) inclusive
+        # SSD recurrence h_t = a_t h_{t-1} + dt_t B_t x_t; y_t = C_t h_t
+        # unrolls to y_t = sum_{j<=t} (C_t.B_j) exp(cum_t - cum_j) dt_j x_j
+        # (INCLUSIVE cumsum on the query side — the j == t diagonal gets
+        # exp(0) = 1, so the triangle includes the diagonal).
+        G = jnp.einsum("btn,bsn->bts", Ck, Bk,
+                       preferred_element_type=jnp.float32)
+        dec = jnp.exp(jnp.clip(cum[:, :, None, :] - cum[:, None, :, :],
+                               max=0.0))              # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=0)
+        W = G[..., None] * dec * tri[None, :, :, None]
+        W = W * dtk[:, None, :, :]                    # weight by dt_j
+        y = jnp.einsum("btsh,bshp->bthp", W, xk.astype(jnp.float32))
+        # inter-chunk: y_t += C_t . (exp(cum_t) * h0)
+        y = y + jnp.einsum("btn,bhpn,bth->bthp", Ck.astype(jnp.float32),
+                           h0, jnp.exp(cum))
+        # state update: h1 = exp(cum_last) h0 + sum_j exp(cum_last - cum_j) dt_j Bj xj
+        last = cum[:, -1][:, None]                    # (B,1,H)
+        w_state = jnp.exp(jnp.clip(last - cum, max=0.0)) * dtk  # (B,c,H)
+        h1 = (jnp.exp(last[:, 0])[:, :, None, None] * h0
+              + jnp.einsum("bsh,bshp,bsn->bhpn", w_state,
+                           xk.astype(jnp.float32), Bk.astype(jnp.float32)))
+        return h1, y
+
+    state, yc = jax.lax.scan(jax.checkpoint(chunk_step), state_in,
+                             (xc, Bc, Cc, dtc, ac))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, Pd)
+    y = y + p["D_skip"][:, None] * xs.astype(jnp.float32)
+    out = _mamba_gated_out(p, y, z, x.dtype)
+    if state_out:
+        conv_state = xs_raw[:, S - (s.d_conv - 1):]   # pre-conv tail
+        return out, {"ssd": state, "conv": conv_state}
+    return out, None
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    _, H, Pd, N = mamba_dims(cfg)
+    return {
+        "ssd": jnp.zeros((batch, H, Pd, N), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, H, Pd), dtype),
+    }
+
+
+def mamba2_decode(cfg: ArchConfig, p, x: jax.Array, state):
+    """One-token recurrence.  x: (B,1,D)."""
+    z, xs, B_, C_, dt = _mamba_proj(p, x)
+    window = jnp.concatenate([state["conv"], xs.astype(state["conv"].dtype)],
+                             axis=1)                  # (B, K, H, P)
+    xs = jax.nn.silu(jnp.einsum("bkhp,khp->bhp", window, p["conv_w"]))[:, None]
+    new_conv = window[:, 1:]
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt[:, 0])      # (B,H)
+    kv = jnp.einsum("bhp,bn,bh->bhpn", xs[:, 0].astype(jnp.float32),
+                    B_[:, 0].astype(jnp.float32), dt[:, 0])
+    h = a[:, :, None, None] * state["ssd"] + kv
+    y = jnp.einsum("bn,bhpn->bhp", C_[:, 0].astype(jnp.float32), h)[:, None]
+    y = y + p["D_skip"][:, None] * xs.astype(jnp.float32)
+    out = _mamba_gated_out(p, y, z, x.dtype)
+    return out, {"ssd": h, "conv": new_conv}
+
+
+# ==========================================================================
+# RWKV6 (Finch)
+# ==========================================================================
+
+_W_LORA = 64
+
+
+def init_rwkv6(key, cfg: ArchConfig):
+    d = cfg.d_model
+    H, Pd = cfg.n_heads, cfg.head_dim
+    F = cfg.d_ff
+    ks = jax.random.split(key, 10)
+    dt = cfg.param_dtype
+    tmix = {
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": _dense_init(ks[0], d, (d, H, Pd), dt),
+        "wk": _dense_init(ks[1], d, (d, H, Pd), dt),
+        "wv": _dense_init(ks[2], d, (d, H, Pd), dt),
+        "wg": _dense_init(ks[3], d, (d, H, Pd), dt),
+        "w0": jnp.full((H, Pd), -1.0, jnp.float32),   # base decay ~ exp(-e^-1)
+        "wlA": _dense_init(ks[4], d, (d, _W_LORA), jnp.float32),
+        "wlB": _dense_init(ks[5], _W_LORA, (_W_LORA, H, Pd), jnp.float32),
+        "u": jnp.zeros((H, Pd), jnp.float32),         # per-channel bonus
+        "ln_scale": jnp.ones((H, Pd), jnp.float32),   # per-head group norm
+        "wo": _dense_init(ks[6], d, (H, Pd, d), dt),
+    }
+    tmix_specs = {
+        "mu_r": P(None), "mu_k": P(None), "mu_v": P(None), "mu_g": P(None),
+        "mu_w": P(None),
+        "wr": P("fsdp", None, None), "wk": P("fsdp", None, None),
+        "wv": P("fsdp", None, "tp"), "wg": P("fsdp", None, "tp"),
+        "w0": P(None, None), "wlA": P("fsdp", None), "wlB": P(None, None, None),
+        "u": P(None, None), "ln_scale": P(None, "tp"),
+        "wo": P(None, "tp", "fsdp"),
+    }
+    cmix = {
+        "mu_ck": jnp.full((d,), 0.5, jnp.float32),
+        "mu_cr": jnp.full((d,), 0.5, jnp.float32),
+        "wk_c": init_linear(ks[7], d, F, dt),
+        "wv_c": init_linear(ks[8], F, d, dt),
+        "wr_c": init_linear(ks[9], d, d, dt),
+    }
+    cmix_specs = {
+        "mu_ck": P(None), "mu_cr": P(None),
+        "wk_c": P("fsdp", "tp"), "wv_c": P("tp", "fsdp"),
+        "wr_c": P("fsdp", None),
+    }
+    return {"tmix": tmix, "cmix": cmix}, \
+        {"tmix": tmix_specs, "cmix": cmix_specs}
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)  # keep carry dtype stable
+
+
+def _rwkv_project(p, x, x_prev):
+    """x: (B,S,D); x_prev: previous-token hidden (B,S,D)."""
+    r = jnp.einsum("bsd,dhp->bshp", _lerp(x, x_prev, p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,dhp->bshp", _lerp(x, x_prev, p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,dhp->bshp", _lerp(x, x_prev, p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,dhp->bshp", _lerp(x, x_prev, p["mu_g"]), p["wg"])
+    xw = _lerp(x, x_prev, p["mu_w"]).astype(jnp.float32)
+    lora = jnp.einsum("bsl,lhp->bshp", jnp.tanh(xw @ p["wlA"]), p["wlB"])
+    logw = -jnp.exp(p["w0"] + lora)                   # (B,S,H,P) decay < 0
+    return r, k, v, g, logw
+
+
+def _rwkv_out(p, wkv, g, r_dtype):
+    yf = wkv.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = yf * jax.lax.rsqrt(ms + 1e-5) * p["ln_scale"]
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    return jnp.einsum("bshp,hpd->bsd", y.astype(r_dtype), p["wo"])
+
+
+def rwkv6_tmix(cfg: ArchConfig, p, x: jax.Array,
+               state_in: jax.Array | None = None, *, state_out: bool = False):
+    """Chunked WKV6.  x: (B,S,D).  state: (B,H,P,P) [k-dim x v-dim]."""
+    B, S, D = x.shape
+    H, Pd = cfg.n_heads, cfg.head_dim
+    c = min(cfg.ssm.chunk if cfg.ssm else 32, S)
+    assert S % c == 0
+    nc = S // c
+
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, logw = _rwkv_project(p, x, x_prev)
+
+    rc = jnp.moveaxis(r.reshape(B, nc, c, H, Pd), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nc, c, H, Pd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nc, c, H, Pd), 1, 0)
+    wc = jnp.moveaxis(logw.reshape(B, nc, c, H, Pd), 1, 0)
+
+    if state_in is None:
+        state_in = jnp.zeros((B, H, Pd, Pd), jnp.float32)
+
+    def chunk_step(S0, xs_):
+        rk, kk, vk, lw = xs_
+        rk = rk.astype(jnp.float32)
+        kk = kk.astype(jnp.float32)
+        vk = vk.astype(jnp.float32)
+        cum = jnp.cumsum(lw, axis=1)                  # (B,c,H,P) inclusive
+        cum_excl = cum - lw
+        # A[t,j] = sum_p r[t,p] k[j,p] exp(cum_excl[t,p] - cum[j,p]), j < t
+        dec = jnp.exp(jnp.clip(cum_excl[:, :, None] - cum[:, None], max=0.0))
+        A = jnp.einsum("bthp,bjhp,btjhp->bhtj", rk, kk, dec)
+        A = A * jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)[None, None]
+        # bonus term: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bthp,hp,bthp->bth", rk, p["u"], kk)
+        y = jnp.einsum("bhtj,bjhp->bthp", A, vk)
+        y = y + bonus[..., None] * vk
+        # inter-chunk: r_t decayed to chunk start reads S0
+        y = y + jnp.einsum("bthp,bhpq->bthq", rk * jnp.exp(cum_excl), S0)
+        # state: S1 = diag(exp(cum_last)) S0 + sum_j exp(cum_last - cum_j) k_j v_j
+        last = cum[:, -1]                             # (B,H,P)
+        S1 = jnp.exp(last)[..., None] * S0 + jnp.einsum(
+            "bjhp,bjhp,bjhq->bhpq", jnp.exp(jnp.clip(
+                last[:, None] - cum, max=0.0)), kk, vk)
+        return S1, y
+
+    state, yc = jax.lax.scan(jax.checkpoint(chunk_step), state_in,
+                             (rc, kc, vc, wc))
+    wkv = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, Pd)
+    out = _rwkv_out(p, wkv, g, x.dtype)
+    if state_out:
+        return out, state
+    return out, None
+
+
+def rwkv6_tmix_decode(cfg: ArchConfig, p, x: jax.Array, x_prev: jax.Array,
+                      state: jax.Array):
+    """One-step WKV.  x: (B,1,D); x_prev: (B,1,D); state: (B,H,P,P)."""
+    r, k, v, g, logw = _rwkv_project(p, x, x_prev)
+    rk = r[:, 0].astype(jnp.float32)
+    kk = k[:, 0].astype(jnp.float32)
+    vk = v[:, 0].astype(jnp.float32)
+    w = jnp.exp(logw[:, 0])                           # (B,H,P)
+    kv = jnp.einsum("bhp,bhq->bhpq", kk, vk)
+    out_state = state + p["u"][..., None] * kv
+    wkv = jnp.einsum("bhp,bhpq->bhq", rk, out_state)[:, None]
+    new_state = w[..., None] * state + kv
+    out = _rwkv_out(p, wkv, g, x.dtype)
+    return out, new_state
+
+
+def rwkv6_cmix(cfg: ArchConfig, p, x: jax.Array,
+               x_prev: jax.Array | None = None):
+    """Channel mix with token shift.  x: (B,S,D)."""
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    xk = _lerp(x, x_prev, p["mu_ck"])
+    xr = _lerp(x, x_prev, p["mu_cr"])
+    h = jnp.square(jax.nn.relu(xk @ p["wk_c"]))
+    return jax.nn.sigmoid(xr @ p["wr_c"]) * (h @ p["wv_c"])

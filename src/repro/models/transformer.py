@@ -1,0 +1,409 @@
+"""Model assembly: scanned decoder stacks for every assigned family.
+
+Public API (all models):
+  model = build_model(cfg)            # repro.models.archs
+  params = model.init(key)                        # eager (smoke scale)
+  shapes, specs = model.abstract()                # no allocation (dry-run)
+  loss, metrics = model.loss(params, batch)       # train forward + CE
+  logits, cache = model.prefill(params, batch)    # build decode cache
+  logits, cache = model.decode_step(params, tokens, cache)
+  cache, cache_specs = model.abstract_cache(B, S) # ShapeDtypeStructs + specs
+
+Layers are stacked (leading L axis) and driven by ``lax.scan`` so the HLO
+holds one copy of each distinct block (zamba2 uses a two-level scan:
+9 groups x 6 mamba layers + one weight-shared attention block applied as a
+scan-constant).  Remat policy is configurable per step builder.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import hint
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    chunked_softmax_xent,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    init_norm,
+)
+from repro.models.moe import init_moe, moe_ffn
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def specs_of(init_fn, *args):
+    """Capture the spec tree of an init function without allocating."""
+    box = {}
+
+    def f(key):
+        params, specs = init_fn(key, *args)
+        box["specs"] = specs
+        return params
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["specs"]
+
+
+def stack_specs(specs, n_axes: int = 1):
+    """Prepend scan axes (replicated) to every PartitionSpec leaf."""
+    pre = (None,) * n_axes
+    return jax.tree.map(lambda s: P(*pre, *s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def stacked_init(init_fn, key, n: int, *args):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args)[0])(keys)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+# --------------------------------------------------------------------------
+# dense / MoE / MLA transformer (also audio + vlm backbones)
+# --------------------------------------------------------------------------
+
+
+# int8 KV cache for GQA decode (halves cache HBM; per-(token, kv-head)
+# symmetric scales; dryrun variant "kvint8")
+KV_CACHE_QUANT = False
+
+
+class TransformerLM:
+    """Families: dense, moe (incl. MLA), audio (embeds in), vlm (patch+text)."""
+
+    def __init__(self, cfg: ArchConfig, remat: str = "full"):
+        self.cfg = cfg
+        self.remat = remat
+        self.n_scanned = cfg.n_layers - (cfg.moe.first_dense if cfg.moe else 0)
+        self.n_dense_pre = cfg.moe.first_dense if cfg.moe else 0
+
+    # ------------------------------------------------------------ params
+    def _init_attn(self, key):
+        if self.cfg.attention == "mla":
+            return attn.init_mla(key, self.cfg)
+        return attn.init_attention(key, self.cfg)
+
+    def _init_block(self, key, moe_layer: bool):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        a, a_s = self._init_attn(ks[0])
+        n1, n1_s = init_norm(cfg, cfg.d_model)
+        n2, n2_s = init_norm(cfg, cfg.d_model)
+        params = {"ln1": n1, "ln2": n2, "attn": a}
+        specs = {"ln1": n1_s, "ln2": n2_s, "attn": a_s}
+        if moe_layer:
+            m, m_s = init_moe(ks[1], cfg)
+            params["moe"], specs["moe"] = m, m_s
+        else:
+            m, m_s = init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff,
+                              cfg.param_dtype)
+            params["mlp"], specs["mlp"] = m, m_s
+        return params, specs
+
+    def _build(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        emb, emb_s = init_embed(ks[0], cfg)
+        fln, fln_s = init_norm(cfg, cfg.d_model)
+        moe_layer = cfg.moe is not None
+        blocks = stacked_init(
+            lambda k: self._init_block(k, moe_layer), ks[1], self.n_scanned)
+        block_specs = stack_specs(
+            specs_of(lambda k: self._init_block(k, moe_layer)))
+        params = {"embed": emb, "blocks": blocks, "final_norm": fln}
+        specs = {"embed": emb_s, "blocks": block_specs, "final_norm": fln_s}
+        if self.n_dense_pre:
+            pre = [self._init_block(k, False)
+                   for k in jax.random.split(ks[2], self.n_dense_pre)]
+            params["pre_blocks"] = [p for p, _ in pre]
+            specs["pre_blocks"] = [s for _, s in pre]
+        return params, specs
+
+    def init(self, key):
+        return self._build(key)[0]
+
+    def abstract(self):
+        box = {}
+
+        def f(key):
+            params, specs = self._build(key)
+            box["specs"] = specs
+            return params
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, box["specs"]
+
+    # ------------------------------------------------------------ embed
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "audio_stub":
+            h = batch["frame_embeds"].astype(cfg.compute_dtype)
+        elif cfg.frontend == "vision_stub":
+            text = embed_tokens(params["embed"], batch["tokens"],
+                                cfg.compute_dtype)
+            patches = batch["patch_embeds"].astype(cfg.compute_dtype)
+            h = jnp.concatenate([patches, text], axis=1)
+        else:
+            h = embed_tokens(params["embed"], batch["tokens"],
+                             cfg.compute_dtype)
+        return hint(h, "dp", "act_seq", None)
+
+    # ------------------------------------------------------------ blocks
+    def _block_fwd(self, p, h, positions, kv_out: bool = False,
+                   moe_layer: bool | None = None):
+        cfg = self.cfg
+        moe_layer = (cfg.moe is not None) if moe_layer is None else moe_layer
+        a_in = apply_norm(cfg, p["ln1"], h)
+        # megatron_sp: re-gather the full sequence ONCE here so the flash
+        # scan loops below stay collective-free (no-op otherwise)
+        a_in = hint(a_in, "dp", None, None)
+        if cfg.attention == "mla":
+            a_out, kv = attn.mla_forward(cfg, p["attn"], a_in, positions,
+                                         kv_out=kv_out)
+        else:
+            a_out, kv = attn.gqa_forward(cfg, p["attn"], a_in, positions,
+                                         kv_out=kv_out)
+        h = hint(h + a_out, "dp", "act_seq", None)
+        m_in = apply_norm(cfg, p["ln2"], h)
+        if moe_layer and "moe" in p:
+            f_out, aux = moe_ffn(cfg, p["moe"], m_in)
+        else:
+            f_out, aux = apply_mlp(cfg, p["mlp"], m_in), 0.0
+        h = hint(h + f_out, "dp", "act_seq", None)
+        return h, aux, kv
+
+    def _pre_fwd(self, params, h, positions, kv_out: bool = False):
+        """Leading dense layers (deepseek-v2 style), applied exactly once."""
+        aux = jnp.zeros((), jnp.float32)
+        kvs = []
+        for p in params.get("pre_blocks", []):
+            h, a, kv = self._block_fwd(p, h, positions, kv_out=kv_out,
+                                       moe_layer=False)
+            aux = aux + a
+            kvs.append(kv)
+        return h, aux, kvs
+
+    def _stack_fwd(self, params, h, positions, collect_kv: bool = False):
+        body0 = functools.partial(self._block_fwd)
+
+        def body(carry, p):
+            h, aux = carry
+            h2, aux2, kv = body0(p, h, positions, kv_out=collect_kv)
+            return (h2, aux + aux2), kv
+
+        aux = jnp.zeros((), jnp.float32)
+        (h, aux), kvs = jax.lax.scan(
+            _remat(body, self.remat), (h, aux), params["blocks"])
+        return h, aux, kvs
+
+    # ------------------------------------------------------------ train
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        B, S = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, aux0, _ = self._pre_fwd(params, h, positions)
+        h, aux, _ = self._stack_fwd(params, h, positions)
+        aux = aux + aux0
+        h = apply_norm(cfg, params["final_norm"], h)
+        loss, metrics = chunked_softmax_xent(
+            h, params["embed"]["head"], batch["labels"])
+        metrics["aux_loss"] = aux
+        return loss + aux, metrics
+
+    # ------------------------------------------------------------ serve
+    def abstract_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        L = self.n_scanned + self.n_dense_pre
+        dt = cfg.compute_dtype
+        bdp = None if batch == 1 else "dp"
+        sp = "all" if batch == 1 else "sp"
+        if KV_CACHE_QUANT and cfg.attention == "gqa":
+            K, hd = cfg.n_kv_heads, cfg.head_dim
+            cache = {
+                "k": jax.ShapeDtypeStruct((L, batch, max_seq, K, hd),
+                                          jnp.int8),
+                "v": jax.ShapeDtypeStruct((L, batch, max_seq, K, hd),
+                                          jnp.int8),
+                "k_scale": jax.ShapeDtypeStruct((L, batch, max_seq, K),
+                                                jnp.float32),
+                "v_scale": jax.ShapeDtypeStruct((L, batch, max_seq, K),
+                                                jnp.float32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            specs = {"k": P(None, bdp, sp, None, None),
+                     "v": P(None, bdp, sp, None, None),
+                     "k_scale": P(None, bdp, sp, None),
+                     "v_scale": P(None, bdp, sp, None),
+                     "pos": P()}
+            return cache, specs
+        if cfg.attention == "mla":
+            m = cfg.mla
+            cache = {
+                "ckv": jax.ShapeDtypeStruct((L, batch, max_seq,
+                                             m.kv_lora_rank), dt),
+                "krope": jax.ShapeDtypeStruct((L, batch, max_seq,
+                                               m.qk_rope_head_dim), dt),
+            }
+            specs = {"ckv": P(None, bdp, sp, None),
+                     "krope": P(None, bdp, sp, None)}
+        else:
+            K, hd = cfg.n_kv_heads, cfg.head_dim
+            cache = {
+                "k": jax.ShapeDtypeStruct((L, batch, max_seq, K, hd), dt),
+                "v": jax.ShapeDtypeStruct((L, batch, max_seq, K, hd), dt),
+            }
+            specs = {"k": P(None, bdp, sp, None, None),
+                     "v": P(None, bdp, sp, None, None)}
+        cache["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        specs["pos"] = P()
+        return cache, specs
+
+    def init_cache(self, batch: int, max_seq: int):
+        shapes, _ = self.abstract_cache(batch, max_seq)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def prefill(self, params, batch):
+        """Process a full prompt; returns (last-token logits, cache)."""
+        cfg = self.cfg
+        h = self._embed(params, batch)
+        B, S = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        h, _, pre_kvs = self._pre_fwd(params, h, positions, kv_out=True)
+        h, aux, kvs = self._stack_fwd(params, h, positions, collect_kv=True)
+        if pre_kvs:
+            kvs = _concat_pre(pre_kvs, kvs)
+        h = apply_norm(cfg, params["final_norm"], h)
+        logits = h[:, -1].astype(jnp.float32) @ \
+            params["embed"]["head"].astype(jnp.float32)
+        if cfg.attention == "mla":
+            cache = {"ckv": kvs[0], "krope": kvs[1]}
+        elif KV_CACHE_QUANT:
+            kq, ks = attn.quantize_kv(kvs[0])
+            vq, vs = attn.quantize_kv(kvs[1])
+            cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        else:
+            cache = {"k": kvs[0], "v": kvs[1]}
+        cache = {k: hint(v, None, "dp" if B > 1 else None,
+                         "sp" if B > 1 else "all", *([None] * (v.ndim - 3)))
+                 for k, v in cache.items()}
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return logits, cache
+
+    def _decode_step_q8(self, params, cache, h, pos):
+        cfg = self.cfg
+        assert not self.n_dense_pre, "q8 decode: no pre-block GQA archs"
+
+        def body(h, xs):
+            p, c1, c2, s1, s2 = xs
+            h, new = _decode_step_q8_layer(cfg, p, h, pos,
+                                           (c1, c2, s1, s2))
+            return h, new
+
+        h, (k, v, ks, vs) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        h = apply_norm(cfg, params["final_norm"], h)
+        logits = h[:, -1].astype(jnp.float32) @ \
+            params["embed"]["head"].astype(jnp.float32)
+        return logits, {"k": k, "v": v, "k_scale": ks, "v_scale": vs,
+                        "pos": pos + 1}
+
+    def decode_step(self, params, tokens, cache):
+        """tokens: (B, 1) int32.  Returns (logits (B, V), new cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        h = embed_tokens(params["embed"], tokens, cfg.compute_dtype)
+
+        n_pre = self.n_dense_pre
+        quant = KV_CACHE_QUANT and cfg.attention == "gqa"
+        if quant:
+            return self._decode_step_q8(params, cache, h, pos)
+        if cfg.attention == "mla":
+            layer_cache = (cache["ckv"], cache["krope"])
+        else:
+            layer_cache = (cache["k"], cache["v"])
+
+        def layer(h, p, c1, c2):
+            a_in = apply_norm(cfg, p["ln1"], h)
+            if cfg.attention == "mla":
+                a_out, c1, c2 = attn.mla_decode(cfg, p["attn"], a_in, pos,
+                                                c1, c2)
+            else:
+                a_out, c1, c2 = attn.gqa_decode(cfg, p["attn"], a_in, pos,
+                                                c1, c2)
+            h = h + a_out
+            m_in = apply_norm(cfg, p["ln2"], h)
+            if "moe" in p:
+                f_out, _ = moe_ffn(cfg, p["moe"], m_in)
+            else:
+                f_out = apply_mlp(cfg, p["mlp"], m_in)
+            return h + f_out, c1, c2
+
+        new1, new2 = [], []
+        for i, p in enumerate(params.get("pre_blocks", [])):
+            h, c1, c2 = layer(h, p, layer_cache[0][i], layer_cache[1][i])
+            new1.append(c1)
+            new2.append(c2)
+
+        def body(h, xs):
+            p, c1, c2 = xs
+            h, c1, c2 = layer(h, p, c1, c2)
+            return h, (c1, c2)
+
+        h, (s1, s2) = jax.lax.scan(
+            body, h, (params["blocks"],
+                      layer_cache[0][n_pre:], layer_cache[1][n_pre:]))
+        if new1:
+            s1 = jnp.concatenate([jnp.stack(new1), s1])
+            s2 = jnp.concatenate([jnp.stack(new2), s2])
+        h = apply_norm(cfg, params["final_norm"], h)
+        logits = h[:, -1].astype(jnp.float32) @ \
+            params["embed"]["head"].astype(jnp.float32)
+        if cfg.attention == "mla":
+            new_cache = {"ckv": s1, "krope": s2}
+        else:
+            new_cache = {"k": s1, "v": s2}
+        new_cache["pos"] = pos + 1
+        return logits, new_cache
+
+
+def _decode_step_q8_layer(cfg, p, h, pos, caches):
+    c1, c2, s1, s2 = caches
+    a_in = apply_norm(cfg, p["ln1"], h)
+    a_out, c1, c2, s1, s2 = attn.gqa_decode_q8(cfg, p["attn"], a_in, pos,
+                                               c1, c2, s1, s2)
+    h = h + a_out
+    m_in = apply_norm(cfg, p["ln2"], h)
+    if "moe" in p:
+        f_out, _ = moe_ffn(cfg, p["moe"], m_in)
+    else:
+        f_out = apply_mlp(cfg, p["mlp"], m_in)
+    return h + f_out, (c1, c2, s1, s2)
+
+
+def _concat_pre(pre_kvs, kvs):
+    """Stack per-pre-layer kv tuples and concatenate before the scanned kvs."""
+    a = jnp.concatenate([jnp.stack([kv[0] for kv in pre_kvs]), kvs[0]])
+    b = jnp.concatenate([jnp.stack([kv[1] for kv in pre_kvs]), kvs[1]])
+    return (a, b)

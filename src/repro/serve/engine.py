@@ -1,0 +1,120 @@
+"""Batched serving engine: prefill -> decode loop over fixed batch slots.
+
+A deliberately small continuous-batching core: requests queue up, get
+packed into the next prefill batch (padded to a common prompt length),
+then decode runs lockstep for all slots with per-slot stop handling.
+Session state (the KV cache) can be parked to / revived from the object
+store between turns (``park_session`` / ``resume_session``), which is the
+serving-side payoff of KV-pages-as-objects.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.store import ObjectStore
+from repro.serve import kvcache
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S,) int32
+    max_new: int = 16
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class Completion:
+    tokens: np.ndarray          # (<=max_new,) int32
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_seq: int = 512,
+                 greedy: bool = True, store: ObjectStore | None = None):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.store = store
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------ batch
+    def generate(self, reqs: list[Request]) -> list[Completion]:
+        if not reqs:
+            return []
+        B = len(reqs)
+        S = max(len(r.prompt) for r in reqs)
+        prompts = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, S - len(r.prompt):] = r.prompt  # left-pad
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(prompts)})
+        cache = self._pad_cache(cache)  # prompt-length -> max_seq slots
+        max_new = max(r.max_new for r in reqs)
+        out = np.full((B, max_new), -1, np.int32)
+        done = np.zeros(B, bool)
+        tok = self._pick(logits)
+        for t in range(max_new):
+            out[:, t] = np.where(done, -1, np.asarray(tok))
+            for i, r in enumerate(reqs):
+                if r.eos_id is not None and out[i, t] == r.eos_id:
+                    done[i] = True
+                if t + 1 >= r.max_new:
+                    done[i] = True
+            if done.all():
+                break
+            logits, cache = self._decode(self.params,
+                                         jnp.asarray(out[:, t:t + 1]),
+                                         cache)
+            tok = self._pick(logits)
+        comps = []
+        for i, r in enumerate(reqs):
+            toks = out[i][out[i] >= 0][:r.max_new]
+            comps.append(Completion(tokens=toks, steps=len(toks)))
+        self._last_cache = cache
+        return comps
+
+    def _pick(self, logits: jax.Array) -> jax.Array:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _pad_cache(self, cache):
+        """Grow sequence-axis leaves from prompt length to max_seq so
+        decode has slots to write into."""
+        out = dict(cache)
+        for key in ("k", "v", "ckv", "krope"):
+            if key in out:
+                arr = out[key]
+                pad = self.max_seq - arr.shape[2]
+                if pad > 0:
+                    widths = [(0, 0)] * arr.ndim
+                    widths[2] = (0, pad)
+                    out[key] = jnp.pad(arr, widths)
+        return out
+
+    # ------------------------------------------------------------ park
+    def park_session(self, session: str, cache=None) -> None:
+        if self.store is None:
+            raise RuntimeError("no store attached")
+        cache = self._last_cache if cache is None else cache
+        seq_axes = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            key = jax.tree_util.keystr(path)
+            if any(tag in key for tag in ("'k'", "'v'", "'ckv'", "'krope'")):
+                seq_axes[key] = 2  # (L, B, S, ...)
+        kvcache.cache_to_objects(self.store, jax.device_get(cache),
+                                 session, seq_axes=seq_axes)
+
+    def resume_session(self, session: str, batch: int):
+        if self.store is None:
+            raise RuntimeError("no store attached")
+        like = self.model.init_cache(batch, self.max_seq)
+        host = kvcache.objects_to_cache(self.store,
+                                        jax.device_get(like), session)
+        return jax.tree.map(jnp.asarray, host)

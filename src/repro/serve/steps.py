@@ -1,0 +1,15 @@
+"""Serving step builders: prefill (prompt -> cache) and decode (1 token)."""
+
+from __future__ import annotations
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model):
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+    return serve_step

@@ -1,0 +1,99 @@
+"""AdamW with decoupled weight decay, global-norm clipping, LR schedules.
+
+Optimizer moments are kept in ``cfg.opt_dtype`` (fp32 by default) with the
+same sharding as their parameters (ZeRO: the optimizer state is fully
+sharded because the params are).  Params may be bf16 (large archs): the
+update is computed in fp32 and cast back — the stochastic-rounding caveat
+is recorded in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: OptConfig) -> Callable[[jax.Array], jax.Array]:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+    return f
+
+
+def init_opt_state(params, opt_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, opt_dtype)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(param_shapes, opt_dtype=jnp.float32):
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, opt_dtype)  # noqa: E731
+    return {"m": jax.tree.map(sds, param_shapes),
+            "v": jax.tree.map(sds, param_shapes),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def opt_state_specs(param_specs):
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: OptConfig, grads, params, opt_state):
+    """Returns (new_params, new_opt_state, grad_norm)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg)(step)
+    b1, b2 = cfg.betas
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32) * scale
+        m1 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v1 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m1 / (1 - b1 ** step.astype(jnp.float32))
+        vhat = v1 / (1 - b2 ** step.astype(jnp.float32))
+        pf = p.astype(jnp.float32)
+        # decay only matrices (norms/biases are 1-D)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + wd * pf)
+        return pf.astype(p.dtype), m1.astype(m.dtype), v1.astype(v.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(g, p, m, v) for g, p, m, v
+           in zip(flat_g, flat_p, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,101 @@
+"""Train / eval step builders."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.train.optimizer import (
+    OptConfig,
+    abstract_opt_state,
+    adamw_update,
+    init_opt_state,
+    opt_state_specs,
+)
+
+
+def make_train_step(model, opt_cfg: OptConfig, *, microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` runs gradient accumulation: the global batch is
+    split on dim 0 and scanned sequentially, so live activations shrink
+    by the factor while the math stays identical (fp32 accumulators).
+    Required for SSM/hybrid multi-pod cells where sequence scans keep
+    activations batch-proportional (DESIGN.md §5).
+    """
+
+    def grad_fn(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state["params"], batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches,
+                                    x.shape[0] // microbatches,
+                                    *x.shape[1:]), batch)
+
+            def body(acc, b):
+                gsum, loss_sum, msum = acc
+                (loss, metrics), g = grad_fn(state["params"], b)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                msum = jax.tree.map(lambda a, x: a + x, msum, metrics)
+                return (gsum, loss_sum + loss, msum), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32),
+                state["params"])
+            m0 = jax.tree.map(lambda _: jnp.zeros((), jnp.float32),
+                              jax.eval_shape(
+                                  lambda: grad_fn(state["params"],
+                                                  jax.tree.map(
+                                                      lambda x: x[0], mb)
+                                                  )[0][1]))
+            (gsum, loss_sum, msum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32), m0), mb)
+            k = float(microbatches)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = loss_sum / k
+            metrics = jax.tree.map(lambda m: m / k, msum)
+
+        new_params, new_opt, gnorm = adamw_update(
+            opt_cfg, grads, state["params"], state["opt"])
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm,
+                        "step": new_opt["step"]})
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return dict(metrics, loss=loss)
+    return eval_step
+
+
+def init_train_state(model, key, opt_dtype=jnp.float32):
+    params = model.init(key)
+    return {"params": params, "opt": init_opt_state(params, opt_dtype)}
+
+
+def abstract_train_state(model, opt_dtype=jnp.float32):
+    """(state ShapeDtypeStructs, state PartitionSpecs) — no allocation."""
+    shapes, specs = model.abstract()
+    state_shapes = {"params": shapes,
+                    "opt": abstract_opt_state(shapes, opt_dtype)}
+    state_specs = {"params": specs, "opt": opt_state_specs(specs)}
+    return state_shapes, state_specs
+
+
+def metric_specs(metrics_tree: Any):
+    return jax.tree.map(lambda _: P(), metrics_tree)

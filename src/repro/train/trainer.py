@@ -1,0 +1,129 @@
+"""Training loop: object-store data path, checkpoint/restart, straggler
+detection, failure injection — the fault-tolerance layer of the system.
+
+Everything stateful lives in the object store (checkpoints AND the data
+order, which is a pure function of (seed, step)), so a restart from any
+committed step is bit-deterministic: same params, same optimizer moments,
+same next batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager, latest_step, restore
+from repro.core.store import ObjectStore
+from repro.data.fused_ingest import fused_batch
+from repro.data.pipeline import ObjectDataLoader
+from repro.train.optimizer import OptConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time tracker; flags steps slower than ``factor`` x EWMA.
+
+    On a real pod the flag triggers hedged reads / slot replacement; here
+    it feeds the loader's hedging and the trainer's log.
+    """
+
+    alpha: float = 0.1
+    factor: float = 2.0
+    ewma_s: float | None = None
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        if self.ewma_s is None:
+            self.ewma_s = dt
+            return False
+        slow = dt > self.factor * self.ewma_s
+        self.ewma_s = (1 - self.alpha) * self.ewma_s + self.alpha * dt
+        self.flagged += int(slow)
+        return slow
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_keep: int = 2
+    ckpt_tag: str = "train"
+    log_every: int = 10
+    packed_ingest: bool = False
+
+
+class Trainer:
+    def __init__(self, model, loader: ObjectDataLoader,
+                 store: ObjectStore, *,
+                 opt: OptConfig = OptConfig(),
+                 cfg: TrainerConfig = TrainerConfig(),
+                 step_fn: Callable | None = None,
+                 log: Callable[[str], None] = print):
+        self.model = model
+        self.loader = loader
+        self.store = store
+        self.cfg = cfg
+        self.opt = opt
+        self.log = log
+        base = step_fn or make_train_step(model, opt)
+        if cfg.packed_ingest:
+            base_inner = base
+            base = lambda s, b: base_inner(  # noqa: E731
+                s, fused_batch(b["tokens_packed"]))
+        self.train_step = jax.jit(base, donate_argnums=(0,))
+        self.ckpts = CheckpointManager(
+            store, tag=cfg.ckpt_tag, every_steps=cfg.ckpt_every,
+            keep=cfg.ckpt_keep)
+        self.straggler = StragglerMonitor()
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------ state
+    def init_or_restore(self, seed: int = 0) -> tuple[Any, int]:
+        """Fresh state, or the latest committed checkpoint if one exists."""
+        state = init_train_state(self.model, jax.random.PRNGKey(seed),
+                                 self.model.cfg.opt_dtype)
+        step = latest_step(self.store, tag=self.cfg.ckpt_tag)
+        if step is None:
+            return state, 0
+        like = jax.tree.map(np.asarray, state)
+        restored, manifest = restore(self.store, like, step=step,
+                                     tag=self.cfg.ckpt_tag)
+        self.log(f"[trainer] restored step {step} "
+                 f"(loader resumes at {manifest['extra'].get('loader_step')})")
+        state = jax.tree.map(jax.numpy.asarray, restored)
+        return state, step
+
+    # ------------------------------------------------------------ loop
+    def run(self, state=None, *, start_step: int | None = None,
+            on_step: Callable[[int], None] | None = None) -> Any:
+        if state is None:
+            state, start = self.init_or_restore()
+            start_step = start if start_step is None else start_step
+        start_step = start_step or 0
+        self.loader.state.step = start_step
+
+        for step in range(start_step, self.cfg.total_steps):
+            t0 = time.perf_counter()
+            batch = self.loader.make_batch(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            state, metrics = self.train_step(state, batch)
+            metrics = jax.tree.map(float, jax.device_get(metrics))
+            dt = time.perf_counter() - t0
+            slow = self.straggler.observe(dt)
+            rec = dict(metrics, step=step + 1, wall_s=dt, straggler=slow)
+            self.history.append(rec)
+            if (step + 1) % self.cfg.log_every == 0 or slow:
+                self.log(f"[trainer] step {step + 1} "
+                         f"loss={metrics['loss']:.4f} "
+                         f"{dt * 1000:.0f}ms" + (" STRAGGLER" if slow else ""))
+            self.ckpts.maybe_save(state, step + 1,
+                                  extra={"loader_step": step + 1})
+            if on_step is not None:
+                on_step(step + 1)
+        self.ckpts.wait()
+        return state

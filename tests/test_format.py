@@ -1,0 +1,82 @@
+"""Block format / codec properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import format as fmt
+from repro.core import objclass as oc
+
+
+@given(st.integers(1, 24), st.integers(0, 2000))
+@settings(max_examples=30, deadline=None)
+def test_bitpack_roundtrip(bits, n):
+    rng = np.random.default_rng(bits * 1000 + n)
+    v = rng.integers(0, 1 << bits, n).astype(np.uint32)
+    words = fmt.bitpack_encode(v, bits)
+    assert words.shape == (-(-n // 32) if n else 0, bits)
+    out = fmt.bitpack_decode(words, bits, n)
+    assert np.array_equal(out, v)
+
+
+def test_bitpack_rejects_overflow():
+    with pytest.raises(ValueError):
+        fmt.bitpack_encode(np.array([8], np.uint32), 3)
+
+
+@given(st.sampled_from(["none", "zlib", "bitpack12"]),
+       st.integers(1, 300))
+@settings(max_examples=20, deadline=None)
+def test_block_roundtrip_col(codec, n):
+    rng = np.random.default_rng(n)
+    table = {
+        "a": rng.integers(0, 4000, n).astype(np.int32),
+        "b": rng.normal(size=(n, 3)).astype(np.float32),
+    }
+    codecs = {"a": codec} if codec != "none" else {}
+    blob = fmt.encode_block(table, codecs=codecs)
+    out = fmt.decode_block(blob)
+    assert np.array_equal(out["a"], table["a"])
+    assert np.allclose(out["b"], table["b"])
+
+
+def test_block_projection_reads_subset():
+    table = {"x": np.arange(10, dtype=np.int64),
+             "y": np.ones((10, 2), np.float32)}
+    blob = fmt.encode_block(table)
+    out = fmt.decode_block(blob, columns=["y"])
+    assert set(out) == {"y"}
+    with pytest.raises(KeyError):
+        fmt.decode_block(blob, columns=["nope"])
+
+
+def test_layout_transform_roundtrip():
+    rng = np.random.default_rng(0)
+    table = {"x": rng.integers(0, 100, 50).astype(np.int32),
+             "y": rng.normal(size=50)}
+    col = fmt.encode_block(table, layout="col")
+    row = fmt.transform_layout(col, "row")
+    assert fmt.block_header(row)["layout"] == "row"
+    back = fmt.transform_layout(row, "col")
+    out = fmt.decode_block(back)
+    assert np.array_equal(out["x"], table["x"])
+    assert np.allclose(out["y"], table["y"])
+
+
+def test_zone_map_in_header():
+    blob = fmt.encode_block({"v": np.array([3.0, -1.0, 7.0])})
+    zm = fmt.block_header(blob)["zone_map"]
+    assert zm["v"] == [-1.0, 7.0]
+
+
+def test_select_packed_zero_decode_equals_decoded_select():
+    rng = np.random.default_rng(1)
+    S, n = 64, 20
+    toks = rng.integers(0, 5000, (n, S)).astype(np.int32)
+    blob = fmt.encode_block({"tokens": toks},
+                            codecs={"tokens": "bitpack13"})
+    res = oc.select_packed(blob, rows=(5, 12), col="tokens")
+    assert res["packed"].shape == (7, S // 32, 13)
+    dec = fmt.bitpack_decode(res["packed"].reshape(-1, 13), 13,
+                             7 * S).reshape(7, S)
+    assert np.array_equal(dec.astype(np.int32), toks[5:12])

@@ -1,0 +1,75 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the assignment: sweep shapes/dtypes and assert_allclose against the
+ref.py oracle for each kernel.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.format import bitpack_encode
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("bits", [1, 5, 8, 13, 16, 17, 20])
+@pytest.mark.parametrize("shape", [(1, 128), (4, 512), (2, 1024)])
+def test_bitunpack_sweep(bits, shape):
+    rng = np.random.default_rng(bits)
+    B, S = shape
+    toks = rng.integers(0, 1 << bits, (B, S)).astype(np.int32)
+    words = bitpack_encode(toks.ravel(), bits).reshape(B, S // 32, bits)
+    out = ops.bitunpack_tokens(jnp.asarray(words), bits=bits)
+    np.testing.assert_array_equal(np.asarray(out), toks)
+    r = ref.bitunpack_ref(jnp.asarray(words.reshape(-1, 4, bits)), bits)
+    np.testing.assert_array_equal(np.asarray(r).reshape(B, S), toks)
+
+
+@pytest.mark.parametrize("cmp", ["<", "<=", ">", ">=", "==", "!="])
+@pytest.mark.parametrize("n", [8192, 12345])
+def test_filter_agg_sweep(cmp, n):
+    rng = np.random.default_rng(hash(cmp) % 1000)
+    v = rng.normal(size=n).astype(np.float32)
+    f = rng.integers(0, 50, n).astype(np.float32)
+    got = ops.filter_aggregate(jnp.asarray(v), jnp.asarray(f), cmp, 25)
+    want = ref.filter_agg_ref(jnp.asarray(v), jnp.asarray(f), cmp, 25)
+    for k in want:
+        np.testing.assert_allclose(float(got[k]), float(want[k]),
+                                   rtol=3e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+@pytest.mark.parametrize("n", [8192, 9000, 40000])
+def test_block_agg_sweep(dtype, n):
+    rng = np.random.default_rng(n)
+    v = (rng.normal(size=n) * 10).astype(dtype)
+    m = rng.random(n) < 0.5
+    got = ops.masked_aggregate(jnp.asarray(v, jnp.float32),
+                               jnp.asarray(m))
+    want = ref.block_agg_ref(jnp.asarray(v, jnp.float32), jnp.asarray(m))
+    for k in want:
+        np.testing.assert_allclose(float(got[k]), float(want[k]),
+                                   rtol=3e-5, atol=1e-3)
+
+
+def test_filter_agg_empty_selection():
+    v = jnp.ones((8192,), jnp.float32)
+    f = jnp.zeros((8192,), jnp.float32)
+    got = ops.filter_aggregate(v, f, ">", 1.0)
+    assert float(got["count"]) == 0.0
+    assert float(got["sum"]) == 0.0
+
+
+def test_kernel_matches_host_codec_end_to_end():
+    """Object bytes -> select_packed -> device bitunpack == raw tokens."""
+    from repro.core import format as fmt
+    from repro.core import objclass as oc
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, 100_000, (16, 128)).astype(np.int32)
+    bits = fmt.bitpack_width(100_000 - 1)
+    blob = fmt.encode_block({"tokens": toks},
+                            codecs={"tokens": f"bitpack{bits}"})
+    res = oc.select_packed(blob, rows=(3, 11), col="tokens")
+    out = ops.bitunpack_tokens(jnp.asarray(res["packed"]),
+                               bits=int(res["bits"]))
+    np.testing.assert_array_equal(np.asarray(out), toks[3:11])

@@ -1,0 +1,143 @@
+"""Per-arch smoke tests + prefill/decode consistency.
+
+Every assigned architecture instantiates its reduced same-family config,
+runs one forward/train step on CPU, and asserts output shapes + finite
+values.  The decode-equivalence test asserts that prefill(S) followed by
+one decode step produces the same logits as prefill(S+1) — the KV-cache/
+recurrence correctness invariant.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.archs import build_model
+from repro.models.inputs import make_batch
+from repro.train.optimizer import OptConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+def seq_for(cfg):
+    if cfg.ssm is not None:
+        return 2 * min(cfg.ssm.chunk, 64)
+    return 64
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, seq_for(cfg))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(metrics["tokens"]) > 0
+
+
+@pytest.mark.parametrize("arch", ["yi_9b", "deepseek_v2_lite_16b",
+                                  "rwkv6_3b", "zamba2_2p7b"])
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg, remat="full")
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, OptConfig(warmup_steps=2)))
+    batch = make_batch(cfg, 2, seq_for(cfg))
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+    assert np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"])  # same batch: must drop
+    assert int(m2["step"]) == 2
+
+
+@pytest.mark.parametrize("arch", ["yi_9b", "starcoder2_7b", "granite_20b",
+                                  "deepseek_v2_lite_16b", "musicgen_large",
+                                  "rwkv6_3b", "zamba2_2p7b"])
+def test_prefill_decode_equals_full(arch):
+    cfg = get_config(arch, smoke=True)
+    if cfg.frontend == "audio_stub":
+        pytest.skip("audio stub decodes over token ids, prefill over "
+                    "embeds — no shared path to compare")
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(1))
+    S = seq_for(cfg)
+    batch = make_batch(cfg, 2, S)
+    toks = batch["tokens"]
+    n_dec = S - S // 2  # prefill half, decode the rest token by token
+
+    logits_full, _ = jax.jit(model.prefill)(
+        params, {"tokens": toks})
+    logits, cache = jax.jit(model.prefill)(
+        params, {"tokens": toks[:, :S // 2]})
+    pad = {}
+    for key in ("k", "v", "ckv", "krope"):
+        if key in cache:
+            widths = [(0, 0)] * cache[key].ndim
+            widths[2] = (0, n_dec)
+            pad[key] = jnp.pad(cache[key], widths)
+    cache = dict(cache, **pad)
+    decode = jax.jit(model.decode_step)
+    for t in range(S // 2, S):
+        logits, cache = decode(params, toks[:, t:t + 1], cache)
+    np.testing.assert_allclose(np.asarray(logits),
+                               np.asarray(logits_full),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_param_count_formula_close_to_actual():
+    for arch in ("yi_9b", "deepseek_v2_lite_16b", "rwkv6_3b"):
+        cfg = get_config(arch, smoke=True)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(p.shape))
+                     for p in jax.tree.leaves(params))
+        predicted = cfg.param_count()
+        assert abs(actual - predicted) / actual < 0.25, \
+            (arch, actual, predicted)
+
+
+def test_moe_routing_load_and_gates():
+    cfg = get_config("deepseek_v2_lite_16b", smoke=True)
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 64)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert float(metrics["aux_loss"]) > 0.0  # balance loss is live
+
+
+def test_int8_kv_decode_close_to_full_precision():
+    """kvint8 serving variant: logits stay within ~2% after a run of
+    decode steps (per-token/head symmetric quantization)."""
+    import repro.models.transformer as T
+
+    cfg = get_config("yi_9b", smoke=True)
+    model = build_model(cfg, remat="none")
+    params = model.init(jax.random.PRNGKey(1))
+    toks = make_batch(cfg, 2, 64)["tokens"]
+
+    def run(quant: bool):
+        T.KV_CACHE_QUANT = quant
+        try:
+            m = build_model(cfg, remat="none")
+            logits, cache = jax.jit(m.prefill)(params,
+                                               {"tokens": toks[:, :32]})
+            pad = {}
+            for key, v in cache.items():
+                if key == "pos":
+                    continue
+                widths = [(0, 0)] * v.ndim
+                widths[2] = (0, 16)
+                pad[key] = jnp.pad(v, widths)
+            cache = dict(cache, **pad)
+            dec = jax.jit(m.decode_step)
+            for t in range(32, 44):
+                logits, cache = dec(params, toks[:, t:t + 1], cache)
+            return np.asarray(logits)
+        finally:
+            T.KV_CACHE_QUANT = False
+
+    ref = run(False)
+    q8 = run(True)
+    rel = np.abs(q8 - ref).max() / max(np.abs(ref).max(), 1e-6)
+    assert rel < 0.05, rel

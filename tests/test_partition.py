@@ -1,0 +1,82 @@
+"""Partition planner properties (paper §3.1: object sizing tradeoff)."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.logical import Column, LogicalDataset, RowRange
+from repro.core.partition import ObjectMap, PartitionPolicy, plan_partition
+
+
+def dataset(n_rows, unit_rows, row_bytes=16):
+    return LogicalDataset(
+        "d", (Column("x", "uint8", (row_bytes,)),), n_rows, unit_rows)
+
+
+@given(st.integers(1, 5000), st.integers(1, 300),
+       st.integers(4, 64), st.integers(2, 8))
+@settings(max_examples=50, deadline=None)
+def test_partition_covers_exactly(n_rows, unit_rows, target_kb, max_mult):
+    ds = dataset(n_rows, unit_rows)
+    pol = PartitionPolicy(target_object_bytes=target_kb * 64,
+                          max_object_bytes=target_kb * 64 * max_mult)
+    omap = plan_partition(ds, pol)
+    # exact, gapless, ordered coverage (validated by ObjectMap too)
+    prev = 0
+    for e in omap:
+        assert e.row_start == prev and len(e) > 0
+        prev = e.row_stop
+    assert prev == n_rows
+    # object size cap holds whenever a unit fits the cap
+    max_rows = max(1, pol.max_object_bytes // ds.row_nbytes)
+    if unit_rows <= max_rows:
+        for e in omap:
+            assert len(e) * ds.row_nbytes <= pol.max_object_bytes \
+                or len(e) <= unit_rows
+
+
+@given(st.integers(1, 5000), st.integers(1, 300))
+@settings(max_examples=50, deadline=None)
+def test_lookup_matches_bruteforce(n_rows, unit_rows):
+    ds = dataset(n_rows, unit_rows)
+    omap = plan_partition(ds, PartitionPolicy(
+        target_object_bytes=1024, max_object_bytes=8192))
+    import numpy as np
+    rng = np.random.default_rng(n_rows)
+    for _ in range(5):
+        a = int(rng.integers(0, n_rows))
+        b = int(rng.integers(a + 1, n_rows + 1))
+        got = omap.lookup(RowRange(a, b))
+        rows = []
+        for e, local in got:
+            rows.extend(range(e.row_start + local.start,
+                              e.row_start + local.stop))
+        assert rows == list(range(a, b))
+
+
+def test_big_unit_is_split():
+    ds = dataset(100, 100)  # one 1600-byte unit
+    omap = plan_partition(ds, PartitionPolicy(target_object_bytes=256,
+                                              max_object_bytes=256))
+    assert omap.n_objects >= 100 * 16 // 256
+    for e in omap:
+        assert len(e) * ds.row_nbytes <= 256
+
+
+def test_objmap_serialization_roundtrip():
+    ds = dataset(1000, 10)
+    omap = plan_partition(ds, PartitionPolicy(target_object_bytes=512,
+                                              max_object_bytes=4096))
+    again = ObjectMap.from_bytes(omap.to_bytes())
+    assert again.n_objects == omap.n_objects
+    assert again.dataset.n_rows == 1000
+    assert [e.name for e in again] == [e.name for e in omap]
+
+
+def test_colocate_quantum_respected():
+    ds = dataset(256, 1)
+    pol = PartitionPolicy(target_object_bytes=16 * 64,
+                          max_object_bytes=16 * 256, colocate_rows=32)
+    omap = plan_partition(ds, pol)
+    for e in omap:
+        # no extent straddles a 32-row boundary unless it starts on one
+        if e.row_start % 32:
+            assert (e.row_stop - 1) // 32 == e.row_start // 32

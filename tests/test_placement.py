@@ -1,0 +1,78 @@
+"""CRUSH/HRW placement properties (paper §1: 'fully leveraging the
+existing load balancing, elasticity, and failure management')."""
+
+import collections
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import ClusterMap, movement_fraction, pg_delta
+
+osd_names = st.lists(st.integers(0, 999), min_size=3, max_size=24,
+                     unique=True).map(
+    lambda xs: tuple(f"osd.{i}" for i in xs))
+
+
+@given(osd_names, st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_acting_set_deterministic_and_distinct(osds, replicas):
+    cm = ClusterMap(osds, n_pgs=32, replicas=replicas)
+    for pg in range(cm.n_pgs):
+        a = cm.acting_set(pg)
+        assert a == cm.acting_set(pg)          # deterministic
+        assert len(a) == min(replicas, len(osds))
+        assert len(set(a)) == len(a)           # distinct OSDs
+
+
+@given(osd_names)
+@settings(max_examples=25, deadline=None)
+def test_failure_moves_only_affected_pgs(osds):
+    cm = ClusterMap(osds, n_pgs=64, replicas=2)
+    victim = osds[0]
+    cm2 = cm.mark_down(victim)
+    for pg, (old, new) in pg_delta(cm, cm2).items():
+        assert victim in old                  # only its PGs moved
+    for pg in range(cm.n_pgs):
+        assert victim not in cm2.acting_set(pg)
+
+
+@given(osd_names)
+@settings(max_examples=25, deadline=None)
+def test_add_osd_minimal_movement(osds):
+    cm = ClusterMap(osds, n_pgs=64, replicas=2)
+    cm2 = cm.add_osds(["osd.newcomer"])
+    # every remapped PG must now include the newcomer (nothing else
+    # reshuffles under rendezvous hashing)
+    for pg, (old, new) in pg_delta(cm, cm2).items():
+        assert "osd.newcomer" in new
+    # movement bounded ~ by the newcomer's capacity share (slack 3x)
+    frac = movement_fraction(cm, cm2)
+    assert frac <= 3.0 / (len(osds) + 1)
+
+
+def test_load_balance_roughly_uniform():
+    cm = ClusterMap(tuple(f"osd.{i}" for i in range(10)), n_pgs=1024,
+                    replicas=3)
+    load = collections.Counter()
+    for pg in range(cm.n_pgs):
+        for o in cm.acting_set(pg):
+            load[o] += 1
+    mean = sum(load.values()) / len(load)
+    for o, n in load.items():
+        assert 0.6 * mean < n < 1.4 * mean, (o, n, mean)
+
+
+def test_weights_bias_placement():
+    osds = tuple(f"osd.{i}" for i in range(8))
+    cm = ClusterMap(osds, n_pgs=2048, replicas=1,
+                    weights={"osd.0": 4.0})
+    load = collections.Counter(cm.acting_set(pg)[0]
+                               for pg in range(cm.n_pgs))
+    others = [load[o] for o in osds[1:]]
+    assert load["osd.0"] > 2 * max(others)
+
+
+def test_epoch_bumps():
+    cm = ClusterMap(("a", "b", "c"))
+    assert cm.mark_down("a").epoch == 1
+    assert cm.mark_down("a").mark_up("a").epoch == 2
+    assert cm.reweight("b", 2.0).epoch == 1

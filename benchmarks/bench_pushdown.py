@@ -1,0 +1,165 @@
+"""Perf trajectory export: writes ``BENCH_pushdown.json`` at the repo
+root so later PRs have hard numbers to compare against.
+
+Two sections:
+
+  queries  — filter→agg (and friends) through the batched pushdown
+             plane vs the client-side gather baseline: fabric ops
+             (round trips), client_rx bytes, request overhead bytes and
+             wall seconds per path.  The headline claim: a scan over N
+             objects on K OSDs costs <= K ops batched (seed paid >= N).
+  codec    — vectorized planar-bitpack encode/decode vs the historical
+             per-bit-loop reference (bit-exact, same layout): MB/s and
+             speedup on the ingest/scan hot path.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import format as fmt
+from repro.core.logical import Column, LogicalDataset
+from repro.core.partition import PartitionPolicy
+from repro.core.skyhook import Query, SkyhookDriver
+from repro.core.store import make_store
+from repro.core.vol import GlobalVOL
+
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_pushdown.json"
+N_ROWS = 200_000
+
+
+def _loop_bitpack_encode(values, bits):
+    """Historical per-bit-loop encoder, kept here as the codec baseline."""
+    v = np.ascontiguousarray(values, dtype=np.uint32).ravel()
+    n = v.size
+    n_groups = -(-n // 32) if n else 0
+    padded = np.zeros((n_groups * 32,), np.uint32)
+    padded[:n] = v
+    g = padded.reshape(n_groups, 32)
+    lane = np.arange(32, dtype=np.uint32)
+    out = np.zeros((n_groups, bits), np.uint32)
+    for k in range(bits):
+        out[:, k] = (((g >> np.uint32(k)) & np.uint32(1)) << lane).sum(
+            axis=1, dtype=np.uint32)
+    return out
+
+
+def _loop_bitpack_decode(words, bits, n):
+    w = np.ascontiguousarray(words, dtype=np.uint32).reshape(-1, bits)
+    lane = np.arange(32, dtype=np.uint32)
+    vals = np.zeros((w.shape[0], 32), np.uint32)
+    for k in range(bits):
+        vals |= (((w[:, k:k + 1] >> lane) & np.uint32(1))
+                 << np.uint32(k)).astype(np.uint32)
+    return vals.ravel()[:n]
+
+
+def _best_of(fn, repeat=3):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_codec(n=1_000_000, bits=17) -> dict:
+    rng = np.random.default_rng(0)
+    v = rng.integers(0, 1 << bits, n).astype(np.uint32)
+    words = fmt.bitpack_encode(v, bits)
+    assert np.array_equal(words, _loop_bitpack_encode(v, bits))
+    assert np.array_equal(fmt.bitpack_decode(words, bits, n), v)
+    enc_vec = _best_of(lambda: fmt.bitpack_encode(v, bits))
+    enc_loop = _best_of(lambda: _loop_bitpack_encode(v, bits))
+    dec_vec = _best_of(lambda: fmt.bitpack_decode(words, bits, n))
+    dec_loop = _best_of(lambda: _loop_bitpack_decode(words, bits, n))
+    mb = v.nbytes / 2**20
+    return {
+        "n_values": n, "bits": bits,
+        "encode_vec_s": enc_vec, "encode_loop_s": enc_loop,
+        "decode_vec_s": dec_vec, "decode_loop_s": dec_loop,
+        "encode_speedup": enc_loop / enc_vec,
+        "decode_speedup": dec_loop / dec_vec,
+        "encode_vec_MBps": mb / enc_vec, "decode_vec_MBps": mb / dec_vec,
+    }
+
+
+def bench_queries() -> dict:
+    ds = LogicalDataset(
+        "events",
+        (Column("e_pt", "float32"), Column("run", "int32"),
+         Column("hits", "int32")),
+        N_ROWS, 4096)
+    store = make_store(8, replicas=2)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=64 << 10,
+                                          max_object_bytes=1 << 20))
+    rng = np.random.default_rng(1)
+    vol.write(omap, {
+        "e_pt": rng.gamma(2.0, 20.0, N_ROWS).astype(np.float32),
+        "run": rng.integers(0, 100, N_ROWS).astype(np.int32),
+        "hits": rng.poisson(12, N_ROWS).astype(np.int32),
+    })
+    drv = SkyhookDriver(vol, n_workers=4)
+    queries = [
+        ("filter_agg", Query("events", filter=("run", "<", 50),
+                             aggregate=("mean", "e_pt"))),
+        ("selective_agg", Query("events", filter=("run", "==", 7),
+                                aggregate=("sum", "hits"))),
+        ("count_star", Query("events", aggregate=("count", "e_pt"))),
+    ]
+    out: dict = {"n_rows": N_ROWS, "n_objects": omap.n_objects,
+                 "n_osds": len(store.cluster.up_osds), "queries": {}}
+    for name, q in queries:
+        drv.execute(q)  # warm the zone-map cache + pools
+        r1 = r2 = None
+        s1 = s2 = None
+        for _ in range(3):  # best-of-3: container wall clocks are noisy
+            r1, t1 = drv.execute(q)
+            r2, t2 = drv.execute_client_side(q)
+            if s1 is None or t1.wall_s < s1.wall_s:
+                s1 = t1
+            if s2 is None or t2.wall_s < s2.wall_s:
+                s2 = t2
+        assert abs(r1 - r2) < 1e-6 * max(abs(r2), 1.0), (name, r1, r2)
+        out["queries"][name] = {
+            "pushdown": {"fabric_ops": s1.fabric_ops,
+                         "client_rx_bytes": s1.client_rx_bytes,
+                         "wall_s": s1.wall_s},
+            "client_side": {"fabric_ops": s2.fabric_ops,
+                            "client_rx_bytes": s2.client_rx_bytes,
+                            "wall_s": s2.wall_s},
+            "ops_reduction": s2.fabric_ops / max(s1.fabric_ops, 1),
+            "bytes_reduction":
+                s2.client_rx_bytes / max(s1.client_rx_bytes, 1),
+        }
+        assert s1.fabric_ops <= out["n_osds"], (name, s1.fabric_ops)
+    return out
+
+
+def main() -> None:
+    report = {"queries": bench_queries(), "codec": bench_codec()}
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    q = report["queries"]
+    print(f"BENCH_pushdown -> {OUT_PATH}")
+    print(f"  {q['n_objects']} objects on {q['n_osds']} OSDs")
+    for name, row in q["queries"].items():
+        print(f"  {name:<14} ops {row['pushdown']['fabric_ops']:>3} vs "
+              f"{row['client_side']['fabric_ops']:>3}  "
+              f"bytes x{row['bytes_reduction']:<8.1f} "
+              f"wall {row['pushdown']['wall_s'] * 1e3:.1f}ms vs "
+              f"{row['client_side']['wall_s'] * 1e3:.1f}ms")
+    c = report["codec"]
+    print(f"  codec bitpack{c['bits']}: encode x{c['encode_speedup']:.1f} "
+          f"({c['encode_vec_MBps']:.0f} MB/s), "
+          f"decode x{c['decode_speedup']:.1f} "
+          f"({c['decode_vec_MBps']:.0f} MB/s) vs per-bit loop")
+
+
+if __name__ == "__main__":
+    main()

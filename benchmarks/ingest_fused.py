@@ -28,6 +28,13 @@ from repro.train.optimizer import OptConfig
 from repro.train.steps import init_train_state, make_train_step
 
 
+def _hlo_flops(compiled) -> float:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns a 1-elem list of dicts
+        ca = ca[0] if ca else {}
+    return ca.get("flops", 0)
+
+
 def main() -> None:
     store = make_store(6, replicas=2)
     vol = GlobalVOL(store)
@@ -66,9 +73,9 @@ def main() -> None:
     print("ingest_fused (B=16, S=256, vocab=100k -> 17-bit packing)")
     print(f"{'path':<8}{'batch_KB':>10}{'fetch_ms':>10}{'hlo_flops':>12}")
     print(f"{'plain':<8}{a_plain / 1024:>10.1f}{plain_fetch * 1e3:>10.1f}"
-          f"{c_plain.cost_analysis().get('flops', 0):>12.3e}")
+          f"{_hlo_flops(c_plain):>12.3e}")
     print(f"{'fused':<8}{a_fused / 1024:>10.1f}{packed_fetch * 1e3:>10.1f}"
-          f"{c_fused.cost_analysis().get('flops', 0):>12.3e}")
+          f"{_hlo_flops(c_fused):>12.3e}")
     print(f"input-bytes reduction: {a_plain / a_fused:.2f}x "
           f"(theoretical {64 / 17:.2f}x for 17-bit tokens+derived labels)")
     # numerical equivalence of the two steps

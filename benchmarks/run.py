@@ -15,6 +15,8 @@ SECTIONS = [
     ("ingest_fused", "paper §2.2: codec offload on the train input path"),
     ("recovery", "failure management + elastic resize"),
     ("roofline", "dry-run roofline table (reads cached cell records)"),
+    ("bench_pushdown", "perf trajectory: writes BENCH_pushdown.json "
+                       "(fabric ops / bytes / wall_s + codec micro-bench)"),
 ]
 
 

@@ -49,8 +49,48 @@ def bitpack_width(max_value: int) -> int:
     return max(1, int(max_value).bit_length())
 
 
+# (swap distance, mask) pairs for the 5 butterfly stages of a 32x32
+# bit-matrix transpose (Hacker's Delight §7-3): stage j exchanges the
+# masked j-bit sub-blocks between rows k and k+j.
+_BUTTERFLY = ((16, 0x0000FFFF), (8, 0x00FF00FF), (4, 0x0F0F0F0F),
+              (2, 0x33333333), (1, 0x55555555))
+
+
+def _bit_transpose32(a: np.ndarray) -> np.ndarray:
+    """Vectorized 32x32 bit-matrix transpose over the leading axis.
+
+    ``a`` is (G, 32) uint32; returns (G, 32) uint32 with
+    ``out[:, i] bit j == a[:, j] bit i``.  Five masked shift-swap
+    stages over the whole array — no per-bit Python loop, and the
+    working set is just the (G, 32) matrix itself.
+    """
+    if not a.size:
+        return a.copy()
+    at = a.T.copy()                              # (32, G): G contiguous;
+    # always a private buffer — the butterfly XORs in place and must
+    # never scribble on the caller's array (a.T can alias it when G==1)
+    for j, m in _BUTTERFLY:
+        m = np.uint32(m)
+        # rows with (k & j) == 0 are the first j of every 2j-row block,
+        # so each stage is a pure reshape — contiguous views, no gathers
+        g = at.reshape(-1, 2, j, at.shape[-1])   # (pairs, lo|hi, j, G)
+        lo, hi = g[:, 0], g[:, 1]
+        # swap the high-bit block of the lo rows with the low-bit block
+        # of the hi rows: [[A,B],[C,D]] -> [[A,C],[B,D]] at every scale
+        t = ((lo >> np.uint32(j)) ^ hi) & m
+        hi ^= t
+        lo ^= t << np.uint32(j)
+    return at.T
+
+
 def bitpack_encode(values: np.ndarray, bits: int) -> np.ndarray:
-    """(n,) uint32-able -> (ceil(n/32), bits) uint32, planar layout."""
+    """(n,) uint32-able -> (ceil(n/32), bits) uint32, planar layout.
+
+    Each 32-value group is one 32x32 bit matrix; the planar encoding is
+    exactly its transpose, done via :func:`_bit_transpose32` (word
+    planes >= ``bits`` are all-zero and dropped).  Bit-exact with the
+    historical per-bit-loop implementation, minus the Python loop.
+    """
     v = np.ascontiguousarray(values, dtype=np.uint32).ravel()
     if v.size and int(v.max()) >= (1 << bits):
         raise ValueError(f"value {int(v.max())} needs more than {bits} bits")
@@ -59,23 +99,19 @@ def bitpack_encode(values: np.ndarray, bits: int) -> np.ndarray:
     padded = np.zeros((n_groups * 32,), np.uint32)
     padded[:n] = v
     g = padded.reshape(n_groups, 32)                       # (G, 32)
-    lane = np.arange(32, dtype=np.uint32)
-    out = np.zeros((n_groups, bits), np.uint32)
-    for k in range(bits):
-        out[:, k] = (((g >> np.uint32(k)) & np.uint32(1)) << lane).sum(
-            axis=1, dtype=np.uint32)
-    return out
+    return np.ascontiguousarray(_bit_transpose32(g)[:, :bits])
 
 
 def bitpack_decode(words: np.ndarray, bits: int, n: int) -> np.ndarray:
-    """(G, bits) uint32 -> (n,) uint32."""
+    """(G, bits) uint32 -> (n,) uint32.
+
+    Inverse planar transform = the same 32x32 bit transpose with the
+    missing (all-zero) word planes restored.  No per-bit Python loop.
+    """
     w = np.ascontiguousarray(words, dtype=np.uint32).reshape(-1, bits)
-    lane = np.arange(32, dtype=np.uint32)
-    vals = np.zeros((w.shape[0], 32), np.uint32)
-    for k in range(bits):
-        vals |= (((w[:, k:k + 1] >> lane) & np.uint32(1))
-                 << np.uint32(k)).astype(np.uint32)
-    return vals.ravel()[:n]
+    full = np.zeros((w.shape[0], 32), np.uint32)
+    full[:, :bits] = w
+    return _bit_transpose32(full).ravel()[:n]
 
 
 # --------------------------------------------------------------------------
@@ -97,14 +133,21 @@ def _encode_column(a: np.ndarray, codec: str) -> bytes:
     raise ValueError(f"unknown codec {codec!r}")
 
 
-def _decode_column(buf: bytes, codec: str, dtype: str,
+def _decode_column(buf, codec: str, dtype: str,
                    shape: tuple[int, ...]) -> np.ndarray:
+    """Decode one column buffer (bytes or memoryview).
+
+    Codec ``none`` is zero-copy: the returned (read-only) array aliases
+    the block's buffer instead of materializing a private copy — the
+    scan hot path never duplicates raw column bytes.
+    """
     n = int(np.prod(shape, dtype=np.int64)) if shape else 0
     if codec == "none":
-        return np.frombuffer(buf, dtype=dtype).reshape(shape).copy()
+        return np.frombuffer(buf, dtype=dtype).reshape(shape)
     if codec == "zlib":
+        # decompress already yields a fresh buffer; alias it, no copy
         return np.frombuffer(zlib.decompress(buf), dtype=dtype).reshape(
-            shape).copy()
+            shape)
     if codec.startswith("bitpack"):
         bits = int(codec[len("bitpack"):])
         words = np.frombuffer(buf, dtype=np.uint32)
@@ -187,10 +230,11 @@ def decode_block(blob: bytes,
     off = 8 + hlen
     out: dict[str, np.ndarray] = {}
     if header["layout"] == "col":
+        view = memoryview(blob)  # zero-copy column slicing
         for c, blen in zip(header["columns"], header["lens"]):
             if columns is None or c["name"] in columns:
                 out[c["name"]] = _decode_column(
-                    blob[off:off + blen], c["codec"], c["dtype"],
+                    view[off:off + blen], c["codec"], c["dtype"],
                     tuple(c["shape"]))
             off += blen
     else:

@@ -251,26 +251,58 @@ def pipeline_decomposable(ops: list[ObjOp]) -> bool:
     return all(get_impl(o.name).decomposable for o in ops)
 
 
+# ops whose column needs are fully described by a single "col" param
+_SINGLE_COL_OPS = frozenset({"filter", "agg", "median", "quantile_sketch"})
+# ops that touch no columns at all (pure row-range slicing)
+_COL_FREE_OPS = frozenset({"select"})
+
+
+def required_columns(ops: list[ObjOp]) -> list[str] | None:
+    """Minimal column set a pipeline needs decoded, or None for "all".
+
+    The whole pipeline is analyzed — not just a leading ``project`` — so
+    a filter→agg scan decodes only the filter and aggregate columns.
+    Returns None (decode everything) when the pipeline's *output* is the
+    full table (table-out tail with no projection) or when it contains
+    an op we cannot analyze (e.g. ``recompress``), which keeps results
+    bit-identical to the full-decode path in every case.
+    """
+    if not ops:
+        return None
+    needed: set[str] = set()
+    have_project = False
+    for o in ops:
+        if o.name in _COL_FREE_OPS:
+            continue
+        if o.name == "project":
+            needed.update(o.params["cols"])
+            have_project = True
+            continue
+        if o.name in _SINGLE_COL_OPS:
+            needed.add(o.params["col"])
+            continue
+        return None  # unknown/pass-through op: be conservative
+    tail = get_impl(ops[-1].name)
+    if tail.table_out and not have_project:
+        return None  # output carries every column: decode all
+    return sorted(needed)
+
+
 def run_pipeline(blob: bytes, ops: list[ObjOp]) -> Any:
     """Execute a pipeline against one object's block, server-side.
 
     Returns either an encoded table block (table-out pipelines) or a
-    partial (dict of small ndarrays) for aggregate tails.  Projection is
-    pushed into block decoding so unneeded columns are never materialized
-    (col layout).
+    partial (dict of small ndarrays) for aggregate tails.  Column
+    pruning is computed from the *whole* pipeline (filter cols + agg /
+    median / sketch cols + projection — :func:`required_columns`) and
+    pushed into block decoding, so a filter→agg scan never decodes
+    untouched columns (col layout).
     """
     if ops and ops[0].name == "select_packed":
         if len(ops) != 1:
             raise ValueError("select_packed must be the only op")
         return select_packed(blob, **ops[0].params)
-    cols = None
-    for o in ops:
-        if o.name == "project":
-            cols = list(o.params["cols"])
-            break
-        if o.name in ("filter", "agg", "median", "quantile_sketch"):
-            break  # needs the filter/agg columns too: decode all
-    table = fmt.decode_block(blob, columns=cols)
+    table = fmt.decode_block(blob, columns=required_columns(ops))
     out: Any = table
     for o in ops:
         impl = get_impl(o.name)

@@ -64,6 +64,7 @@ class QueryStats:
     storage_local_bytes: int
     pushdown: bool
     result_rows: int | None = None
+    fabric_ops: int = 0        # client<->OSD round trips the query cost
 
     @property
     def selectivity_gain(self) -> float:
@@ -80,7 +81,9 @@ class SkyhookWorker:
         self.worker_id = worker_id
 
     def run(self, names: list[str], ops: list[oc.ObjOp]) -> list[Any]:
-        return [self.store.exec(n, ops) for n in names]
+        """Forward the shard as batched per-OSD objclass requests (one
+        round trip per OSD this shard touches, not one per object)."""
+        return self.store.exec_batch(names, ops)
 
 
 class SkyhookDriver:
@@ -91,6 +94,19 @@ class SkyhookDriver:
         self.store = vol.store
         self.workers = [SkyhookWorker(self.store, i)
                         for i in range(n_workers)]
+        # persistent dispatch pool (mirrors ObjectStore._pool): no
+        # per-query executor churn on the hot path
+        self._pool = ThreadPoolExecutor(max_workers=n_workers,
+                                        thread_name_prefix="skyhook-drv")
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)
+
+    def __del__(self):
+        try:
+            self._pool.shutdown(wait=False)
+        except Exception:
+            pass
 
     # ------------------------------------------------------------ execute
     def execute(self, q: Query) -> tuple[Any, QueryStats]:
@@ -111,6 +127,7 @@ class SkyhookDriver:
             storage_local_bytes=after["local_bytes"] - before["local_bytes"],
             pushdown=vstats["pushdown"],
             result_rows=rows,
+            fabric_ops=after["ops"] - before["ops"],
         )
         return result, stats
 
@@ -120,8 +137,15 @@ class SkyhookDriver:
         combine exactly as GlobalVOL.query would."""
         plan = self.vol.plan(omap, ops)
         names = [n for n, _ in plan.sub_requests]
-        shards = [names[i::len(self.workers)]
-                  for i in range(len(self.workers))]
+        # shard by primary OSD (not round-robin) so each OSD's objects
+        # stay in ONE worker's batch: the whole query costs <= K
+        # batched requests for K OSDs regardless of worker count
+        by_osd: dict[str, list[str]] = {}
+        for n in names:
+            by_osd.setdefault(self.store.cluster.primary(n), []).append(n)
+        shards: list[list[str]] = [[] for _ in self.workers]
+        for j, (_, group) in enumerate(sorted(by_osd.items())):
+            shards[j % len(self.workers)].extend(group)
 
         rewritten = False
         if ops and ops[-1].name == "median" and q.allow_approx:
@@ -140,10 +164,13 @@ class SkyhookDriver:
         else:
             sub_ops = ops
 
-        with ThreadPoolExecutor(max_workers=len(self.workers)) as pool:
-            parts_nested = list(pool.map(
+        if self.store.io_simulated():  # workers overlap simulated I/O
+            parts_nested = list(self._pool.map(
                 lambda wn: wn[0].run(wn[1], sub_ops),
                 zip(self.workers, shards)))
+        else:  # compute-bound: threads only add GIL contention
+            parts_nested = [w.run(s, sub_ops)
+                            for w, s in zip(self.workers, shards)]
         partials = [p for ps in parts_nested for p in ps]
 
         if not ops or tail.table_out:
@@ -194,5 +221,6 @@ class SkyhookDriver:
             objects_touched=omap.n_objects, objects_pruned=0,
             client_rx_bytes=after["client_rx"] - before["client_rx"],
             storage_local_bytes=after["local_bytes"] - before["local_bytes"],
-            pushdown=False, result_rows=rows)
+            pushdown=False, result_rows=rows,
+            fabric_ops=after["ops"] - before["ops"])
         return result, stats

@@ -6,10 +6,23 @@ failure, peering/recovery — follow Ceph.  The accounting (client<->OSD
 bytes vs OSD-local bytes processed) is what the paper's pushdown claims
 are measured against in ``benchmarks/``.
 
+Batched data plane: ``exec_batch(names, ops)`` groups objects by their
+primary OSD and issues ONE objclass request per OSD, so a scan over N
+objects on K OSDs costs K fabric ops (and K request overheads) instead
+of N.  ``ops`` may be a single pipeline shared by all objects or one
+pipeline per object (``GlobalVOL.read`` uses per-object row ranges).
+Every client<->OSD round trip is charged ``PER_REQUEST_OVERHEAD_BYTES``
+into ``Fabric.overhead_bytes`` — the request-amplification cost that
+batching amortizes.  All scatter/gather paths share one persistent
+executor (``ObjectStore._pool``) instead of building a thread pool per
+call.
+
 Failure model: ``fail_osd`` marks an OSD down (its data is *gone*, as a
 disk loss); ``recover`` re-replicates every object that lost a replica
 from a surviving copy, on the new cluster map.  Reads and objclass execs
-transparently fail over to the next replica in the acting set.
+transparently fail over to the next replica in the acting set; in a
+batch, failed objects are re-grouped onto their next untried replica and
+retried as new (batched) requests.
 """
 
 from __future__ import annotations
@@ -18,10 +31,16 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Iterable
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
 
 from repro.core.objclass import ObjOp, run_pipeline
 from repro.core.placement import ClusterMap, pg_delta
+
+# fixed cost modeled for one client<->OSD round trip (headers, framing,
+# dispatch) — what per-object fan-out pays N times and a batch pays once
+PER_REQUEST_OVERHEAD_BYTES = 128
 
 
 @dataclasses.dataclass
@@ -33,7 +52,9 @@ class Fabric:
     replica_bytes: int = 0      # OSD -> OSD primary-copy fan-out
     recovery_bytes: int = 0     # OSD -> OSD re-replication
     local_bytes: int = 0        # bytes processed inside OSDs (pushdown)
-    ops: int = 0
+    ops: int = 0                # client<->OSD round trips (requests)
+    overhead_bytes: int = 0     # per-request fixed cost (ops * 128 B)
+    xattr_ops: int = 0          # metadata (xattr) lookups
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -42,6 +63,7 @@ class Fabric:
         self.client_tx = self.client_rx = 0
         self.replica_bytes = self.recovery_bytes = 0
         self.local_bytes = self.ops = 0
+        self.overhead_bytes = self.xattr_ops = 0
 
 
 class OSDDown(RuntimeError):
@@ -95,6 +117,26 @@ class OSD:
         blob = self.get(name)
         return run_pipeline(blob, ops), len(blob)
 
+    def exec_cls_batch(
+            self, items: Sequence[tuple[str, list[ObjOp]]]) -> list[Any]:
+        """One batched objclass request: run each (name, pipeline) item
+        against local data.  The per-request latency is paid ONCE for
+        the whole batch — that is the round-trip amortization batching
+        buys.  Per-item failures come back as ``ObjectNotFound`` values
+        (not raises) so the rest of the batch still completes.
+        """
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        out: list[Any] = []
+        for name, ops in items:
+            with self.lock:
+                blob = self.data.get(name)
+            if blob is None:
+                out.append(ObjectNotFound(name))
+            else:
+                out.append((run_pipeline(blob, ops), len(blob)))
+        return out
+
     def nbytes(self) -> int:
         with self.lock:
             return sum(len(b) for b in self.data.values())
@@ -124,11 +166,43 @@ class ObjectStore:
         self.fabric = Fabric()
         self._lock = threading.Lock()
         self._nic = threading.Lock()
+        # persistent scatter/gather executor for exec_batch/exec_many —
+        # no per-call ThreadPoolExecutor churn
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(8, len(self.osds)),
+            thread_name_prefix="store-io")
+        # hedged reads get their own small persistent pool: an abandoned
+        # straggler parks on a worker for its full latency and must not
+        # starve exec_batch dispatch on the main pool
+        self._hedge_pool = ThreadPoolExecutor(
+            max_workers=4, thread_name_prefix="store-hedge")
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False)
+        self._hedge_pool.shutdown(wait=False)
+
+    def __del__(self):  # release pool threads when the store dies
+        try:
+            self.close()
+        except Exception:
+            pass
 
     def _client_xfer(self, nbytes: int) -> None:
         if self.client_bw:
             with self._nic:  # one NIC: transfers serialize
                 time.sleep(nbytes / self.client_bw)
+
+    def _account_request(self) -> None:
+        """One client<->OSD round trip: an op + its fixed overhead."""
+        self.fabric.ops += 1
+        self.fabric.overhead_bytes += PER_REQUEST_OVERHEAD_BYTES
+
+    def io_simulated(self) -> bool:
+        """True when requests actually *wait* (NIC/disk bandwidth or OSD
+        latency is modeled).  Only then is thread fan-out worth it —
+        pure in-process compute runs faster sequentially (GIL)."""
+        return bool(self.client_bw or self.disk_bw
+                    or any(o.latency_s for o in self.osds.values()))
 
     # ------------------------------------------------------------ helpers
     def _acting(self, name: str) -> tuple[str, ...]:
@@ -149,7 +223,7 @@ class ObjectStore:
         Ceph's primary-copy replication."""
         acting = self._acting(name)
         self.fabric.client_tx += len(blob)
-        self.fabric.ops += 1
+        self._account_request()
         self._client_xfer(len(blob))
         for i, osd_id in enumerate(acting):
             self._osd(osd_id).put(name, blob, xattr)
@@ -163,7 +237,7 @@ class ObjectStore:
             try:
                 blob = self._osd(osd_id).get(name)
                 self.fabric.client_rx += len(blob)
-                self.fabric.ops += 1
+                self._account_request()
                 self._client_xfer(len(blob))
                 return blob
             except (OSDDown, ObjectNotFound) as e:  # failover
@@ -172,20 +246,34 @@ class ObjectStore:
 
     def get_hedged(self, name: str, timeout_s: float) -> bytes:
         """Hedged read (straggler mitigation): fire the primary, and if it
-        does not answer within ``timeout_s``, race a replica."""
+        does not answer within ``timeout_s``, race a replica.
+
+        Uses the store's persistent executor (no pool churn, no leaked
+        straggler thread — the worker is reclaimed when the straggler
+        returns) and pays the same NIC accounting as every other read.
+        """
         acting = self._acting(name)
         if len(acting) == 1:
             return self.get(name)
-        pool = ThreadPoolExecutor(max_workers=1)
-        fut = pool.submit(self._osd(acting[0]).get, name)
+        fut = self._hedge_pool.submit(self._osd(acting[0]).get, name)
         try:
             blob = fut.result(timeout=timeout_s)
         except Exception:
-            blob = self._osd(acting[1]).get(name)
-        finally:
-            pool.shutdown(wait=False)  # don't block on the straggler
+            blob = None
+            for osd_id in acting[1:]:  # hedge down the acting set
+                try:
+                    blob = self._osd(osd_id).get(name)
+                    self._account_request()  # extra round trip
+                    break
+                except (OSDDown, ObjectNotFound):
+                    continue
+            if blob is None:
+                # no replica could serve: the slow primary is still the
+                # best (only) hope — wait it out like a plain get()
+                blob = fut.result()
         self.fabric.client_rx += len(blob)
-        self.fabric.ops += 1
+        self._account_request()
+        self._client_xfer(len(blob))
         return blob
 
     def exec(self, name: str, ops: list[ObjOp]) -> Any:
@@ -196,19 +284,102 @@ class ObjectStore:
         for osd_id in self._acting(name):
             try:
                 result, scanned = self._osd(osd_id).exec_cls(name, ops)
+                rx = _result_nbytes(result)
                 self.fabric.local_bytes += scanned
-                self.fabric.client_rx += _result_nbytes(result)
-                self.fabric.ops += 1
+                self.fabric.client_rx += rx
+                self._account_request()
+                self._client_xfer(rx)
                 return result
             except (OSDDown, ObjectNotFound) as e:
                 err = e
         raise err if err else ObjectNotFound(name)
 
+    def exec_batch(self, names: Iterable[str],
+                   ops: list[ObjOp] | Sequence[list[ObjOp]]) -> list[Any]:
+        """Batched objclass execution: ONE request per involved OSD.
+
+        Objects are grouped by their primary OSD and each group goes out
+        as a single ``exec_cls_batch`` round trip, so ``Fabric.ops``
+        grows with the number of OSDs touched, not the number of
+        objects.  ``ops`` is either one pipeline applied to every object
+        or a per-object sequence of pipelines (``len == len(names)``).
+
+        Failover: objects whose request failed (OSD down, replica
+        missing the object) are re-grouped onto their next untried
+        replica and retried as fresh batched requests; per-object
+        results are returned in input order, bit-identical to the
+        per-object ``exec`` path.
+        """
+        names = list(names)
+        if not names:
+            return []
+        if ops and isinstance(ops[0], (list, tuple)):
+            pipelines = [list(p) for p in ops]
+            if len(pipelines) != len(names):
+                raise ValueError(
+                    f"{len(pipelines)} pipelines for {len(names)} objects")
+        else:
+            pipelines = [list(ops)] * len(names)
+
+        results: list[Any] = [None] * len(names)
+        last_err: list[Exception | None] = [None] * len(names)
+        tried: list[set[str]] = [set() for _ in names]
+        pending = list(range(len(names)))
+
+        def run_group(osd_id: str, idxs: list[int]) -> list[tuple[int, Any]]:
+            items = [(names[i], pipelines[i]) for i in idxs]
+            try:
+                osd = self._osd(osd_id)
+                return list(zip(idxs, osd.exec_cls_batch(items)))
+            except OSDDown as e:  # whole request failed
+                return [(i, e) for i in idxs]
+
+        while pending:
+            groups: dict[str, list[int]] = {}
+            for i in pending:
+                acting = self._acting(names[i])
+                target = next(
+                    (o for o in acting if o not in tried[i]), None)
+                if target is None:  # replicas exhausted: mirror exec()
+                    raise last_err[i] or ObjectNotFound(names[i])
+                groups.setdefault(target, []).append(i)
+
+            ordered = sorted(groups.items())  # one order for dispatch
+            # AND result pairing below — keep them the same list
+            if len(ordered) == 1 or not self.io_simulated():
+                # pool fan-out only pays when requests block on
+                # simulated I/O; compute-bound groups run inline
+                outs = [run_group(osd_id, idxs)
+                        for osd_id, idxs in ordered]
+            else:
+                futs = [self._pool.submit(run_group, osd_id, idxs)
+                        for osd_id, idxs in ordered]
+                outs = [f.result() for f in futs]
+
+            pending = []
+            for (osd_id, _), pairs in zip(ordered, outs):
+                self._account_request()  # one round trip per OSD group
+                group_rx = 0
+                for i, r in pairs:
+                    tried[i].add(osd_id)
+                    if isinstance(r, Exception):
+                        last_err[i] = r
+                        pending.append(i)
+                        continue
+                    result, scanned = r
+                    self.fabric.local_bytes += scanned
+                    group_rx += _result_nbytes(result)
+                    results[i] = result
+                self.fabric.client_rx += group_rx
+                self._client_xfer(group_rx)
+        return results
+
     def exec_many(self, names: Iterable[str], ops: list[ObjOp],
                   workers: int = 8) -> list[Any]:
-        names = list(names)
-        with ThreadPoolExecutor(max_workers=max(1, workers)) as pool:
-            return list(pool.map(lambda n: self.exec(n, ops), names))
+        """Legacy fan-out entry point; now an alias for the batched
+        per-OSD plane (``workers`` is kept for API compatibility)."""
+        del workers
+        return self.exec_batch(names, ops)
 
     def delete(self, name: str) -> None:
         for osd_id in self.cluster.up_osds:
@@ -218,7 +389,12 @@ class ObjectStore:
                 osd.xattrs.pop(name, None)
 
     def exists(self, name: str) -> bool:
-        return any(name in self.osds[o].data for o in self.cluster.up_osds)
+        for o in self.cluster.up_osds:
+            osd = self.osds[o]
+            with osd.lock:  # writers mutate osd.data concurrently
+                if name in osd.data:
+                    return True
+        return False
 
     def list_objects(self, prefix: str = "") -> list[str]:
         seen: set[str] = set()
@@ -228,10 +404,15 @@ class ObjectStore:
         return sorted(seen)
 
     def xattr(self, name: str) -> dict:
+        """Metadata lookup (one round trip, counted in ``xattr_ops`` —
+        clients should cache zone maps per cluster epoch, see
+        ``GlobalVOL``)."""
+        self.fabric.xattr_ops += 1
         for osd_id in self._acting(name):
             osd = self.osds[osd_id]
-            if name in osd.xattrs:
-                return osd.xattrs[name]
+            with osd.lock:  # writers mutate osd.xattrs concurrently
+                if name in osd.xattrs:
+                    return dict(osd.xattrs[name])
         return {}
 
     # ------------------------------------------------------------ failures
@@ -289,11 +470,7 @@ def _result_nbytes(result: Any) -> int:
     if isinstance(result, (bytes, bytearray)):
         return len(result)
     if isinstance(result, dict):
-        import numpy as np
-        n = 0
-        for v in result.values():
-            n += np.asarray(v).nbytes
-        return n
+        return sum(np.asarray(v).nbytes for v in result.values())
     return 64  # scalar-ish
 
 

@@ -6,6 +6,18 @@ sub-requests using the ObjectMap, scatter/gathers against the store, and
 performs *global* optimizations (object pruning via zone maps, parallel
 dispatch, decomposable-op pushdown planning).
 
+Read/query sub-requests flow through ``ObjectStore.exec_batch`` — one
+batched objclass request per primary OSD — so fabric ops scale with the
+number of OSDs, not the number of objects.  Planning consults an
+epoch-keyed client-side zone-map cache instead of issuing one xattr
+lookup per (object x filter) per query; the cache is invalidated (a)
+wholesale whenever the cluster-map epoch bumps (failure / resize — the
+acting sets and surviving xattrs may have changed), and (b) per object
+when this client rewrites it (``write`` refreshes the object's zone
+map).  Same-epoch rewrites by *other* clients are not observed (no
+cross-client coherence protocol); multi-writer deployments need an
+xattr version tag — see ROADMAP "Open items".
+
 ``LocalVOL`` is the storage-side plugin: it decides the *physical*
 representation of each object (layout row/col, per-column codec) from
 local information, executes objclass pipelines, and adapts layout to the
@@ -99,6 +111,28 @@ class GlobalVOL:
         self.store = store
         self.local = local or LocalVOL()
         self.workers = workers
+        # client-side zone-map cache, keyed by cluster-map epoch: one
+        # xattr lookup per object per epoch instead of one per
+        # (object x filter) per query
+        self._zm_cache: dict[str, dict] = {}
+        self._zm_epoch: int = -1
+
+    def _pin_epoch(self) -> None:
+        """Invalidate the zone-map cache if the cluster map moved; pin
+        it to the current epoch (the single invalidation rule, shared by
+        the read side and by cache-on-write)."""
+        epoch = self.store.cluster.epoch
+        if epoch != self._zm_epoch:  # failure/resize: invalidate all
+            self._zm_cache.clear()
+            self._zm_epoch = epoch
+
+    def _zone_map(self, name: str) -> dict:
+        self._pin_epoch()
+        zm = self._zm_cache.get(name)
+        if zm is None:
+            zm = self.store.xattr(name).get("zone_map", {})
+            self._zm_cache[name] = zm
+        return zm
 
     # ------------------------------------------------------------ create
     def create(self, ds: LogicalDataset,
@@ -134,6 +168,9 @@ class GlobalVOL:
             return len(blob)
 
         subs = omap.lookup(rows)
+        # pin the cache to the current epoch so the zone maps we are
+        # about to cache-on-write survive the first read-side lookup
+        self._pin_epoch()
 
         def write_one(sub) -> int:
             extent, local_rows = sub
@@ -142,9 +179,11 @@ class GlobalVOL:
                                      glob.stop - rows.start]
                     for k, v in table.items()}
             blob = self.local.encode(part)
+            zm = fmt.zone_map(part)
             self.store.put(extent.name, blob,
-                           xattr={"zone_map": fmt.zone_map(part),
+                           xattr={"zone_map": zm,
                                   "rows": [glob.start, glob.stop]})
+            self._zm_cache[extent.name] = zm  # keep the cache fresh
             return len(blob)
 
         w = workers or self.workers
@@ -157,21 +196,20 @@ class GlobalVOL:
     def read(self, omap: ObjectMap, rows: RowRange,
              columns: list[str] | None = None) -> dict[str, np.ndarray]:
         """Gather a row range; per-object select+project run storage-side
-        so only requested rows/columns move."""
+        so only requested rows/columns move.  The per-object pipelines go
+        out as one batched request per OSD (``exec_batch``)."""
         subs = omap.lookup(rows)
-
-        def read_one(sub):
-            extent, local = sub
+        names, pipelines = [], []
+        for extent, local in subs:
             pipeline = [oc.op("select", rows=(local.start, local.stop))]
             if columns is not None:
                 pipeline.append(oc.op("project", cols=list(columns)))
-            blob = self.store.exec(extent.name, pipeline)
+            names.append(extent.name)
+            pipelines.append(pipeline)
+        blobs = self.store.exec_batch(names, pipelines)
+        for _ in names:
             self.local.note_access("fetch")
-            return fmt.decode_block(blob)
-
-        with ThreadPoolExecutor(max_workers=self.workers) as pool:
-            parts = list(pool.map(read_one, subs))
-        return concat_tables(parts)
+        return concat_tables([fmt.decode_block(b) for b in blobs])
 
     # ------------------------------------------------------------ query
     def plan(self, omap: ObjectMap, ops: list[oc.ObjOp]) -> ReadPlan:
@@ -182,13 +220,14 @@ class GlobalVOL:
         keep, pruned = [], []
         for extent in omap:
             skip = False
-            for f in prunable:
-                zm = self.store.xattr(extent.name).get("zone_map", {})
-                rng = zm.get(f.params["col"])
-                if rng and _prunable(rng, f.params["cmp"],
-                                     f.params["value"]):
-                    skip = True
-                    break
+            if prunable:  # one cached zone-map fetch per object
+                zm = self._zone_map(extent.name)
+                for f in prunable:
+                    rng = zm.get(f.params["col"])
+                    if rng and _prunable(rng, f.params["cmp"],
+                                         f.params["value"]):
+                        skip = True
+                        break
             (pruned if skip else keep).append(extent.name)
         return ReadPlan(tuple((k, None) for k in keep), tuple(pruned),
                         pushdown)
@@ -217,8 +256,7 @@ class GlobalVOL:
         tail = oc.get_impl(ops[-1].name) if ops else None
 
         if ops and not tail.table_out and tail.combine is not None:
-            partials = self.store.exec_many(names, ops,
-                                            workers=self.workers)
+            partials = self.store.exec_batch(names, ops)
             for _ in names:
                 self.local.note_access("scan")
             result = oc.combine_partials(ops, partials)
@@ -226,12 +264,12 @@ class GlobalVOL:
             proj = [oc.op(o.name, **o.params) for o in ops[:-1]]
             col = ops[-1].params["col"]
             proj.append(oc.op("project", cols=[col]))
-            blobs = self.store.exec_many(names, proj, workers=self.workers)
+            blobs = self.store.exec_batch(names, proj)
             cols = [fmt.decode_block(b) for b in blobs]
             result = oc.median_exact(
                 [{col: c[col].ravel()} for c in cols], col)
         else:  # table-out pipeline: gather result tables
-            blobs = self.store.exec_many(names, ops, workers=self.workers)
+            blobs = self.store.exec_batch(names, ops)
             result = concat_tables([fmt.decode_block(b) for b in blobs])
 
         after = self.store.fabric.snapshot()
@@ -245,7 +283,7 @@ class GlobalVOL:
     def _column_bounds(self, omap: ObjectMap, col: str) -> tuple[float, float]:
         lo, hi = np.inf, -np.inf
         for extent in omap:
-            zm = self.store.xattr(extent.name).get("zone_map", {})
+            zm = self._zone_map(extent.name)
             if col in zm:
                 lo, hi = min(lo, zm[col][0]), max(hi, zm[col][1])
         if not np.isfinite(lo):

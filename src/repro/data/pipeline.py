@@ -107,10 +107,11 @@ class ObjectDataLoader:
 
     # ------------------------------------------------------------ fetch
     def _fetch_rows(self, rows: np.ndarray) -> dict[str, np.ndarray]:
-        """Group sorted rows into per-object contiguous runs and fetch each
-        run with one storage-side select (packed or decoded)."""
-        parts: list[np.ndarray] = []
-        packed_parts: list[np.ndarray] = []
+        """Group sorted rows into per-object contiguous runs, then fetch
+        ALL runs with one batched objclass request per OSD (packed or
+        decoded) — the train input path pays fabric ops per OSD, not per
+        run."""
+        runs: list[tuple] = []                   # (extent, run, lo, hi)
         i = 0
         while i < len(rows):
             subs = self.omap.lookup(RowRange(int(rows[i]),
@@ -122,37 +123,48 @@ class ObjectDataLoader:
             run = rows[i:j]
             lo = int(run[0] - extent.row_start)
             hi = int(run[-1] - extent.row_start) + 1
-            if self.packed:
-                res = self._exec(extent.name, [oc.op(
-                    "select_packed", rows=(lo, hi), col="tokens")])
-                words = res["packed"]          # (hi-lo, S/32, bits)
-                keep = (run - extent.row_start - lo).astype(np.int64)
-                packed_parts.append(words[keep])
-            else:
-                blob = self._exec(extent.name, [
-                    oc.op("select", rows=(lo, hi)),
-                    oc.op("project", cols=["tokens"])])
-                from repro.core import format as fmt
-                tab = fmt.decode_block(blob)
-                keep = (run - extent.row_start - lo).astype(np.int64)
-                parts.append(tab["tokens"][keep])
+            runs.append((extent, run, lo, hi))
             i = j
 
         if self.packed:
-            words = np.concatenate(packed_parts, axis=0)
-            return {"tokens_packed": words}
+            pipelines = [[oc.op("select_packed", rows=(lo, hi),
+                                col="tokens")]
+                         for _, _, lo, hi in runs]
+        else:
+            pipelines = [[oc.op("select", rows=(lo, hi)),
+                          oc.op("project", cols=["tokens"])]
+                         for _, _, lo, hi in runs]
+        results = self._exec_runs([e.name for e, _, _, _ in runs],
+                                  pipelines)
+
+        if self.packed:
+            packed_parts = []
+            for (extent, run, lo, _), res in zip(runs, results):
+                words = res["packed"]          # (hi-lo, S/32, bits)
+                keep = (run - extent.row_start - lo).astype(np.int64)
+                packed_parts.append(words[keep])
+            return {"tokens_packed": np.concatenate(packed_parts, axis=0)}
+
+        from repro.core import format as fmt
+        parts = []
+        for (extent, run, lo, _), blob in zip(runs, results):
+            tab = fmt.decode_block(blob)
+            keep = (run - extent.row_start - lo).astype(np.int64)
+            parts.append(tab["tokens"][keep])
         toks = np.concatenate(parts, axis=0)
         labels = np.roll(toks, -1, axis=1)
         labels[:, -1] = -1  # no target across sequence boundary
         return {"tokens": toks, "labels": labels}
 
-    def _exec(self, name: str, ops):
+    def _exec_runs(self, names: list[str], pipelines: list[list]):
         if self.hedge_timeout_s is not None:
-            # hedged read of the raw object, then local pipeline: used when
-            # an OSD is straggling (exec would block on the slow primary).
-            blob = self.vol.store.get_hedged(name, self.hedge_timeout_s)
-            return oc.run_pipeline(blob, ops)
-        return self.vol.store.exec(name, ops)
+            # hedged read of the raw objects, then local pipelines: used
+            # when an OSD is straggling (exec would block on the slow
+            # primary).
+            return [oc.run_pipeline(
+                self.vol.store.get_hedged(n, self.hedge_timeout_s), p)
+                for n, p in zip(names, pipelines)]
+        return self.vol.store.exec_batch(names, pipelines)
 
     # ------------------------------------------------------------ iterate
     def make_batch(self, step: int) -> dict[str, np.ndarray]:

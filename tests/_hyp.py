@@ -1,0 +1,40 @@
+"""Graceful-degrade shim for hypothesis (see requirements-dev.txt).
+
+When hypothesis is installed this re-exports ``given``, ``settings`` and
+``strategies as st`` untouched.  When it is missing, property tests
+degrade to per-test skips (via ``pytest.importorskip``) instead of
+killing collection of the whole module — the example-based tests in the
+same files still run.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+
+    class _StubStrategy:
+        """Chainable stand-in so module-level strategy definitions like
+        ``st.lists(...).map(...)`` still evaluate at import time."""
+
+        def __call__(self, *args, **kwargs):
+            return _StubStrategy()
+
+        def __getattr__(self, name):
+            return _StubStrategy()
+
+    st = _StubStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # (*args, **kwargs)-free signature so pytest does not try to
+            # inject the property arguments as fixtures
+            def skipper():
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = getattr(fn, "__name__", "property_test")
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

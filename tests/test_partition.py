@@ -1,6 +1,6 @@
 """Partition planner properties (paper §3.1: object sizing tradeoff)."""
 
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.logical import Column, LogicalDataset, RowRange
 from repro.core.partition import ObjectMap, PartitionPolicy, plan_partition

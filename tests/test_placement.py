@@ -3,7 +3,7 @@ existing load balancing, elasticity, and failure management')."""
 
 import collections
 
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.placement import ClusterMap, movement_fraction, pg_delta
 

@@ -1,27 +1,41 @@
 """Perf trajectory export: writes ``BENCH_pushdown.json`` at the repo
 root so later PRs have hard numbers to compare against.
 
-Two sections:
+Three sections:
 
   queries  — filter→agg (and friends) through the batched pushdown
              plane vs the client-side gather baseline: fabric ops
              (round trips), client_rx bytes, request overhead bytes and
-             wall seconds per path.  The headline claim: a scan over N
-             objects on K OSDs costs <= K ops batched (seed paid >= N).
+             wall seconds per path.  The headline claims: a scan over N
+             objects on K OSDs costs <= K ops batched (seed paid >= N),
+             and a decomposable aggregate returns <= K partials
+             (client_rx O(K), per-OSD server-side combine).
+  ingest   — the symmetric write-plane claim: writing N objects over K
+             OSDs through ``put_batch`` costs exactly one put request
+             per primary OSD (the seed paid N), plus the batched
+             zone-map warm (<= K xattr requests for a fresh client).
   codec    — vectorized planar-bitpack encode/decode vs the historical
              per-bit-loop reference (bit-exact, same layout): MB/s and
              speedup on the ingest/scan hot path.
+
+Regression gate: when a committed ``BENCH_pushdown.json`` exists, the
+new ops / client_rx numbers must be no worse before the file is
+rewritten.  ``--smoke`` (or ``BENCH_SMOKE=1``) runs small shapes and
+asserts only the O(K) invariants — cheap enough for per-PR CI.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import sys
 import time
 
 import numpy as np
 
 from repro.core import format as fmt
+from repro.core import objclass as oc
 from repro.core.logical import Column, LogicalDataset
 from repro.core.partition import PartitionPolicy
 from repro.core.skyhook import Query, SkyhookDriver
@@ -31,6 +45,9 @@ from repro.core.vol import GlobalVOL
 OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_pushdown.json"
 N_ROWS = 200_000
+# small enough for per-PR CI, big enough that N objects > K OSDs (the
+# O(K) claims are vacuous when every object gets its own request)
+SMOKE_ROWS = 100_000
 
 
 def _loop_bitpack_encode(values, bits):
@@ -89,21 +106,21 @@ def bench_codec(n=1_000_000, bits=17) -> dict:
     }
 
 
-def bench_queries() -> dict:
+def bench_queries(n_rows: int = N_ROWS) -> dict:
     ds = LogicalDataset(
         "events",
         (Column("e_pt", "float32"), Column("run", "int32"),
          Column("hits", "int32")),
-        N_ROWS, 4096)
+        n_rows, 4096)
     store = make_store(8, replicas=2)
     vol = GlobalVOL(store)
     omap = vol.create(ds, PartitionPolicy(target_object_bytes=64 << 10,
                                           max_object_bytes=1 << 20))
     rng = np.random.default_rng(1)
     vol.write(omap, {
-        "e_pt": rng.gamma(2.0, 20.0, N_ROWS).astype(np.float32),
-        "run": rng.integers(0, 100, N_ROWS).astype(np.int32),
-        "hits": rng.poisson(12, N_ROWS).astype(np.int32),
+        "e_pt": rng.gamma(2.0, 20.0, n_rows).astype(np.float32),
+        "run": rng.integers(0, 100, n_rows).astype(np.int32),
+        "hits": rng.poisson(12, n_rows).astype(np.int32),
     })
     drv = SkyhookDriver(vol, n_workers=4)
     queries = [
@@ -113,7 +130,7 @@ def bench_queries() -> dict:
                                 aggregate=("sum", "hits"))),
         ("count_star", Query("events", aggregate=("count", "e_pt"))),
     ]
-    out: dict = {"n_rows": N_ROWS, "n_objects": omap.n_objects,
+    out: dict = {"n_rows": n_rows, "n_objects": omap.n_objects,
                  "n_osds": len(store.cluster.up_osds), "queries": {}}
     for name, q in queries:
         drv.execute(q)  # warm the zone-map cache + pools
@@ -139,14 +156,121 @@ def bench_queries() -> dict:
                 s2.client_rx_bytes / max(s1.client_rx_bytes, 1),
         }
         assert s1.fabric_ops <= out["n_osds"], (name, s1.fabric_ops)
+        # decomposable aggregates: one partial per OSD, client_rx O(K)
+        assert s1.client_rx_bytes <= out["n_osds"] * 64, \
+            (name, s1.client_rx_bytes)
     return out
 
 
+def bench_ingest(n_rows: int = N_ROWS) -> dict:
+    """The symmetric write plane: N objects over K OSDs in K put
+    requests (``put_batch``) vs the seed's one put per object, plus the
+    batched zone-map warm for a fresh client."""
+    ds = LogicalDataset(
+        "ingest",
+        (Column("e_pt", "float32"), Column("run", "int32")),
+        n_rows, 4096)
+    store = make_store(8, replicas=2)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=64 << 10,
+                                          max_object_bytes=1 << 20))
+    rng = np.random.default_rng(2)
+    table = {"e_pt": rng.gamma(2.0, 20.0, n_rows).astype(np.float32),
+             "run": rng.integers(0, 100, n_rows).astype(np.int32)}
+    n_osds = len(store.cluster.up_osds)
+    primaries = {store.cluster.primary(e.name) for e in omap}
+    assert omap.n_objects > n_osds  # N > K or the O(K) claim is vacuous
+
+    store.fabric.reset()
+    t0 = time.perf_counter()
+    nbytes = vol.write(omap, table)
+    wall_batched = time.perf_counter() - t0
+    batched = store.fabric.snapshot()
+    # THE invariant: one put request per primary OSD, <= K
+    assert batched["ops"] == len(primaries) <= n_osds, batched["ops"]
+
+    # seed baseline: one put per object (same blobs AND xattrs, read back
+    # off the OSDs — a bare re-put would clobber the stored zone maps and
+    # leave the warm section below measuring degenerate metadata)
+    names = omap.object_names()
+    prim = [store.osds[store.cluster.primary(n)] for n in names]
+    blobs = [o.data[n] for o, n in zip(prim, names)]
+    xats = [dict(o.xattrs[n]) for o, n in zip(prim, names)]
+    store.fabric.reset()
+    t0 = time.perf_counter()
+    for n, b, x in zip(names, blobs, xats):
+        store.put(n, b, x)
+    wall_per_obj = time.perf_counter() - t0
+    per_obj = store.fabric.snapshot()
+    assert per_obj["ops"] == omap.n_objects
+
+    # fresh client warms its zone-map cache in <= K metadata requests
+    fresh = GlobalVOL(store)
+    store.fabric.reset()
+    fresh.plan(omap, [oc.op("filter", col="run", cmp="<", value=50)])
+    warm_ops = store.fabric.xattr_ops
+    assert warm_ops <= n_osds, warm_ops
+
+    return {
+        "n_rows": n_rows, "n_objects": omap.n_objects, "n_osds": n_osds,
+        "bytes_written": nbytes,
+        "batched": {"fabric_ops": batched["ops"],
+                    "overhead_bytes": batched["overhead_bytes"],
+                    "wall_s": wall_batched},
+        "per_object": {"fabric_ops": per_obj["ops"],
+                       "overhead_bytes": per_obj["overhead_bytes"],
+                       "wall_s": wall_per_obj},
+        "ops_reduction": per_obj["ops"] / max(batched["ops"], 1),
+        "zone_map_warm_xattr_ops": warm_ops,
+    }
+
+
+def check_against_snapshot(report: dict, committed: dict) -> list[str]:
+    """Regression gate: ops / client_rx must be no worse than the
+    committed ``BENCH_pushdown.json`` (wall seconds are machine noise
+    and are not gated)."""
+    problems: list[str] = []
+    old_q = committed.get("queries", {}).get("queries", {})
+    for name, row in report["queries"]["queries"].items():
+        old = old_q.get(name)
+        if not old:
+            continue
+        for key in ("fabric_ops", "client_rx_bytes"):
+            new_v = row["pushdown"][key]
+            old_v = old["pushdown"][key]
+            if new_v > old_v:
+                problems.append(
+                    f"queries.{name}.pushdown.{key}: {new_v} > {old_v}")
+    old_ing = committed.get("ingest")
+    if old_ing:
+        new_ops = report["ingest"]["batched"]["fabric_ops"]
+        if new_ops > old_ing["batched"]["fabric_ops"]:
+            problems.append(
+                f"ingest.batched.fabric_ops: {new_ops} > "
+                f"{old_ing['batched']['fabric_ops']}")
+    return problems
+
+
 def main() -> None:
-    report = {"queries": bench_queries(), "codec": bench_codec()}
-    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    smoke = "--smoke" in sys.argv or os.environ.get("BENCH_SMOKE") == "1"
+    n_rows = SMOKE_ROWS if smoke else N_ROWS
+    codec_n = 100_000 if smoke else 1_000_000
+    report = {"queries": bench_queries(n_rows),
+              "ingest": bench_ingest(n_rows),
+              "codec": bench_codec(codec_n)}
+    if smoke:
+        print("bench_pushdown --smoke: O(K) invariants hold "
+              f"(scan ops <= K, ingest ops == primaries <= K, "
+              f"warm xattr ops <= K) at {n_rows} rows")
+    else:
+        if OUT_PATH.exists():
+            committed = json.loads(OUT_PATH.read_text())
+            problems = check_against_snapshot(report, committed)
+            assert not problems, "regression vs committed snapshot: " \
+                + "; ".join(problems)
+        OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+        print(f"BENCH_pushdown -> {OUT_PATH}")
     q = report["queries"]
-    print(f"BENCH_pushdown -> {OUT_PATH}")
     print(f"  {q['n_objects']} objects on {q['n_osds']} OSDs")
     for name, row in q["queries"].items():
         print(f"  {name:<14} ops {row['pushdown']['fabric_ops']:>3} vs "
@@ -154,6 +278,11 @@ def main() -> None:
               f"bytes x{row['bytes_reduction']:<8.1f} "
               f"wall {row['pushdown']['wall_s'] * 1e3:.1f}ms vs "
               f"{row['client_side']['wall_s'] * 1e3:.1f}ms")
+    ing = report["ingest"]
+    print(f"  ingest         ops {ing['batched']['fabric_ops']:>3} vs "
+          f"{ing['per_object']['fabric_ops']:>3} "
+          f"(x{ing['ops_reduction']:.1f} fewer requests), "
+          f"zone-map warm {ing['zone_map_warm_xattr_ops']} xattr ops")
     c = report["codec"]
     print(f"  codec bitpack{c['bits']}: encode x{c['encode_speedup']:.1f} "
           f"({c['encode_vec_MBps']:.0f} MB/s), "

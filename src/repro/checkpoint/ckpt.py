@@ -58,22 +58,29 @@ def save(store: ObjectStore, state: Any, step: int, *, tag: str = "train",
     manifest: dict = {"step": step, "tag": tag, "leaves": {},
                       "extra": extra or {}}
 
-    def put_leaf(item) -> tuple[str, dict]:
+    def plan_leaf(item) -> tuple[str, dict, list, list]:
         idx, (key, arr) = item
         raw = arr.tobytes()
         ds = _leaf_dataset(tag, step, idx, arr)
         omap = plan_partition(ds, policy)
-        for ext in omap:
-            store.put(ext.name, raw[ext.row_start:ext.row_stop])
-        return key, {"dtype": str(arr.dtype), "shape": list(arr.shape),
-                     "objects": [[e.name, e.row_start, e.row_stop]
-                                 for e in omap],
-                     "crc": zlib.crc32(raw)}
+        names = [e.name for e in omap]
+        blobs = [raw[e.row_start:e.row_stop] for e in omap]
+        meta = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                "objects": [[e.name, e.row_start, e.row_stop]
+                            for e in omap],
+                "crc": zlib.crc32(raw)}
+        return key, meta, names, blobs
 
-    with ThreadPoolExecutor(max_workers=workers) as pool:
-        for key, meta in pool.map(put_leaf,
-                                  enumerate(sorted(leaves.items()))):
-            manifest["leaves"][key] = meta
+    # ship each leaf's objects through the batched write plane — one
+    # put request per primary OSD per leaf instead of one per object —
+    # while holding at most ONE leaf's serialized blobs in memory
+    # (``workers`` kept for API compatibility; parallelism is the
+    # store's, per OSD group)
+    del workers
+    for key, meta, names, blobs in map(plan_leaf,
+                                       enumerate(sorted(leaves.items()))):
+        manifest["leaves"][key] = meta
+        store.put_batch(names, blobs)
 
     # commit record LAST — atomicity point
     store.put(f"ckpt/{tag}/step-{step}/.manifest",

@@ -53,6 +53,11 @@ class OpImpl:
     decomposable: bool
     table_in: bool = True                  # consumes a table (vs a partial)
     table_out: bool = True                 # emits a table (vs a partial)
+    # associative partials -> ONE partial (same shape as ``local``'s
+    # output).  Unlike ``combine`` (partials -> final result) a merge can
+    # run *on the OSD*, folding its local partials into a single partial
+    # per batched request — the server-side half of a two-level combine.
+    merge: Callable[[list], Any] | None = None
 
 
 _REGISTRY: dict[str, OpImpl] = {}
@@ -122,6 +127,22 @@ def _agg_local(table, col: str, fn: str):
     raise ValueError(fn)
 
 
+def _agg_merge(partials: list, fn: str, **_):
+    """Fold agg partials into ONE partial of the same shape (associative,
+    so OSD-merged partials re-merge/combine exactly like raw ones)."""
+    keys = set().union(*(p.keys() for p in partials))
+    out = {}
+    for k in keys:
+        vals = [p[k] for p in partials]
+        if k == "min":
+            out[k] = np.float64(min(vals))
+        elif k == "max":
+            out[k] = np.float64(max(vals))
+        else:  # sum / count accumulate
+            out[k] = np.float64(sum(vals))
+    return out
+
+
 def _agg_combine(partials: list, fn: str, **_):
     if not partials:  # everything pruned/filtered: identity element
         return {"sum": 0.0, "count": 0.0, "min": float("inf"),
@@ -164,6 +185,15 @@ def _qsketch_local(table, col: str, lo: float, hi: float, bins: int = 1024):
             "n": np.int64(a.size)}
 
 
+def _qsketch_merge(partials: list, **_):
+    """Histograms add; the merged sketch is shape-identical to a local
+    one, so sketches merged per OSD combine exactly like raw partials."""
+    return {"hist": np.sum([p["hist"] for p in partials],
+                           axis=0).astype(np.int32),
+            "lo": partials[0]["lo"], "hi": partials[0]["hi"],
+            "n": np.int64(sum(int(p["n"]) for p in partials))}
+
+
 def _qsketch_combine(partials: list, q: float = 0.5, **_):
     if not partials:
         return float("nan")
@@ -192,11 +222,13 @@ register("select", OpImpl(_select, None, decomposable=True))
 register("project", OpImpl(_project, None, decomposable=True))
 register("filter", OpImpl(_filter, None, decomposable=True))
 register("agg", OpImpl(
-    _agg_local, _agg_combine, decomposable=True, table_out=False))
+    _agg_local, _agg_combine, decomposable=True, table_out=False,
+    merge=_agg_merge))
 register("median", OpImpl(
     _median_local, None, decomposable=False, table_out=False))
 register("quantile_sketch", OpImpl(
-    _qsketch_local, _qsketch_combine, decomposable=True, table_out=False))
+    _qsketch_local, _qsketch_combine, decomposable=True, table_out=False,
+    merge=_qsketch_merge))
 register("recompress", OpImpl(_recompress, None, decomposable=True))
 
 
@@ -251,6 +283,27 @@ def pipeline_decomposable(ops: list[ObjOp]) -> bool:
     return all(get_impl(o.name).decomposable for o in ops)
 
 
+def pipeline_mergeable(ops: list[ObjOp]) -> bool:
+    """True when per-object partials can be folded server-side: the whole
+    pipeline is decomposable and the tail emits partials with an
+    associative ``merge`` — the precondition for the per-OSD combine
+    (one partial per OSD request instead of one per object)."""
+    if not ops:
+        return False
+    tail = get_impl(ops[-1].name)
+    return (pipeline_decomposable(ops) and not tail.table_out
+            and tail.combine is not None and tail.merge is not None)
+
+
+def merge_partials(ops: list[ObjOp], partials: list) -> Any:
+    """Server-side (per-OSD) fold: partials -> ONE same-shaped partial."""
+    tail = ops[-1]
+    impl = get_impl(tail.name)
+    if impl.merge is None:
+        raise ValueError(f"{tail.name} has no partial merge")
+    return impl.merge(partials, **tail.params)
+
+
 # ops whose column needs are fully described by a single "col" param
 _SINGLE_COL_OPS = frozenset({"filter", "agg", "median", "quantile_sketch"})
 # ops that touch no columns at all (pure row-range slicing)
@@ -296,7 +349,10 @@ def run_pipeline(blob: bytes, ops: list[ObjOp]) -> Any:
     pruning is computed from the *whole* pipeline (filter cols + agg /
     median / sketch cols + projection — :func:`required_columns`) and
     pushed into block decoding, so a filter→agg scan never decodes
-    untouched columns (col layout).
+    untouched columns (col layout).  Bitpack columns decode through the
+    Pallas kernel (``kernels/bitunpack``) when a jax device backend is
+    selected, with the numpy butterfly codec as the bit-exact fallback
+    (``format.set_bitunpack_backend``).
     """
     if ops and ops[0].name == "select_packed":
         if len(ops) != 1:

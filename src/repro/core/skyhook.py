@@ -80,9 +80,14 @@ class SkyhookWorker:
         self.store = store
         self.worker_id = worker_id
 
-    def run(self, names: list[str], ops: list[oc.ObjOp]) -> list[Any]:
+    def run(self, names: list[str], ops: list[oc.ObjOp],
+            combine: bool = False) -> list[Any]:
         """Forward the shard as batched per-OSD objclass requests (one
-        round trip per OSD this shard touches, not one per object)."""
+        round trip per OSD this shard touches, not one per object).
+        With ``combine`` the OSDs fold their partials server-side and
+        the worker relays one partial per OSD request."""
+        if combine:
+            return self.store.exec_combine(names, ops)
         return self.store.exec_batch(names, ops)
 
 
@@ -163,13 +168,16 @@ class SkyhookDriver:
             sub_ops = [o for o in ops[:-1]] + [oc.op("project", cols=[col])]
         else:
             sub_ops = ops
+        # decomposable aggregate tails combine per OSD: each worker's
+        # shard returns one partial per OSD it touches, O(K) client_rx
+        combine = bool(sub_ops) and oc.pipeline_mergeable(sub_ops)
 
         if self.store.io_simulated():  # workers overlap simulated I/O
             parts_nested = list(self._pool.map(
-                lambda wn: wn[0].run(wn[1], sub_ops),
+                lambda wn: wn[0].run(wn[1], sub_ops, combine),
                 zip(self.workers, shards)))
         else:  # compute-bound: threads only add GIL contention
-            parts_nested = [w.run(s, sub_ops)
+            parts_nested = [w.run(s, sub_ops, combine)
                             for w, s in zip(self.workers, shards)]
         partials = [p for ps in parts_nested for p in ps]
 

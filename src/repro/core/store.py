@@ -6,16 +6,35 @@ failure, peering/recovery — follow Ceph.  The accounting (client<->OSD
 bytes vs OSD-local bytes processed) is what the paper's pushdown claims
 are measured against in ``benchmarks/``.
 
-Batched data plane: ``exec_batch(names, ops)`` groups objects by their
-primary OSD and issues ONE objclass request per OSD, so a scan over N
-objects on K OSDs costs K fabric ops (and K request overheads) instead
-of N.  ``ops`` may be a single pipeline shared by all objects or one
-pipeline per object (``GlobalVOL.read`` uses per-object row ranges).
+Symmetric batched data plane: EVERY client<->OSD interaction goes
+through one per-OSD batch RPC, so fabric ops scale with the number of
+OSDs touched (K), never the number of objects (N):
+
+  * reads/scans — ``exec_batch(names, ops)`` groups objects by primary
+    OSD, ONE objclass request per OSD; ``ops`` may be a single shared
+    pipeline or one pipeline per object;
+  * aggregate scans — ``exec_combine(names, ops)`` additionally folds
+    partials *on* each OSD (the tail op's associative ``merge``) and
+    returns ONE partial per OSD, so ``client_rx`` is O(K) too;
+  * writes — ``put_batch(names, blobs, xattrs)`` groups sub-writes by
+    primary OSD (one request + one server-side replica fan-out per
+    object), with per-object failover inside the batch;
+  * metadata — ``list_zone_maps(names)`` fetches many objects' xattrs
+    in one request per OSD (one ``xattr_ops`` per request, not per
+    object).
+
+Every put stamps the object's xattr with a monotonic ``version`` tag;
+clients cache zone maps keyed by (epoch, version) and revalidate prune
+decisions against current versions, which closes the cross-client
+stale-zone-map hazard (see ``GlobalVOL.plan``).
+
 Every client<->OSD round trip is charged ``PER_REQUEST_OVERHEAD_BYTES``
 into ``Fabric.overhead_bytes`` — the request-amplification cost that
 batching amortizes.  All scatter/gather paths share one persistent
 executor (``ObjectStore._pool``) instead of building a thread pool per
-call.
+call, and skip thread fan-out entirely when no I/O is simulated
+(``io_simulated`` — pure compute runs faster sequentially under the
+GIL).
 
 Failure model: ``fail_osd`` marks an OSD down (its data is *gone*, as a
 disk loss); ``recover`` re-replicates every object that lost a replica
@@ -35,7 +54,8 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
-from repro.core.objclass import ObjOp, run_pipeline
+from repro.core.objclass import (
+    ObjOp, merge_partials, pipeline_mergeable, run_pipeline)
 from repro.core.placement import ClusterMap, pg_delta
 
 # fixed cost modeled for one client<->OSD round trip (headers, framing,
@@ -103,6 +123,38 @@ class OSD:
             if xattr is not None:
                 self.xattrs[name] = dict(xattr)
 
+    def put_batch(self, items: Sequence[tuple[str, bytes, dict | None]],
+                  stream: Callable[[int], None] | None = None,
+                  landed: Callable[[int], None] | None = None) -> None:
+        """One batched write request: store every (name, blob, xattr)
+        locally.  The per-request latency is paid ONCE for the whole
+        batch; per-blob disk time is still serialized (one disk).
+
+        ``stream`` models the arriving client byte stream: it is called
+        with each item's size just before that item's disk write (the
+        store passes its NIC-transfer hook), so the shared client NIC
+        serializes per sub-write instead of stalling behind one
+        monolithic transfer.  NIC and disk time stay additive per
+        sub-write — the same serial transport model as a single ``put``
+        — so batching cuts request count and per-request overhead, never
+        payload physics.  ``landed`` is called with each item's batch
+        index right after its disk write — the store hangs the
+        per-object replica fan-out off it, so replication starts per
+        object instead of waiting for the whole batch."""
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        for k, (name, blob, xattr) in enumerate(items):
+            if stream is not None:
+                stream(len(blob))
+            with self.lock:
+                if self.disk_bw:
+                    time.sleep(len(blob) / self.disk_bw)  # serial disk
+                self.data[name] = bytes(blob)
+                if xattr is not None:
+                    self.xattrs[name] = dict(xattr)
+            if landed is not None:
+                landed(k)
+
     def get(self, name: str) -> bytes:
         if self.latency_s:
             time.sleep(self.latency_s)
@@ -118,23 +170,60 @@ class OSD:
         return run_pipeline(blob, ops), len(blob)
 
     def exec_cls_batch(
-            self, items: Sequence[tuple[str, list[ObjOp]]]) -> list[Any]:
+            self, items: Sequence[tuple[str, list[ObjOp]]],
+            combine: bool = False) -> Any:
         """One batched objclass request: run each (name, pipeline) item
         against local data.  The per-request latency is paid ONCE for
         the whole batch — that is the round-trip amortization batching
         buys.  Per-item failures come back as ``ObjectNotFound`` values
         (not raises) so the rest of the batch still completes.
+
+        With ``combine=True`` the items must share one decomposable
+        pipeline whose tail has an associative ``merge``: the OSD folds
+        its local partials into ONE and returns a
+        ``(partial|None, n_found, scanned_bytes, missing_names)`` tuple
+        — a single partial leaves the OSD per request, not one per
+        object (the server-side half of the two-level combine).
         """
         if self.latency_s:
             time.sleep(self.latency_s)
-        out: list[Any] = []
-        for name, ops in items:
+        if not combine:
+            out: list[Any] = []
+            for name, ops in items:
+                with self.lock:
+                    blob = self.data.get(name)
+                if blob is None:
+                    out.append(ObjectNotFound(name))
+                else:
+                    out.append((run_pipeline(blob, ops), len(blob)))
+            return out
+        ops = items[0][1]
+        partials: list[Any] = []
+        missing: list[str] = []
+        scanned = 0
+        for name, _ in items:
             with self.lock:
                 blob = self.data.get(name)
             if blob is None:
-                out.append(ObjectNotFound(name))
-            else:
-                out.append((run_pipeline(blob, ops), len(blob)))
+                missing.append(name)
+                continue
+            partials.append(run_pipeline(blob, ops))
+            scanned += len(blob)
+        merged = merge_partials(ops, partials) if partials else None
+        return merged, len(partials), scanned, tuple(missing)
+
+    def list_xattrs(self, names: Sequence[str]) -> dict[str, dict]:
+        """One batched metadata request: the xattrs of every local object
+        among ``names`` (absent names are simply omitted).  Request
+        latency is paid once for the whole listing."""
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        out: dict[str, dict] = {}
+        for name in names:
+            with self.lock:
+                x = self.xattrs.get(name)
+            if x is not None:
+                out[name] = dict(x)
         return out
 
     def nbytes(self) -> int:
@@ -166,6 +255,10 @@ class ObjectStore:
         self.fabric = Fabric()
         self._lock = threading.Lock()
         self._nic = threading.Lock()
+        # monotonic write clock: every put stamps its object's xattr
+        # with a fresh ``version`` so ANY client can detect that a
+        # cached zone map is stale (cross-client coherence)
+        self._vclock = 0
         # persistent scatter/gather executor for exec_batch/exec_many —
         # no per-call ThreadPoolExecutor churn
         self._pool = ThreadPoolExecutor(
@@ -216,19 +309,162 @@ class ObjectStore:
             raise OSDDown(osd_id)
         return self.osds[osd_id]
 
+    def _next_version(self) -> int:
+        with self._lock:
+            self._vclock += 1
+            return self._vclock
+
+    def _next_targets(self, pending: list[int], names: list[str],
+                      tried: list[set],
+                      last_err: list | None = None,
+                      skipped: list[int] | None = None
+                      ) -> list[tuple[str, list[int]]]:
+        """Group pending item indices by their next untried acting OSD —
+        the shared regrouping step of every batched plane's failover
+        loop.  An item with no replicas left either raises its last
+        error (default, mirroring the per-object paths) or is appended
+        to ``skipped`` when the caller tolerates absence."""
+        groups: dict[str, list[int]] = {}
+        for i in pending:
+            acting = self._acting(names[i])
+            target = next((o for o in acting if o not in tried[i]), None)
+            if target is None:
+                if skipped is not None:
+                    skipped.append(i)
+                    continue
+                err = last_err[i] if last_err is not None else None
+                raise err or ObjectNotFound(names[i])
+            groups.setdefault(target, []).append(i)
+        # one order for dispatch AND result pairing — keep them the same
+        return sorted(groups.items())
+
+    def _dispatch_groups(self, ordered, run_group) -> list:
+        """Fan the per-OSD group requests out on the persistent pool —
+        but only when requests actually block on simulated I/O; compute-
+        bound groups run inline (threads just add GIL contention)."""
+        if len(ordered) == 1 or not self.io_simulated():
+            return [run_group(osd_id, idxs) for osd_id, idxs in ordered]
+        futs = [self._pool.submit(run_group, osd_id, idxs)
+                for osd_id, idxs in ordered]
+        return [f.result() for f in futs]
+
     # ------------------------------------------------------------ client IO
-    def put(self, name: str, blob: bytes, xattr: dict | None = None) -> None:
+    def put(self, name: str, blob: bytes, xattr: dict | None = None) -> int:
         """Replicated write: client -> primary -> (fan-out) replicas.
         Client pays one transfer; replica fan-out is server-side, matching
-        Ceph's primary-copy replication."""
+        Ceph's primary-copy replication.  The object's xattr is stamped
+        with a fresh monotonic ``version``, which is returned."""
+        version = self._next_version()
+        stamped = {**(xattr or {}), "version": version}
         acting = self._acting(name)
         self.fabric.client_tx += len(blob)
         self._account_request()
         self._client_xfer(len(blob))
         for i, osd_id in enumerate(acting):
-            self._osd(osd_id).put(name, blob, xattr)
+            self._osd(osd_id).put(name, blob, stamped)
             if i > 0:  # replica fan-out is OSD->OSD (cluster network),
                 self.fabric.replica_bytes += len(blob)  # not client bytes
+        return version
+
+    def put_batch(self, names: Iterable[str], blobs: Sequence[bytes],
+                  xattrs: Sequence[dict | None] | None = None) -> list[int]:
+        """Batched replicated write: ONE client request per primary OSD.
+
+        Sub-writes are grouped by their primary OSD and each group goes
+        out as a single ``OSD.put_batch`` round trip, so ingesting N
+        objects over K OSDs costs K fabric ops instead of N.  The
+        replica fan-out stays server-side per object (entry OSD -> rest
+        of the acting set, charged to ``replica_bytes``).  Objects whose
+        group request failed (entry OSD down mid-batch) are re-grouped
+        onto their next untried replica and retried as fresh batched
+        requests — per-object failover inside the batch, mirroring
+        ``exec_batch``.
+
+        Every object's xattr is stamped with a fresh monotonic
+        ``version`` tag; the per-object versions are returned (in input
+        order) so the writing client can keep its zone-map cache
+        coherent without a read-back.
+        """
+        names = list(names)
+        blobs = list(blobs)
+        xattrs = list(xattrs) if xattrs is not None else [None] * len(names)
+        if not (len(names) == len(blobs) == len(xattrs)):
+            raise ValueError(f"{len(names)} names / {len(blobs)} blobs / "
+                             f"{len(xattrs)} xattrs")
+        if not names:
+            return []
+        versions = [self._next_version() for _ in names]
+        stamped = [{**(x or {}), "version": v}
+                   for x, v in zip(xattrs, versions)]
+
+        tried: list[set[str]] = [set() for _ in names]
+        last_err: list[Exception | None] = [None] * len(names)
+        pending = list(range(len(names)))
+
+        def replicate(work: tuple[int, str]) -> int:
+            i, rep = work
+            try:
+                self._osd(rep).put(names[i], blobs[i], stamped[i])
+                return len(blobs[i])
+            except OSDDown:  # peering/recovery restores it later
+                return 0
+
+        # server-side replica fan-out: one task per (object, replica),
+        # submitted the moment that OBJECT's primary write lands (the
+        # ``landed`` stream hook), so replication fills disk-idle gaps
+        # of the NIC-paced primary streams instead of queueing behind
+        # whole groups (the pooled tasks are never waited on from
+        # inside a worker — no deadlock); ints are inline results
+        use_pool = self.io_simulated()
+        rep_out: list[Any] = []
+
+        def write_group(osd_id: str,
+                        idxs: list[int]) -> list[tuple[int, Any]]:
+            done: set[int] = set()
+
+            def landed(k: int) -> None:
+                i = idxs[k]
+                done.add(i)
+                for rep in self._acting(names[i]):
+                    if rep != osd_id:
+                        rep_out.append(
+                            self._pool.submit(replicate, (i, rep))
+                            if use_pool else replicate((i, rep)))
+
+            try:
+                entry = self._osd(osd_id)
+                # one framed request; the NIC stream (``_client_xfer``
+                # per sub-write) keeps shared-NIC serialization per blob
+                entry.put_batch(
+                    [(names[i], blobs[i], stamped[i]) for i in idxs],
+                    stream=self._client_xfer, landed=landed)
+            except OSDDown as e:
+                # sub-writes that landed before the failure keep their
+                # success (their replica fan-out is already in flight);
+                # only the unlanded remainder fails over — retrying a
+                # landed item would double-count its NIC stream and
+                # replica bytes
+                return [(i, None if i in done else e) for i in idxs]
+            return [(i, None) for i in idxs]
+
+        while pending:
+            ordered = self._next_targets(pending, names, tried, last_err)
+            outs = self._dispatch_groups(ordered, write_group)
+            pending = []
+            for (osd_id, _), pairs in zip(ordered, outs):
+                self._account_request()  # one round trip per OSD group
+                for i, r in pairs:
+                    tried[i].add(osd_id)
+                    if isinstance(r, Exception):
+                        last_err[i] = r
+                        pending.append(i)
+                        continue
+                    self.fabric.client_tx += len(blobs[i])
+            # the write acks only after its replicas landed
+            self.fabric.replica_bytes += sum(
+                r.result() if use_pool else r for r in rep_out)
+            rep_out.clear()
+        return versions
 
     def get(self, name: str) -> bytes:
         """Read from the primary, failing over down the acting set."""
@@ -335,27 +571,8 @@ class ObjectStore:
                 return [(i, e) for i in idxs]
 
         while pending:
-            groups: dict[str, list[int]] = {}
-            for i in pending:
-                acting = self._acting(names[i])
-                target = next(
-                    (o for o in acting if o not in tried[i]), None)
-                if target is None:  # replicas exhausted: mirror exec()
-                    raise last_err[i] or ObjectNotFound(names[i])
-                groups.setdefault(target, []).append(i)
-
-            ordered = sorted(groups.items())  # one order for dispatch
-            # AND result pairing below — keep them the same list
-            if len(ordered) == 1 or not self.io_simulated():
-                # pool fan-out only pays when requests block on
-                # simulated I/O; compute-bound groups run inline
-                outs = [run_group(osd_id, idxs)
-                        for osd_id, idxs in ordered]
-            else:
-                futs = [self._pool.submit(run_group, osd_id, idxs)
-                        for osd_id, idxs in ordered]
-                outs = [f.result() for f in futs]
-
+            ordered = self._next_targets(pending, names, tried, last_err)
+            outs = self._dispatch_groups(ordered, run_group)
             pending = []
             for (osd_id, _), pairs in zip(ordered, outs):
                 self._account_request()  # one round trip per OSD group
@@ -373,6 +590,71 @@ class ObjectStore:
                 self.fabric.client_rx += group_rx
                 self._client_xfer(group_rx)
         return results
+
+    def exec_combine(self, names: Iterable[str],
+                     ops: list[ObjOp]) -> list[Any]:
+        """Batched pushdown with SERVER-SIDE combine.
+
+        Each involved OSD runs the (shared, decomposable) pipeline over
+        its local objects, folds the per-object partials with the tail
+        op's associative ``merge``, and returns ONE partial — so an
+        N-object aggregate scan over K OSDs moves K partials
+        (``client_rx`` O(K)) in K round trips, instead of N partials in
+        K round trips (``exec_batch``) or N in N (per-object ``exec``).
+
+        Objects missing from an OSD fail over to the next replica in
+        their acting set exactly like ``exec_batch``.  Returns one
+        merged partial per issued request that found at least one
+        object; finish with ``objclass.combine_partials`` (merged
+        partials are shape-identical to raw ones).
+        """
+        names = list(names)
+        if not names:
+            return []
+        ops = list(ops)
+        if not pipeline_mergeable(ops):
+            raise ValueError("exec_combine needs a decomposable pipeline "
+                             "whose tail has an associative merge")
+
+        out_partials: list[Any] = []
+        tried: list[set[str]] = [set() for _ in names]
+        last_err: list[Exception | None] = [None] * len(names)
+        pending = list(range(len(names)))
+
+        def run_group(osd_id: str, idxs: list[int]) -> Any:
+            try:
+                osd = self._osd(osd_id)
+                return osd.exec_cls_batch(
+                    [(names[i], ops) for i in idxs], combine=True)
+            except OSDDown as e:
+                return e
+
+        while pending:
+            ordered = self._next_targets(pending, names, tried, last_err)
+            outs = self._dispatch_groups(ordered, run_group)
+            pending = []
+            for (osd_id, idxs), got in zip(ordered, outs):
+                self._account_request()  # one round trip per OSD group
+                for i in idxs:
+                    tried[i].add(osd_id)
+                if isinstance(got, Exception):
+                    for i in idxs:
+                        last_err[i] = got
+                    pending.extend(idxs)
+                    continue
+                merged, _, scanned, missing = got
+                self.fabric.local_bytes += scanned
+                if merged is not None:
+                    rx = _result_nbytes(merged)
+                    self.fabric.client_rx += rx
+                    self._client_xfer(rx)
+                    out_partials.append(merged)
+                miss = set(missing)
+                for i in idxs:
+                    if names[i] in miss:
+                        last_err[i] = ObjectNotFound(names[i])
+                        pending.append(i)
+        return out_partials
 
     def exec_many(self, names: Iterable[str], ops: list[ObjOp],
                   workers: int = 8) -> list[Any]:
@@ -414,6 +696,44 @@ class ObjectStore:
                 if name in osd.xattrs:
                     return dict(osd.xattrs[name])
         return {}
+
+    def list_zone_maps(self, names: Iterable[str]) -> dict[str, dict]:
+        """Batched metadata plane: many objects' xattrs (zone map +
+        version) in ONE ``OSD.list_xattrs`` request per primary OSD, so
+        warming a client's zone-map cache over N objects costs K
+        ``xattr_ops`` instead of N.  Names whose target OSD is down or
+        lacks the xattr fail over down the acting set; names found
+        nowhere are simply absent from the result (mirroring ``xattr``
+        returning {})."""
+        names = list(dict.fromkeys(names))
+        if not names:
+            return {}
+        out: dict[str, dict] = {}
+        tried: list[set[str]] = [set() for _ in names]
+        pending = list(range(len(names)))
+
+        def fetch_group(osd_id: str, idxs: list[int]) -> Any:
+            try:
+                return self._osd(osd_id).list_xattrs(
+                    [names[i] for i in idxs])
+            except OSDDown as e:
+                return e
+
+        while pending:
+            skipped: list[int] = []
+            ordered = self._next_targets(pending, names, tried,
+                                         skipped=skipped)
+            outs = self._dispatch_groups(ordered, fetch_group)
+            pending = []
+            for (osd_id, idxs), got in zip(ordered, outs):
+                self.fabric.xattr_ops += 1  # one lookup per OSD request
+                for i in idxs:
+                    tried[i].add(osd_id)
+                    if isinstance(got, Exception) or names[i] not in got:
+                        pending.append(i)  # retry on the next replica
+                    else:
+                        out[names[i]] = got[names[i]]
+        return out
 
     # ------------------------------------------------------------ failures
     def fail_osd(self, osd_id: str) -> None:

@@ -6,17 +6,28 @@ sub-requests using the ObjectMap, scatter/gathers against the store, and
 performs *global* optimizations (object pruning via zone maps, parallel
 dispatch, decomposable-op pushdown planning).
 
-Read/query sub-requests flow through ``ObjectStore.exec_batch`` — one
-batched objclass request per primary OSD — so fabric ops scale with the
-number of OSDs, not the number of objects.  Planning consults an
-epoch-keyed client-side zone-map cache instead of issuing one xattr
-lookup per (object x filter) per query; the cache is invalidated (a)
-wholesale whenever the cluster-map epoch bumps (failure / resize — the
-acting sets and surviving xattrs may have changed), and (b) per object
-when this client rewrites it (``write`` refreshes the object's zone
-map).  Same-epoch rewrites by *other* clients are not observed (no
-cross-client coherence protocol); multi-writer deployments need an
-xattr version tag — see ROADMAP "Open items".
+Every interaction rides the store's symmetric per-OSD batch plane:
+writes go through ``ObjectStore.put_batch`` (one request per primary
+OSD), reads/queries through ``exec_batch`` / ``exec_combine`` (for
+decomposable aggregate tails the combine runs *on* each OSD, so the
+client receives one partial per OSD), and zone-map warming through
+``list_zone_maps`` (one metadata request per OSD) — fabric ops scale
+with the number of OSDs, not the number of objects, on every path.
+
+Planning consults an epoch-keyed client-side zone-map cache instead of
+issuing one xattr lookup per (object x filter) per query; the cache is
+invalidated (a) wholesale whenever the cluster-map epoch bumps
+(failure / resize — the acting sets and surviving xattrs may have
+changed), and (b) per object when this client rewrites it (``write``
+refreshes the object's zone map).  Cross-client coherence comes from
+the store's monotonic per-object ``version`` tag (stamped on every
+put): each cache entry remembers the version it was read at, and
+``plan`` revalidates every prune-positive object against its current
+version (one batched request per OSD) before trusting the prune.  That
+narrows the stale-prune window from the cache's lifetime to the gap
+between plan and execute — the unavoidable TOCTOU of any client-side
+prune; a rewrite landing inside that gap is caught by the next plan,
+not this one — at a cost of at most K extra metadata requests.
 
 ``LocalVOL`` is the storage-side plugin: it decides the *physical*
 representation of each object (layout row/col, per-column codec) from
@@ -28,8 +39,7 @@ the client or the access library knowing (independent evolution, goal 3).
 from __future__ import annotations
 
 import dataclasses
-from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Mapping
+from typing import Any, Iterable, Mapping
 
 import numpy as np
 
@@ -111,10 +121,12 @@ class GlobalVOL:
         self.store = store
         self.local = local or LocalVOL()
         self.workers = workers
-        # client-side zone-map cache, keyed by cluster-map epoch: one
-        # xattr lookup per object per epoch instead of one per
-        # (object x filter) per query
-        self._zm_cache: dict[str, dict] = {}
+        # client-side zone-map cache, keyed by cluster-map epoch:
+        # name -> (zone_map, version-it-was-read-at).  Warmed in one
+        # batched metadata request per OSD instead of one xattr lookup
+        # per object; the version lets ``plan`` detect rewrites by
+        # OTHER clients (cross-client coherence).
+        self._zm_cache: dict[str, tuple[dict, int]] = {}
         self._zm_epoch: int = -1
 
     def _pin_epoch(self) -> None:
@@ -126,13 +138,31 @@ class GlobalVOL:
             self._zm_cache.clear()
             self._zm_epoch = epoch
 
+    @staticmethod
+    def _zm_entry(xattr: dict) -> tuple[dict, int]:
+        return xattr.get("zone_map", {}), int(xattr.get("version", -1))
+
+    def _warm_zone_maps(self, names: Iterable[str]) -> set[str]:
+        """Fill cache misses with ONE batched metadata request per OSD
+        (K requests for N objects, however cold the cache).  Returns
+        the names fetched by THIS call — they are current as of now, so
+        the caller can skip revalidating them."""
+        self._pin_epoch()
+        missing = [n for n in names if n not in self._zm_cache]
+        if not missing:
+            return set()
+        infos = self.store.list_zone_maps(missing)
+        for n in missing:
+            self._zm_cache[n] = self._zm_entry(infos.get(n, {}))
+        return set(missing)
+
     def _zone_map(self, name: str) -> dict:
         self._pin_epoch()
-        zm = self._zm_cache.get(name)
-        if zm is None:
-            zm = self.store.xattr(name).get("zone_map", {})
-            self._zm_cache[name] = zm
-        return zm
+        ent = self._zm_cache.get(name)
+        if ent is None:
+            ent = self._zm_entry(self.store.xattr(name))
+            self._zm_cache[name] = ent
+        return ent[0]
 
     # ------------------------------------------------------------ create
     def create(self, ds: LogicalDataset,
@@ -149,12 +179,19 @@ class GlobalVOL:
     def write(self, omap: ObjectMap, table: Mapping[str, np.ndarray],
               *, rows: RowRange | None = None, workers: int | None = None,
               forwarding: bool = True) -> int:
-        """Scatter a row range to its objects (parallel writers).
+        """Scatter a row range to its objects through the batched write
+        plane: sub-writes are encoded client-side, then shipped via
+        ``ObjectStore.put_batch`` — ONE request per primary OSD (with
+        server-side replica fan-out and in-batch failover), so ingest
+        pays K round trips for N objects.  Parallelism across OSD groups
+        is the store's, gated on ``io_simulated()``; ``workers`` is kept
+        for API compatibility and ignored.
 
         ``forwarding=False`` bypasses the plugin machinery and writes one
         native blob — the paper's Table-1 native-HDF5 baseline.
         Returns bytes written (client->store).
         """
+        del workers
         ds = omap.dataset
         rows = rows or RowRange(0, ds.n_rows)
         validate_table(ds, table, rows)
@@ -172,25 +209,21 @@ class GlobalVOL:
         # about to cache-on-write survive the first read-side lookup
         self._pin_epoch()
 
-        def write_one(sub) -> int:
-            extent, local_rows = sub
+        names, blobs, xattrs, zms = [], [], [], []
+        for extent, local_rows in subs:
             glob = local_rows.shift(extent.row_start)
             part = {k: np.asarray(v)[glob.start - rows.start:
                                      glob.stop - rows.start]
                     for k, v in table.items()}
-            blob = self.local.encode(part)
             zm = fmt.zone_map(part)
-            self.store.put(extent.name, blob,
-                           xattr={"zone_map": zm,
-                                  "rows": [glob.start, glob.stop]})
-            self._zm_cache[extent.name] = zm  # keep the cache fresh
-            return len(blob)
-
-        w = workers or self.workers
-        if w <= 1:
-            return sum(write_one(s) for s in subs)
-        with ThreadPoolExecutor(max_workers=w) as pool:
-            return sum(pool.map(write_one, subs))
+            names.append(extent.name)
+            blobs.append(self.local.encode(part))
+            xattrs.append({"zone_map": zm, "rows": [glob.start, glob.stop]})
+            zms.append(zm)
+        versions = self.store.put_batch(names, blobs, xattrs)
+        for name, zm, v in zip(names, zms, versions):
+            self._zm_cache[name] = (zm, v)  # keep the cache fresh
+        return sum(len(b) for b in blobs)
 
     # ------------------------------------------------------------ read
     def read(self, omap: ObjectMap, rows: RowRange,
@@ -214,21 +247,53 @@ class GlobalVOL:
     # ------------------------------------------------------------ query
     def plan(self, omap: ObjectMap, ops: list[oc.ObjOp]) -> ReadPlan:
         """Global optimization: prune objects whose zone maps cannot match
-        a leading filter; decide pushdown vs gather."""
+        a leading filter; decide pushdown vs gather.
+
+        Prune decisions are only as good as the cached zone map, so
+        every prune-positive object is revalidated against its current
+        xattr ``version`` (one batched metadata request per OSD).  A
+        version mismatch means another client rewrote the object at
+        this epoch — the fresh zone map replaces the cached one and the
+        decision is re-made.  This bounds cross-client staleness to the
+        plan→execute gap (a rewrite landing after revalidation is
+        caught by the next plan).  Kept objects need no revalidation:
+        scanning an object whose zone map went stale is safe, its data
+        is read fresh from the OSD."""
         pushdown = oc.pipeline_decomposable(ops)
         prunable = [o for o in ops if o.name == "filter"]
+        if not prunable:
+            return ReadPlan(tuple((e.name, None) for e in omap), (),
+                            pushdown)
+        names = [e.name for e in omap]
+        fresh = self._warm_zone_maps(names)  # K requests however cold
+
+        def prunes(name: str) -> bool:
+            zm = self._zm_cache[name][0]
+            for f in prunable:
+                rng = zm.get(f.params["col"])
+                if rng and _prunable(rng, f.params["cmp"],
+                                     f.params["value"]):
+                    return True
+            return False
+
         keep, pruned = [], []
-        for extent in omap:
-            skip = False
-            if prunable:  # one cached zone-map fetch per object
-                zm = self._zone_map(extent.name)
-                for f in prunable:
-                    rng = zm.get(f.params["col"])
-                    if rng and _prunable(rng, f.params["cmp"],
-                                         f.params["value"]):
-                        skip = True
-                        break
-            (pruned if skip else keep).append(extent.name)
+        for name in names:
+            (pruned if prunes(name) else keep).append(name)
+        if pruned:  # revalidate prune-positive objects (coherence);
+            # entries the warm above just fetched are already current —
+            # re-fetching them would double the cold-cache metadata cost
+            to_check = [n for n in pruned if n not in fresh]
+            if to_check:
+                current = self.store.list_zone_maps(to_check)
+                for name in to_check:
+                    ent = self._zm_entry(current.get(name, {}))
+                    if ent[1] != self._zm_cache[name][1]:
+                        self._zm_cache[name] = ent  # stale: re-decide
+            still = {name for name in pruned if prunes(name)}
+            # rebuild in omap (row) order: a revalidated un-prune must
+            # not reorder the gather for table-out pipelines
+            keep = [n for n in names if n not in still]
+            pruned = [n for n in names if n in still]
         return ReadPlan(tuple((k, None) for k in keep), tuple(pruned),
                         pushdown)
 
@@ -256,7 +321,12 @@ class GlobalVOL:
         tail = oc.get_impl(ops[-1].name) if ops else None
 
         if ops and not tail.table_out and tail.combine is not None:
-            partials = self.store.exec_batch(names, ops)
+            if oc.pipeline_mergeable(ops):
+                # two-level combine: each OSD folds its local partials
+                # and ships ONE back — client_rx is O(K), not O(N)
+                partials = self.store.exec_combine(names, ops)
+            else:
+                partials = self.store.exec_batch(names, ops)
             for _ in names:
                 self.local.note_access("scan")
             result = oc.combine_partials(ops, partials)
@@ -281,6 +351,7 @@ class GlobalVOL:
 
     # ------------------------------------------------------------ helpers
     def _column_bounds(self, omap: ObjectMap, col: str) -> tuple[float, float]:
+        self._warm_zone_maps([e.name for e in omap])
         lo, hi = np.inf, -np.inf
         for extent in omap:
             zm = self._zone_map(extent.name)

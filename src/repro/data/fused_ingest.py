@@ -31,9 +31,31 @@ def pack_batch(tokens: np.ndarray, bits: int) -> np.ndarray:
     return bitpack_encode(tokens.ravel(), bits).reshape(B, S // 32, bits)
 
 
-def unpack_tokens(packed: jax.Array) -> jax.Array:
-    """(B, G, bits) uint32 -> (B, G*32) int32, in-graph."""
-    return unpack_bitpacked(packed, packed.shape[-1])
+def unpack_tokens(packed: jax.Array, *, use_pallas: bool = False,
+                  interpret: bool = False) -> jax.Array:
+    """(B, G, bits) uint32 -> (B, G*32) int32, in-graph.
+
+    ``use_pallas`` routes the unpack through the hand-tiled VPU kernel
+    (``kernels/bitunpack``; raises unless G % 4 == 0, the 128-lane row
+    requirement) instead of the GSPMD-partitionable jnp reference —
+    same planar layout, bit-identical values, but with explicit VMEM
+    tiling for the TPU input path.  ``interpret`` runs that kernel in
+    interpret mode (CPU tests).
+    """
+    B, G, bits = packed.shape
+    if use_pallas:
+        if G % 4:
+            raise ValueError(f"use_pallas needs G % 4 == 0 "
+                             f"(128-lane rows), got G={G}")
+        from repro.kernels.bitunpack import bitunpack, pad_to_grid
+        rows = B * (G // 4)
+        bm, padded = pad_to_grid(rows)
+        w = packed.reshape(rows, 4, bits)
+        if padded != rows:
+            w = jnp.pad(w, ((0, padded - rows), (0, 0), (0, 0)))
+        vals = bitunpack(w, bits=bits, block_r=bm, interpret=interpret)
+        return vals[:rows].reshape(B, G * 32)
+    return unpack_bitpacked(packed, bits)
 
 
 def derive_labels(tokens: jax.Array) -> jax.Array:

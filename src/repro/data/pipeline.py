@@ -8,7 +8,8 @@ The loader is the GlobalVOL acting as a training-data client:
   * data-parallel aligned: each host/dp-rank fetches only its slice of
     the global batch (``dp_rank``/``dp_size``), and the per-object
     sub-requests run storage-side (select pushdown) so only that slice
-    moves;
+    moves — one batched objclass request per OSD (the store's symmetric
+    per-OSD batch plane), never one per contiguous run;
   * packed mode: rows are fetched as planar-bitpacked words via the
     zero-decode ``select_packed`` objclass op — bytes on the wire (and
     into HBM) are ~bits/32 of raw, and the unpack happens in the
@@ -29,6 +30,7 @@ from typing import Iterator
 
 import numpy as np
 
+from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core.logical import RowRange
 from repro.core.partition import ObjectMap
@@ -145,7 +147,6 @@ class ObjectDataLoader:
                 packed_parts.append(words[keep])
             return {"tokens_packed": np.concatenate(packed_parts, axis=0)}
 
-        from repro.core import format as fmt
         parts = []
         for (extent, run, lo, _), blob in zip(runs, results):
             tab = fmt.decode_block(blob)

@@ -19,10 +19,23 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
 DEFAULT_BLOCK_R = 256
+
+
+def pad_to_grid(rows: int, block_r: int = DEFAULT_BLOCK_R
+                ) -> tuple[int, int]:
+    """Choose (block_r, padded_rows) for an R-row launch: the grid-step
+    count comes from ``block_r``, then the block height is rebalanced to
+    ceil(rows / n_blocks), so padding is bounded by n_blocks - 1 rows —
+    padding straight up to a ``block_r`` multiple would nearly double
+    the kernel work at rows = block_r + 1."""
+    n_blocks = max(1, -(-rows // block_r))
+    bm = -(-rows // n_blocks)
+    return bm, n_blocks * bm
 
 
 def _bitunpack_kernel(w_ref, o_ref, *, bits: int):
@@ -55,3 +68,32 @@ def bitunpack(words: jax.Array, *, bits: int,
         out_shape=jax.ShapeDtypeStruct((R, 128), jnp.int32),
         interpret=interpret,
     )(words)
+
+
+def bitunpack_words(words: np.ndarray, bits: int, n: int, *,
+                    interpret: bool | None = None) -> np.ndarray:
+    """(G, bits) uint32 planar words -> (n,) uint32 via the Pallas kernel.
+
+    Host-side adapter for the storage scan path
+    (``format._decode_column`` / ``objclass.run_pipeline``): pads the
+    group count up to a legal (R, 4, bits) tile, runs the kernel on the
+    selected jax backend (interpret mode on CPU, so the exact code path
+    stays testable without a TPU), and slices the padding back off.
+    Bit-exact with ``format.bitpack_decode`` — the zero pad groups decode
+    to zeros and are dropped.
+    """
+    w = np.ascontiguousarray(words, dtype=np.uint32).reshape(-1, bits)
+    n_groups = w.shape[0]
+    if n_groups == 0:
+        return np.zeros((0,), np.uint32)[:n]
+    rows = -(-n_groups // 4)                    # 4 groups per 128-lane row
+    bm, rows = pad_to_grid(rows)
+    if rows * 4 != n_groups:
+        padded = np.zeros((rows * 4, bits), np.uint32)
+        padded[:n_groups] = w
+        w = padded
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    vals = bitunpack(jnp.asarray(w.reshape(rows, 4, bits)), bits=bits,
+                     block_r=bm, interpret=interpret)
+    return np.asarray(vals).astype(np.uint32).ravel()[:n]

@@ -43,19 +43,27 @@ def cache_to_objects(store: ObjectStore, cache: Any, session: str,
         arr = np.asarray(leaf)
         meta = {"dtype": str(arr.dtype), "shape": list(arr.shape),
                 "pages": []}
+        names: list[str] = []
+        blobs: list[bytes] = []
         axis = seq_axes.get(key)
         if axis is None:
             name = f"kv/{session}/{len(manifest['leaves']):04d}/whole"
-            store.put(name, arr.tobytes())
+            names.append(name)
+            blobs.append(arr.tobytes())
             meta["pages"].append([name, -1])
         else:
             meta["seq_axis"] = axis
             for p0, page in _leaf_pages(key, arr, axis):
                 name = (f"kv/{session}/{len(manifest['leaves']):04d}/"
                         f"p{p0:08d}")
-                store.put(name, np.ascontiguousarray(page).tobytes())
+                names.append(name)
+                blobs.append(np.ascontiguousarray(page).tobytes())
                 meta["pages"].append([name, p0])
+        # each leaf's pages ride the batched write plane (one request
+        # per OSD per leaf, and at most one leaf buffered in memory)
+        store.put_batch(names, blobs)
         manifest["leaves"][key] = meta
+    # manifest LAST — the commit point stays ordered after the data
     store.put(f"kv/{session}/.manifest", json.dumps(manifest).encode())
     return manifest
 

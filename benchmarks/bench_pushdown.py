@@ -1,7 +1,7 @@
 """Perf trajectory export: writes ``BENCH_pushdown.json`` at the repo
 root so later PRs have hard numbers to compare against.
 
-Three sections:
+Four sections:
 
   queries  — filter→agg (and friends) through the batched pushdown
              plane vs the client-side gather baseline: fabric ops
@@ -10,18 +10,26 @@ Three sections:
              objects on K OSDs costs <= K ops batched (seed paid >= N),
              and a decomposable aggregate returns <= K partials
              (client_rx O(K), per-OSD server-side combine).
+  prune_pushdown — the composable-scan plane: a pushed-down-prune
+             aggregate query issues ZERO client zone-map requests
+             (predicates ride inside the batched objclass request and
+             each OSD prunes against its own current xattrs), and a
+             table-out filter→project scan returns exactly K framed
+             responses (per-OSD server-side table concat).
   ingest   — the symmetric write-plane claim: writing N objects over K
              OSDs through ``put_batch`` costs exactly one put request
              per primary OSD (the seed paid N), plus the batched
-             zone-map warm (<= K xattr requests for a fresh client).
+             zone-map warm (<= K xattr requests for a fresh client on
+             the ``prune="client"`` strategy).
   codec    — vectorized planar-bitpack encode/decode vs the historical
              per-bit-loop reference (bit-exact, same layout): MB/s and
              speedup on the ingest/scan hot path.
 
 Regression gate: when a committed ``BENCH_pushdown.json`` exists, the
 new ops / client_rx numbers must be no worse before the file is
-rewritten.  ``--smoke`` (or ``BENCH_SMOKE=1``) runs small shapes and
-asserts only the O(K) invariants — cheap enough for per-PR CI.
+rewritten (and prune_pushdown's zone-map count must stay 0 / frames
+must stay O(K)).  ``--smoke`` (or ``BENCH_SMOKE=1``) runs small shapes
+and asserts only the O(K) invariants — cheap enough for per-PR CI.
 """
 
 from __future__ import annotations
@@ -162,6 +170,78 @@ def bench_queries(n_rows: int = N_ROWS) -> dict:
     return out
 
 
+def bench_prune_pushdown(n_rows: int = N_ROWS) -> dict:
+    """The composable-scan claims: OSD-side pruning needs zero client
+    zone-map traffic, and table-out scans are K-framed."""
+    ds = LogicalDataset(
+        "pp_events",
+        (Column("e_pt", "float32"), Column("run", "int32")),
+        n_rows, 4096)
+    store = make_store(8, replicas=2)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=64 << 10,
+                                          max_object_bytes=1 << 20))
+    rng = np.random.default_rng(3)
+    vol.write(omap, {
+        "e_pt": rng.gamma(2.0, 20.0, n_rows).astype(np.float32),
+        "run": rng.integers(0, 100, n_rows).astype(np.int32),
+    })
+    n_osds = len(store.cluster.up_osds)
+    primaries = {store.cluster.primary(e.name) for e in omap}
+    assert omap.n_objects > n_osds  # N > K or the O(K) claim is vacuous
+
+    # pushed-down prune aggregate: ZERO zone-map requests, even for a
+    # completely cold client (predicates prune ON the OSDs)
+    fresh = GlobalVOL(store)
+    agg = fresh.scan(omap).filter("run", "<", 50).agg("mean", "e_pt")
+    store.fabric.reset()
+    t0 = time.perf_counter()
+    _, agg_stats = agg.execute(omap)
+    agg_wall = time.perf_counter() - t0
+    agg_zm_reqs = store.fabric.xattr_ops  # measured, gated below AND in CI
+    assert agg_zm_reqs == 0, agg_zm_reqs
+    assert agg_stats["prune"] == "pushdown"
+
+    # a fully-pruning predicate: every object skipped OSD-side, still
+    # zero metadata traffic (vs the client strategy's K-request warm)
+    store.fabric.reset()
+    res, prune_stats = (fresh.scan(omap).filter("run", ">", 1000)
+                        .agg("count", "run").execute(omap))
+    all_zm_reqs = store.fabric.xattr_ops
+    assert res == 0.0
+    assert all_zm_reqs == 0
+    assert prune_stats["objects_pruned"] == omap.n_objects
+
+    # table-out filter→project: exactly K framed responses (per-OSD
+    # server-side concat), not one frame per object
+    tab = fresh.scan(omap).filter("run", "<", 50).project("e_pt")
+    store.fabric.reset()
+    t0 = time.perf_counter()
+    _, tab_stats = tab.execute(omap)
+    tab_wall = time.perf_counter() - t0
+    assert tab_stats["rx_frames"] == len(primaries) <= n_osds, \
+        tab_stats["rx_frames"]
+    assert tab_stats["ops"] == len(primaries)
+
+    return {
+        "n_rows": n_rows, "n_objects": omap.n_objects, "n_osds": n_osds,
+        "agg_pushdown_prune": {
+            "zone_map_requests": agg_zm_reqs,
+            "fabric_ops": agg_stats["ops"],
+            "client_rx_bytes": agg_stats["client_rx"],
+            "wall_s": agg_wall},
+        "all_pruned": {
+            "zone_map_requests": all_zm_reqs,
+            "objects_pruned": prune_stats["objects_pruned"]},
+        "table_out": {
+            "rx_frames": tab_stats["rx_frames"],
+            "fabric_ops": tab_stats["ops"],
+            "client_rx_bytes": tab_stats["client_rx"],
+            "result_rows": tab_stats["result_rows"],
+            "wall_s": tab_wall},
+    }
+
+
 def bench_ingest(n_rows: int = N_ROWS) -> dict:
     """The symmetric write plane: N objects over K OSDs in K put
     requests (``put_batch``) vs the seed's one put per object, plus the
@@ -248,6 +328,16 @@ def check_against_snapshot(report: dict, committed: dict) -> list[str]:
             problems.append(
                 f"ingest.batched.fabric_ops: {new_ops} > "
                 f"{old_ing['batched']['fabric_ops']}")
+    old_pp = committed.get("prune_pushdown")
+    if old_pp:
+        pp = report["prune_pushdown"]
+        if pp["agg_pushdown_prune"]["zone_map_requests"] > 0:
+            problems.append("prune_pushdown.agg zone_map_requests > 0")
+        if pp["table_out"]["rx_frames"] > old_pp["table_out"]["rx_frames"]:
+            problems.append(
+                f"prune_pushdown.table_out.rx_frames: "
+                f"{pp['table_out']['rx_frames']} > "
+                f"{old_pp['table_out']['rx_frames']}")
     return problems
 
 
@@ -256,11 +346,13 @@ def main() -> None:
     n_rows = SMOKE_ROWS if smoke else N_ROWS
     codec_n = 100_000 if smoke else 1_000_000
     report = {"queries": bench_queries(n_rows),
+              "prune_pushdown": bench_prune_pushdown(n_rows),
               "ingest": bench_ingest(n_rows),
               "codec": bench_codec(codec_n)}
     if smoke:
         print("bench_pushdown --smoke: O(K) invariants hold "
-              f"(scan ops <= K, ingest ops == primaries <= K, "
+              f"(scan ops <= K, pushed-down prune zone-map reqs == 0, "
+              f"table-out rx frames == K, ingest ops == primaries <= K, "
               f"warm xattr ops <= K) at {n_rows} rows")
     else:
         if OUT_PATH.exists():
@@ -278,6 +370,10 @@ def main() -> None:
               f"bytes x{row['bytes_reduction']:<8.1f} "
               f"wall {row['pushdown']['wall_s'] * 1e3:.1f}ms vs "
               f"{row['client_side']['wall_s'] * 1e3:.1f}ms")
+    pp = report["prune_pushdown"]
+    print(f"  prune_pushdown zone-map reqs 0 (agg, OSD-side prune), "
+          f"table-out frames {pp['table_out']['rx_frames']} "
+          f"(= K primaries) for {pp['n_objects']} objects")
     ing = report["ingest"]
     print(f"  ingest         ops {ing['batched']['fabric_ops']:>3} vs "
           f"{ing['per_object']['fabric_ops']:>3} "

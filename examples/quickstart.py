@@ -2,7 +2,9 @@
 
 1. stand up a replicated object store (Ceph stand-in)
 2. map a logical dataset onto objects through the GlobalVOL
-3. run storage-side queries (select/filter/aggregate pushdown)
+3. run storage-side scans through the composable builder
+   (filters AND together, aggregates compose, pruning happens ON the
+   OSDs, table results come back as one framed response per OSD)
 4. survive an OSD failure
 5. train a tiny LM whose data path IS that object store
 
@@ -12,8 +14,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.core import (Column, GlobalVOL, LogicalDataset, PartitionPolicy,
-                        Query, RowRange, SkyhookDriver, make_store)
-from repro.core import objclass as oc
+                        RowRange, SkyhookDriver, make_store)
 
 # -- 1. an 8-OSD cluster, 3-way replication ------------------------------
 store = make_store(8, replicas=3)
@@ -33,19 +34,28 @@ vol.write(omap, {
 print(f"mapped {ds.n_rows} rows -> {omap.n_objects} objects on "
       f"{len(store.cluster.osds)} OSDs")
 
-# -- 3. pushdown queries ---------------------------------------------------
-mean_hot, stats = vol.query(omap, [
-    oc.op("filter", col="station", cmp="==", value=7),
-    oc.op("agg", col="temp", fn="mean")])
-print(f"mean(temp | station==7) = {mean_hot:.3f}  "
+# -- 3. composable pushdown scans -----------------------------------------
+stats_hot, stats = (vol.scan("sensors")
+                    .filter("station", "==", 7)
+                    .agg("mean", "temp").agg("count", "temp")
+                    .execute())
+print(f"mean(temp | station==7) = {stats_hot['mean(temp)']:.3f} over "
+      f"{stats_hot['count(temp)']:.0f} rows  "
       f"[{stats['client_rx']} B moved, {stats['local_bytes']} B scanned "
-      f"storage-side, pruned {stats['objects_pruned']} objects]")
+      f"storage-side, {stats['exec_class']}, zero zone-map round trips "
+      f"({stats['xattr_ops']})]")
+
+cold, stats = (vol.scan("sensors").filter("temp", "<", -20)
+               .project("temp", "station").execute())
+print(f"filter→project: {stats['result_rows']} matching rows back in "
+      f"{stats['rx_frames']} framed responses "
+      f"({stats['objects_pruned']} objects pruned ON their OSDs)")
 
 drv = SkyhookDriver(vol, n_workers=4)
-med, qstats = drv.execute(Query("sensors", aggregate=("median", "temp"),
-                                allow_approx=True))
+med, qstats = drv.execute(drv.scan("sensors")
+                          .median("temp", approx=True))
 print(f"median(temp) ~= {med:.3f}  [approx sketch, "
-      f"{qstats.client_rx_bytes} B moved]")
+      f"{qstats.client_rx_bytes} B moved, pushdown={qstats.pushdown}]")
 
 # -- 4. kill an OSD mid-flight --------------------------------------------
 victim = store.cluster.primary(omap.object_names()[0])

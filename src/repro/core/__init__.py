@@ -8,8 +8,10 @@ Layering (bottom up):
   logical    — access-library-facing datasets (rows, columns, units)
   partition  — logical units -> objects (grouping/splitting/sizing)
   objclass   — storage-side op registry (select/project/filter/agg/...)
+  scan       — the ONE query surface: Scan builder -> PhysicalPlan ->
+               ScanEngine (prune pushdown, per-OSD combine/concat)
   vol        — GlobalVOL (client plugin) / LocalVOL (storage plugin)
-  skyhook    — driver/worker query engine over vol+objclass
+  skyhook    — driver/worker scheduling over the scan engine
   pushdown_jax — the TPU data plane: compute-at-shard via shard_map
 """
 
@@ -18,5 +20,6 @@ from repro.core.partition import (  # noqa: F401
     ObjectMap, PartitionPolicy, plan_partition)
 from repro.core.placement import ClusterMap  # noqa: F401
 from repro.core.store import ObjectStore, make_store  # noqa: F401
+from repro.core.scan import PhysicalPlan, Scan, ScanEngine  # noqa: F401
 from repro.core.vol import GlobalVOL, LocalVOL  # noqa: F401
 from repro.core.skyhook import Query, SkyhookDriver  # noqa: F401

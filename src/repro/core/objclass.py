@@ -161,6 +161,31 @@ def _agg_combine(partials: list, fn: str, **_):
     raise ValueError(fn)
 
 
+# ---- multi-aggregate: N decomposable aggregates as ONE mergeable tail ----
+
+
+def _magg_key(fn: str, col: str) -> str:
+    return f"{fn}({col})"
+
+
+def _magg_local(table, specs):
+    """Partial = one agg partial per (fn, col) spec, keyed "fn(col)"."""
+    return {_magg_key(fn, col): _agg_local(table, col, fn)
+            for fn, col in specs}
+
+
+def _magg_merge(partials: list, specs, **_):
+    return {_magg_key(fn, col):
+            _agg_merge([p[_magg_key(fn, col)] for p in partials], fn)
+            for fn, col in specs}
+
+
+def _magg_combine(partials: list, specs, **_):
+    return {_magg_key(fn, col):
+            _agg_combine([p[_magg_key(fn, col)] for p in partials], fn)
+            for fn, col in specs}
+
+
 # ---- holistic: exact median (NOT decomposable) ----
 
 
@@ -224,6 +249,9 @@ register("filter", OpImpl(_filter, None, decomposable=True))
 register("agg", OpImpl(
     _agg_local, _agg_combine, decomposable=True, table_out=False,
     merge=_agg_merge))
+register("multi_agg", OpImpl(
+    _magg_local, _magg_combine, decomposable=True, table_out=False,
+    merge=_magg_merge))
 register("median", OpImpl(
     _median_local, None, decomposable=False, table_out=False))
 register("quantile_sketch", OpImpl(
@@ -272,6 +300,42 @@ def select_packed(blob: bytes, rows: tuple[int, int], col: str) -> dict:
 
 register("select_packed", OpImpl(
     lambda *a, **k: None, None, decomposable=True, table_out=False))
+
+
+# --------------------------------------------------------------------------
+# zone-map pruning (shared by the client planner and the OSDs)
+# --------------------------------------------------------------------------
+
+
+def filter_predicates(ops: list[ObjOp]) -> tuple:
+    """The (col, cmp, value) triples of every ``filter`` op in a
+    pipeline — the conjunction a prune decision may consult."""
+    return tuple((o.params["col"], o.params["cmp"], o.params["value"])
+                 for o in ops if o.name == "filter")
+
+
+def zone_map_prunes(zone_map: Mapping, predicates) -> bool:
+    """True when the zone map PROVES the filter conjunction matches no
+    row of the object: any single predicate whose [lo, hi] range is
+    disjoint from the matching set empties the whole conjunction.
+
+    This is the one prune rule in the system: ``GlobalVOL.plan`` applies
+    it to cached zone maps (client-side prune) and ``OSD.exec_cls_batch``
+    applies it to the object's CURRENT xattrs (pushed-down prune), so
+    the two strategies always agree on identical metadata.
+    """
+    for col, cmp, value in predicates:
+        rng = zone_map.get(col)
+        if not rng:
+            continue
+        lo, hi = rng
+        if ((cmp == "<" and lo >= value)
+                or (cmp == "<=" and lo > value)
+                or (cmp == ">" and hi <= value)
+                or (cmp == ">=" and hi < value)
+                or (cmp == "==" and (value < lo or value > hi))):
+            return True
+    return False
 
 
 # --------------------------------------------------------------------------
@@ -334,6 +398,9 @@ def required_columns(ops: list[ObjOp]) -> list[str] | None:
         if o.name in _SINGLE_COL_OPS:
             needed.add(o.params["col"])
             continue
+        if o.name == "multi_agg":
+            needed.update(col for _, col in o.params["specs"])
+            continue
         return None  # unknown/pass-through op: be conservative
     tail = get_impl(ops[-1].name)
     if tail.table_out and not have_project:
@@ -341,7 +408,7 @@ def required_columns(ops: list[ObjOp]) -> list[str] | None:
     return sorted(needed)
 
 
-def run_pipeline(blob: bytes, ops: list[ObjOp]) -> Any:
+def run_pipeline(blob: bytes, ops: list[ObjOp], encode: bool = True) -> Any:
     """Execute a pipeline against one object's block, server-side.
 
     Returns either an encoded table block (table-out pipelines) or a
@@ -353,6 +420,11 @@ def run_pipeline(blob: bytes, ops: list[ObjOp]) -> Any:
     Pallas kernel (``kernels/bitunpack``) when a jax device backend is
     selected, with the numpy butterfly codec as the bit-exact fallback
     (``format.set_bitunpack_backend``).
+
+    ``encode=False`` returns a table-out result as the raw column dict
+    instead of an encoded block — the per-OSD concat path uses it to
+    fold many result tables into ONE framed block without a redundant
+    encode/decode round per object.
     """
     if ops and ops[0].name == "select_packed":
         if len(ops) != 1:
@@ -367,7 +439,23 @@ def run_pipeline(blob: bytes, ops: list[ObjOp]) -> Any:
         out = impl.local(out, **o.params)
         if not impl.table_out:
             return out  # partial; must be the last op
-    return fmt.encode_block(out)
+    return fmt.encode_block(out) if encode else out
+
+
+def concat_encode(tables: list[Mapping[str, np.ndarray]]) -> bytes:
+    """Server-side table concat: fold result tables into ONE encoded
+    block (item order preserved) — the table-out analogue of
+    ``merge_partials``."""
+    keys = list(tables[0].keys())
+    return fmt.encode_block(
+        {k: np.concatenate([np.asarray(t[k]) for t in tables], axis=0)
+         for k in keys})
+
+
+def table_n_rows(table: Mapping[str, np.ndarray]) -> int:
+    for v in table.values():
+        return int(np.asarray(v).shape[0])
+    return 0
 
 
 def combine_partials(ops: list[ObjOp], partials: list) -> Any:

@@ -1,0 +1,545 @@
+"""Composable scan API — ONE plan→compile→execute surface (paper §3.2).
+
+The paper's promise is *composability of access operations* over an
+object-mapped dataset.  This module is where that promise lives:
+
+  * :class:`Scan` — a fluent, immutable logical plan.  Filters compose
+    as a conjunction, aggregates compose side by side, a holistic
+    median can opt into its decomposable sketch approximation, and a
+    row range restricts the scan — all independent of how anything
+    executes::
+
+        vol.scan("events").filter("run", "<", 50) \\
+                          .filter("hits", ">=", 3) \\
+                          .agg("mean", "e_pt").agg("count", "e_pt") \\
+                          .execute()
+
+  * :class:`PhysicalPlan` — what a ``Scan`` compiles to: the storage
+    pipeline, the prune strategy, the execution class, and the per-OSD
+    request shards.  ``Scan.explain()`` returns it for inspection.
+
+  * :class:`ScanEngine` — the ONE executor.  ``GlobalVOL.read`` /
+    ``GlobalVOL.query``, ``SkyhookDriver.execute`` (and its client-side
+    baseline), and the training-data loader all route through it; the
+    tail/combine/holistic/approx-rewrite decision exists nowhere else.
+
+Execution classes
+-----------------
+``osd-combine``      mergeable aggregate tails: each OSD folds its local
+                     partials (``exec_combine``) — client_rx O(K).
+``server-concat``    table-out pipelines: each OSD concatenates its
+                     result tables into ONE framed block
+                     (``exec_concat``) — rx_frames O(K).
+``holistic-gather``  exact median: filters/projection still run
+                     storage-side (as a server-concat of the projected
+                     column), the holistic tail runs client-side.
+``table-gather``     per-object raw results (e.g. zero-decode
+                     ``select_packed``) via ``exec_batch``.
+``client-gather``    the no-pushdown baseline: full objects to the
+                     client, pipeline evaluated locally.
+
+Prune strategies
+----------------
+``pushdown`` (default): the filter predicates ride inside the batched
+objclass request and each OSD prunes against its own CURRENT zone-map
+xattrs — zero client zone-map requests, and no plan→execute TOCTOU
+window (the OSD can never see a stale zone map).  ``client``: the
+classic cached-zone-map prune with version-tag revalidation
+(``GlobalVOL.plan``) — kept for workloads that want to skip whole OSD
+round trips when everything prunes.  ``none``: scan everything.  Both
+strategies share one prune rule (``objclass.zone_map_prunes``), so on
+identical metadata they prune identical sets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core import format as fmt
+from repro.core import objclass as oc
+from repro.core.logical import RowRange, concat_tables
+
+EXEC_OSD_COMBINE = "osd-combine"
+EXEC_SERVER_CONCAT = "server-concat"
+EXEC_HOLISTIC_GATHER = "holistic-gather"
+EXEC_TABLE_GATHER = "table-gather"
+EXEC_PARTIAL_GATHER = "partial-gather"
+EXEC_CLIENT_GATHER = "client-gather"
+
+PRUNE_STRATEGIES = ("auto", "pushdown", "client", "none")
+_CMPS = ("<", "<=", ">", ">=", "==", "!=")
+_AGG_FNS = ("sum", "count", "min", "max", "mean")
+
+
+# --------------------------------------------------------------------------
+# Scan — the fluent logical plan
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scan:
+    """An immutable, composable scan description.
+
+    Every fluent call returns a NEW ``Scan`` (the receiver is never
+    mutated), so partial scans are safely shareable::
+
+        base = vol.scan("events").filter("run", "<", 50)
+        a, _ = base.agg("mean", "e_pt").execute()
+        b, _ = base.project("e_pt").execute()
+
+    A ``Scan`` built through ``GlobalVOL.scan`` is *bound* (it knows its
+    vol and can ``explain()``/``execute()`` itself); a bare
+    ``Scan(dataset=...)`` is a pure value that a driver executes.
+    """
+
+    dataset: str | None = None
+    filters: tuple = ()                     # ((col, cmp, value), ...)
+    projection: tuple[str, ...] | None = None
+    aggregates: tuple = ()                  # ((fn, col), ...)
+    median_col: str | None = None
+    approx: bool = False
+    row_range: tuple[int, int] | None = None
+    prune_strategy: str = "auto"
+    _vol: Any = dataclasses.field(default=None, compare=False, repr=False)
+    _runner: Any = dataclasses.field(default=None, compare=False,
+                                     repr=False)
+
+    # ------------------------------------------------------------ fluent
+    def filter(self, col: str, cmp: str, value) -> "Scan":
+        """AND another predicate into the scan's filter conjunction."""
+        if cmp not in _CMPS:
+            raise ValueError(f"bad comparator {cmp!r}; known: {_CMPS}")
+        return dataclasses.replace(
+            self, filters=self.filters + ((col, cmp, value),))
+
+    def project(self, *cols: str) -> "Scan":
+        if len(cols) == 1 and isinstance(cols[0], (list, tuple)):
+            cols = tuple(cols[0])
+        if not cols:
+            raise ValueError("project needs at least one column")
+        return dataclasses.replace(self, projection=tuple(cols))
+
+    def agg(self, fn: str, col: str) -> "Scan":
+        """Add an aggregate; N aggregates compile to ONE mergeable
+        ``multi_agg`` tail (still one partial per OSD)."""
+        if fn == "median":
+            return self.median(col)
+        if fn not in _AGG_FNS:
+            raise ValueError(f"bad aggregate {fn!r}; known: {_AGG_FNS} "
+                             "(median via .median())")
+        if self.median_col is not None:
+            raise ValueError("median is holistic; it cannot compose "
+                             "with other aggregates in one scan")
+        return dataclasses.replace(
+            self, aggregates=self.aggregates + ((fn, col),))
+
+    def median(self, col: str, *, approx: bool = False) -> "Scan":
+        """Exact median (holistic gather) or, with ``approx=True``, its
+        decomposable quantile-sketch rewrite (paper §3.2)."""
+        if self.aggregates:
+            raise ValueError("median is holistic; it cannot compose "
+                             "with other aggregates in one scan")
+        return dataclasses.replace(self, median_col=col, approx=approx)
+
+    def rows(self, rows, stop: int | None = None) -> "Scan":
+        """Restrict the scan to a row range: ``.rows(RowRange(a, b))``
+        or ``.rows(a, b)``."""
+        if stop is not None:
+            rows = RowRange(int(rows), int(stop))
+        elif not isinstance(rows, RowRange):
+            rows = RowRange(*rows)
+        return dataclasses.replace(self, row_range=(rows.start, rows.stop))
+
+    def prune(self, strategy: str) -> "Scan":
+        if strategy not in PRUNE_STRATEGIES:
+            raise ValueError(f"bad prune strategy {strategy!r}; "
+                             f"known: {PRUNE_STRATEGIES}")
+        return dataclasses.replace(self, prune_strategy=strategy)
+
+    def bind(self, vol, runner=None) -> "Scan":
+        """Attach the executing vol (and optionally a scheduling runner
+        — e.g. a driver's worker dispatcher) to this scan."""
+        return dataclasses.replace(self, _vol=vol, _runner=runner)
+
+    # ------------------------------------------------------------ compile
+    def pipeline(self) -> list[oc.ObjOp]:
+        """The logical objclass pipeline this scan describes (the row
+        range, if any, becomes per-object ``select`` ops at compile)."""
+        ops: list[oc.ObjOp] = []
+        for col, cmp, value in self.filters:
+            ops.append(oc.op("filter", col=col, cmp=cmp, value=value))
+        if self.projection:
+            ops.append(oc.op("project", cols=list(self.projection)))
+        if self.median_col is not None:
+            ops.append(oc.op("median", col=self.median_col))
+        elif len(self.aggregates) == 1:
+            fn, col = self.aggregates[0]
+            ops.append(oc.op("agg", col=col, fn=fn))
+        elif self.aggregates:
+            ops.append(oc.op("multi_agg", specs=tuple(self.aggregates)))
+        return ops
+
+    def _bound(self, omap=None):
+        if self._vol is None:
+            raise ValueError("unbound Scan — build it via vol.scan(...) "
+                             "or hand it to a SkyhookDriver")
+        if omap is None:
+            omap = self._vol.open(self.dataset)
+        return self._vol.engine, omap
+
+    def explain(self, omap=None) -> "PhysicalPlan":
+        engine, omap = self._bound(omap)
+        return engine.compile(omap, self)
+
+    def execute(self, omap=None) -> tuple[Any, dict]:
+        engine, omap = self._bound(omap)
+        before = self._vol.store.fabric.snapshot()
+        return engine.execute(engine.compile(omap, self),
+                              runner=self._runner, before=before)
+
+
+def scan(dataset: str) -> Scan:
+    """An unbound scan over a named dataset (bind via a vol/driver)."""
+    return Scan(dataset=dataset)
+
+
+# --------------------------------------------------------------------------
+# PhysicalPlan — what a Scan compiles to
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalPlan:
+    """The compiled form of one scan: what ships, where, and how the
+    results come back.  Frozen — executing a plan never mutates it, so
+    a plan can be compiled once and executed many times (each execution
+    re-reads CURRENT storage state; under ``prune="pushdown"`` even the
+    prune decisions are made at execute time, on the OSDs)."""
+
+    dataset: str
+    exec_cls: str                    # one of the EXEC_* classes
+    prune: str                       # "pushdown" | "client" | "none"
+    names: tuple[str, ...]           # kept sub-requests, global row order
+    ops: tuple[oc.ObjOp, ...]        # the logical pipeline
+    exec_ops: tuple[oc.ObjOp, ...]   # what actually ships (holistic tails
+    #                                  ship their projected-gather form)
+    pipelines: tuple | None = None   # per-object pipelines (row ranges /
+    #                                  loader runs); None = shared exec_ops
+    predicates: tuple = ()           # pushed to OSDs when prune=="pushdown"
+    pruned: tuple[str, ...] = ()     # client-side pruned at compile time
+    shards: tuple = ()               # ((osd_id, (name idx, ...)), ...)
+    pushdown: bool = False           # pipeline ops run storage-side?
+    approx_rewrite: bool = False
+    assemble: str = "table"          # "table" | "parts" (loader)
+    access: str | None = None        # LocalVOL access-stats kind
+    n_objects: int = 0               # dataset size before pruning
+
+
+# --------------------------------------------------------------------------
+# ScanEngine — the one executor
+# --------------------------------------------------------------------------
+
+
+class ScanEngine:
+    """Compiles scans/pipelines to :class:`PhysicalPlan` and executes
+    them against the store.
+
+    ``execute`` takes an optional ``runner`` — the driver passes a
+    worker-sharding dispatcher (Fig. 4), everything else uses the
+    store's own per-OSD batch plane directly.  A runner is transport
+    only: it must preserve the store-call semantics, never re-decide
+    the plan.
+
+    Runner protocol: ``runner(mode, names, pipelines, predicates,
+    shards)`` where mode is ``"combine"`` → ``(partials,
+    pruned_names)``, ``"concat"`` → ``(frames, pruned_names)`` with
+    frames ``(global_indices, blob, row_counts)``, or ``"batch"`` →
+    per-object results aligned with ``names``.  ``shards`` is the
+    plan's per-OSD grouping (``(osd_id, name_indices)`` pairs) so a
+    scheduling runner need not re-derive placement.
+    """
+
+    def __init__(self, vol):
+        self.vol = vol
+
+    # ------------------------------------------------------------ compile
+    def compile(self, omap, scan: Scan) -> PhysicalPlan:
+        rows = RowRange(*scan.row_range) if scan.row_range else None
+        return self._compile(omap, scan.pipeline(), rows=rows,
+                             allow_approx=scan.approx,
+                             prune=scan.prune_strategy)
+
+    def compile_ops(self, omap, ops: Sequence[oc.ObjOp], *,
+                    allow_approx: bool = False, prune: str = "auto",
+                    baseline: bool = False) -> PhysicalPlan:
+        """Compile a raw objclass pipeline (the ``GlobalVOL.query`` /
+        ``Query`` shim entry point)."""
+        return self._compile(omap, list(ops), allow_approx=allow_approx,
+                             prune=prune, baseline=baseline)
+
+    def compile_read(self, omap, rows: RowRange,
+                     columns: Sequence[str] | None = None) -> PhysicalPlan:
+        ops = [oc.op("project", cols=list(columns))] \
+            if columns is not None else []
+        return self._compile(omap, ops, rows=rows, access="fetch")
+
+    def _compile(self, omap, ops, *, rows=None, allow_approx=False,
+                 prune="auto", baseline=False, access=None) -> PhysicalPlan:
+        if prune not in PRUNE_STRATEGIES:
+            raise ValueError(f"bad prune strategy {prune!r}; "
+                             f"known: {PRUNE_STRATEGIES}")
+        ops = list(ops)
+        rewritten = False
+        if ops and ops[-1].name == "median" and allow_approx \
+                and not baseline:
+            col = ops[-1].params["col"]
+            lo, hi = self.vol._column_bounds(omap, col)
+            ops[-1] = oc.op("quantile_sketch", col=col, lo=lo, hi=hi)
+            rewritten = True
+        predicates = oc.filter_predicates(ops)
+
+        tail = oc.get_impl(ops[-1].name) if ops else None
+        if baseline:
+            exec_cls = EXEC_CLIENT_GATHER
+        elif tail is not None and not tail.table_out:
+            if tail.combine is None:
+                exec_cls = EXEC_HOLISTIC_GATHER
+            elif rows is None and oc.pipeline_mergeable(ops):
+                exec_cls = EXEC_OSD_COMBINE
+            else:  # partial tail the OSD cannot fold (or per-object
+                exec_cls = EXEC_PARTIAL_GATHER  # select pipelines)
+        else:
+            exec_cls = EXEC_SERVER_CONCAT
+
+        if exec_cls == EXEC_HOLISTIC_GATHER:
+            # ship the projected-gather form; the holistic tail itself
+            # runs client-side over the gathered column
+            col = ops[-1].params["col"]
+            exec_ops = tuple(ops[:-1]) + (oc.op("project", cols=[col]),)
+        else:
+            exec_ops = tuple(ops)
+
+        pipelines = None
+        if rows is not None:
+            subs = omap.lookup(rows)
+            names = [e.name for e, _ in subs]
+            pipelines = [
+                [oc.op("select", rows=(loc.start, loc.stop))]
+                + list(exec_ops)
+                for _, loc in subs]
+        else:
+            names = [e.name for e in omap]
+
+        # partial-gather's positional response cannot carry OSD prune
+        # info.  "auto" falls back to the client-side planner; an
+        # EXPLICIT "pushdown" request must not be silently served with
+        # the weaker (TOCTOU-prone) strategy — refuse instead.
+        if exec_cls == EXEC_PARTIAL_GATHER and prune == "pushdown" \
+                and predicates:
+            raise ValueError(
+                "prune='pushdown' cannot serve a partial-gather plan "
+                "(per-object positional responses carry no OSD prune "
+                "info); drop the row range or use prune='auto'/'client'")
+
+        pruned: tuple[str, ...] = ()
+        if baseline or not predicates or prune == "none":
+            prune_s = "none"
+        elif prune == "client" or exec_cls == EXEC_PARTIAL_GATHER:
+            # client-side prune, restricted to THIS scan's candidate
+            # objects (a row-ranged scan must not warm/revalidate zone
+            # maps for the rest of the dataset)
+            plan0 = self.vol.plan(omap, ops, names=names)
+            kept = {n for n, _ in plan0.sub_requests}
+            keep = [n in kept for n in names]
+            if pipelines is not None:
+                pipelines = [p for p, k in zip(pipelines, keep) if k]
+            pruned = tuple(n for n, k in zip(names, keep) if not k)
+            names = [n for n, k in zip(names, keep) if k]
+            prune_s = "client"
+        else:
+            prune_s = "pushdown"
+
+        if access is None and exec_cls in (EXEC_OSD_COMBINE,
+                                           EXEC_PARTIAL_GATHER):
+            access = "scan"
+
+        by_osd: dict[str, list[int]] = {}
+        if not baseline:
+            cluster = self.vol.store.cluster
+            for i, n in enumerate(names):
+                by_osd.setdefault(cluster.primary(n), []).append(i)
+
+        return PhysicalPlan(
+            dataset=omap.dataset.name,
+            exec_cls=exec_cls,
+            prune=prune_s,
+            names=tuple(names),
+            ops=tuple(ops),
+            exec_ops=exec_ops,
+            pipelines=tuple(tuple(p) for p in pipelines)
+            if pipelines is not None else None,
+            predicates=predicates if prune_s == "pushdown" else (),
+            pruned=pruned,
+            shards=tuple(sorted(
+                (osd, tuple(idxs)) for osd, idxs in by_osd.items())),
+            pushdown=exec_cls in (
+                EXEC_OSD_COMBINE, EXEC_SERVER_CONCAT,
+                EXEC_PARTIAL_GATHER, EXEC_TABLE_GATHER),
+            approx_rewrite=rewritten,
+            access=access,
+            n_objects=omap.n_objects,
+        )
+
+    def compile_gather(self, names: Sequence[str],
+                       pipelines: Sequence[Sequence[oc.ObjOp]],
+                       packed: bool = False) -> PhysicalPlan:
+        """Per-object sub-request gather (the data loader's plan):
+        table-out pipelines ride the server-concat plane (one framed
+        response per OSD); packed pipelines (``select_packed`` emits raw
+        word partials, not tables) gather per object."""
+        return PhysicalPlan(
+            dataset="", prune="none",
+            exec_cls=EXEC_TABLE_GATHER if packed else EXEC_SERVER_CONCAT,
+            names=tuple(names), ops=(), exec_ops=(),
+            pipelines=tuple(tuple(p) for p in pipelines),
+            assemble="parts", pushdown=True, n_objects=len(names))
+
+    # ------------------------------------------------------------ execute
+    def execute(self, plan: PhysicalPlan, runner=None,
+                before: dict | None = None) -> tuple[Any, dict]:
+        """Run one compiled plan; returns ``(result, stats)`` with the
+        unified stats emission every caller shares.  ``before`` lets the
+        caller open the fabric-accounting window ahead of ``compile`` so
+        the reported cost includes compile-time traffic (the client
+        strategy's zone-map warm/revalidation, the approx rewrite's
+        column-bounds fetch) — every query front end passes it."""
+        store = self.vol.store
+        run = runner or self._direct
+        if before is None:
+            before = store.fabric.snapshot()
+        names = list(plan.names)
+        ops = list(plan.ops)
+        pipes = [list(p) for p in plan.pipelines] \
+            if plan.pipelines is not None else list(plan.exec_ops)
+        preds = plan.predicates
+        osd_pruned: list[str] = []
+        result_rows: int | None = None
+
+        shards = plan.shards
+
+        if plan.exec_cls == EXEC_OSD_COMBINE:
+            partials, osd_pruned = run("combine", names, pipes, preds,
+                                       shards)
+            result = oc.combine_partials(ops, partials)
+            result_rows = 1
+        elif plan.exec_cls == EXEC_PARTIAL_GATHER:
+            raw = run("batch", names, pipes, (), shards)
+            result = oc.combine_partials(ops, raw)
+            result_rows = 1
+        elif plan.exec_cls == EXEC_HOLISTIC_GATHER:
+            col = ops[-1].params["col"]
+            frames, osd_pruned = run("concat", names, pipes, preds,
+                                     shards)
+            tabs = [fmt.decode_block(blob) for _, blob, _ in frames]
+            result = oc.median_exact(
+                [{col: t[col].ravel()} for t in tabs], col)
+            result_rows = 1
+        elif plan.exec_cls == EXEC_SERVER_CONCAT:
+            frames, osd_pruned = run("concat", names, pipes, preds,
+                                     shards)
+            parts = _split_frames(len(names), frames)
+            if plan.assemble == "parts":
+                result = parts
+            else:
+                result = concat_tables(
+                    [p for p in parts if p is not None])
+                result_rows = oc.table_n_rows(result)
+        elif plan.exec_cls == EXEC_TABLE_GATHER:
+            result = run("batch", names, pipes, (), shards)
+        elif plan.exec_cls == EXEC_CLIENT_GATHER:
+            result = self._client_eval(names, ops)
+            result_rows = _result_rows(ops, result)
+        else:
+            raise ValueError(f"unknown execution class {plan.exec_cls!r}")
+
+        if plan.access is not None:
+            scanned = len(names) - len(osd_pruned)
+            for _ in range(scanned):
+                self.vol.local.note_access(plan.access)
+
+        after = store.fabric.snapshot()
+        stats = {k: after[k] - before[k] for k in after}
+        stats.update(
+            objects_touched=len(names) - len(osd_pruned),
+            objects_pruned=len(plan.pruned) + len(osd_pruned),
+            pushdown=plan.pushdown,
+            approx_rewrite=plan.approx_rewrite,
+            exec_class=plan.exec_cls,
+            prune=plan.prune,
+            result_rows=result_rows,
+        )
+        return result, stats
+
+    def fetch_objects(self, names: Sequence[str],
+                      pipelines: Sequence[Sequence[oc.ObjOp]],
+                      packed: bool = False) -> list:
+        """Execute a per-object gather plan and return per-object
+        results aligned with ``names`` (decoded tables, or raw packed
+        partials) — the loader's entry point into the engine."""
+        plan = self.compile_gather(names, pipelines, packed=packed)
+        parts, _ = self.execute(plan)
+        return parts
+
+    # ------------------------------------------------------------ internals
+    def _direct(self, mode, names, pipelines, predicates, shards=()):
+        del shards  # the store regroups by primary OSD itself
+        store = self.vol.store
+        if mode == "combine":
+            got = store.exec_combine(names, pipelines,
+                                     prune=tuple(predicates) or None)
+            return got if isinstance(got, tuple) else (got, [])
+        if mode == "concat":
+            return store.exec_concat(names, pipelines,
+                                     prune=tuple(predicates) or None)
+        return store.exec_batch(names, pipelines)
+
+    def _client_eval(self, names, ops):
+        """The no-pushdown baseline: whole objects to the client, the
+        pipeline evaluated locally (byte accounting shows what pushdown
+        saves)."""
+        store = self.vol.store
+        result: Any = concat_tables(
+            [fmt.decode_block(store.get(n)) for n in names])
+        for o in ops:
+            impl = oc.get_impl(o.name)
+            if o.name == "median":
+                result = float(np.median(
+                    np.asarray(result[o.params["col"]]).ravel()))
+            elif not impl.table_out:
+                result = impl.combine([impl.local(result, **o.params)],
+                                      **o.params)
+            else:
+                result = impl.local(result, **o.params)
+        return result
+
+
+def _split_frames(n: int, frames) -> list:
+    """Re-slice per-OSD concatenated frames into per-object tables,
+    placed at their input positions (global row order restored)."""
+    parts: list[dict | None] = [None] * n
+    for idxs, blob, counts in frames:
+        tab = fmt.decode_block(blob)
+        off = 0
+        for i, c in zip(idxs, counts):
+            parts[i] = {k: v[off:off + c] for k, v in tab.items()}
+            off += c
+    return parts
+
+
+def _result_rows(ops, result) -> int:
+    if ops and not oc.get_impl(ops[-1].name).table_out:
+        return 1  # scalar / one aggregate row
+    return oc.table_n_rows(result) if isinstance(result, dict) else 1

@@ -1,15 +1,26 @@
-"""SkyhookDM-style driver/worker query engine (paper §4.2, Fig. 3/4).
+"""SkyhookDM-style driver/worker scheduling over the scan engine
+(paper §4.2, Fig. 3/4).
 
-Workflow (Fig. 4): client submits a Query -> the Driver generates object
-names + sub-queries -> Workers (the Dask-worker stand-ins) forward
-sub-queries to the storage extensions (``store.exec``), post-process
-partials if needed, and return them -> the Driver aggregates and answers.
+Workflow (Fig. 4): a client submits a :class:`Query` (the declarative
+shim) or a :class:`~repro.core.scan.Scan` (the composable builder) ->
+the Driver compiles it to ONE :class:`~repro.core.scan.PhysicalPlan`
+through the shared ``ScanEngine`` -> the plan's per-OSD request shards
+are scheduled over Workers, which forward them to the storage
+extensions (``exec_combine`` / ``exec_concat`` / ``exec_batch``) and
+relay the per-OSD partials or framed tables back -> the engine combines
+and emits the unified stats.
 
-The Driver/Worker split matters beyond parallelism: workers can run
-*non-pushdownable* post-processing near the storage tier (e.g. the final
-combine of an approximate quantile), which is exactly the paper's
-"Workers could further conduct some complicated computations against the
-results returned by Skyhook-Extensions".
+The Driver adds SCHEDULING only.  What to push down, how to prune
+(OSD-side by default — the predicates ride inside the workers' batched
+requests), and how to combine are all decided by the engine at compile
+time; the driver/worker layer is a transport that must preserve the
+store-call semantics.  This is exactly the paper's split: "Workers
+could further conduct some complicated computations against the results
+returned by Skyhook-Extensions", while the planning stays global.
+
+``execute_client_side`` is the no-pushdown baseline (full objects to
+the client, pipeline evaluated locally) — also compiled and executed by
+the engine, as the ``client-gather`` execution class.
 """
 
 from __future__ import annotations
@@ -19,44 +30,65 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any
 
-import numpy as np
-
-from repro.core import format as fmt
 from repro.core import objclass as oc
-from repro.core.logical import concat_tables
-from repro.core.partition import ObjectMap
+from repro.core.scan import Scan
 from repro.core.store import ObjectStore
 from repro.core.vol import GlobalVOL
 
 
 @dataclasses.dataclass(frozen=True)
 class Query:
-    """A declarative query against one mapped dataset."""
+    """A declarative query against one mapped dataset — now a thin shim
+    that compiles to a :class:`~repro.core.scan.Scan`.
+
+    ``filter`` accepts one ``(col, cmp, value)`` triple or a sequence
+    of them; ``filters`` is the explicit N-ary spelling.  All filters
+    AND together.  ``aggregate`` accepts one ``(fn, col)`` pair or a
+    sequence of pairs (compiled to one mergeable ``multi_agg`` tail);
+    ``fn`` may be ``"median"`` (holistic unless ``allow_approx``).
+    """
 
     dataset: str
-    filter: tuple | None = None            # (col, cmp, value)
+    filter: tuple | None = None            # (col, cmp, value) | sequence
     projection: tuple[str, ...] | None = None
-    aggregate: tuple | None = None         # (fn, col); fn may be "median"
+    aggregate: tuple | None = None         # (fn, col) | sequence of them
     allow_approx: bool = False
+    filters: tuple = ()                    # ((col, cmp, value), ...)
+
+    def to_scan(self) -> Scan:
+        s = Scan(dataset=self.dataset)
+        flts = list(_nested(self.filter)) + list(self.filters)
+        for col, cmp, value in flts:
+            s = s.filter(col, cmp, value)
+        if self.projection:
+            s = s.project(*self.projection)
+        for fn, col in _nested(self.aggregate):
+            s = s.median(col, approx=self.allow_approx) \
+                if fn == "median" else s.agg(fn, col)
+        return s
 
     def pipeline(self) -> list[oc.ObjOp]:
-        ops: list[oc.ObjOp] = []
-        if self.filter:
-            col, cmp, value = self.filter
-            ops.append(oc.op("filter", col=col, cmp=cmp, value=value))
-        if self.projection:
-            ops.append(oc.op("project", cols=list(self.projection)))
-        if self.aggregate:
-            fn, col = self.aggregate
-            if fn == "median":
-                ops.append(oc.op("median", col=col))
-            else:
-                ops.append(oc.op("agg", col=col, fn=fn))
-        return ops
+        return self.to_scan().pipeline()
+
+
+def _nested(spec) -> tuple:
+    """Normalize None | one tuple | sequence-of-tuples to a tuple of
+    tuples (how ``Query.filter``/``aggregate`` accept one or many)."""
+    if not spec:
+        return ()
+    if isinstance(spec[0], (tuple, list)):
+        return tuple(tuple(x) for x in spec)
+    return (tuple(spec),)
 
 
 @dataclasses.dataclass
 class QueryStats:
+    """Uniform per-query stats — emitted by the ONE engine, so every
+    path (vol.query, driver, client-side baseline) reports pushdown,
+    pruning, and cardinality identically.  ``result_rows`` is the
+    result's cardinality: table rows for table-out scans, 1 for
+    scalar/aggregate results (never None for a completed query)."""
+
     wall_s: float
     objects_touched: int
     objects_pruned: int
@@ -65,6 +97,9 @@ class QueryStats:
     pushdown: bool
     result_rows: int | None = None
     fabric_ops: int = 0        # client<->OSD round trips the query cost
+    rx_frames: int = 0         # framed responses the client parsed
+    exec_class: str = ""       # scan.EXEC_* the plan compiled to
+    prune: str = ""            # prune strategy the plan compiled to
 
     @property
     def selectivity_gain(self) -> float:
@@ -73,26 +108,33 @@ class QueryStats:
 
 
 class SkyhookWorker:
-    """Executes sub-queries against a set of objects via the storage
-    extensions; optionally post-processes before returning partials."""
+    """Executes sub-requests against a set of objects via the storage
+    extensions, relaying per-OSD partials / framed tables back."""
 
     def __init__(self, store: ObjectStore, worker_id: int):
         self.store = store
         self.worker_id = worker_id
 
-    def run(self, names: list[str], ops: list[oc.ObjOp],
-            combine: bool = False) -> list[Any]:
+    def run(self, names: list[str], ops, mode: str = "batch",
+            predicates: tuple = ()) -> Any:
         """Forward the shard as batched per-OSD objclass requests (one
         round trip per OSD this shard touches, not one per object).
-        With ``combine`` the OSDs fold their partials server-side and
-        the worker relays one partial per OSD request."""
-        if combine:
-            return self.store.exec_combine(names, ops)
+        ``mode`` follows the engine's runner protocol: "combine" folds
+        partials server-side, "concat" returns one framed table per
+        OSD, "batch" returns per-object results.  ``predicates`` ride
+        down for OSD-side pruning."""
+        prune = tuple(predicates) or None
+        if mode == "combine":
+            got = self.store.exec_combine(names, ops, prune=prune)
+            return got if isinstance(got, tuple) else (got, [])
+        if mode == "concat":
+            return self.store.exec_concat(names, ops, prune=prune)
         return self.store.exec_batch(names, ops)
 
 
 class SkyhookDriver:
-    """Schedules sub-queries over workers, combines partials."""
+    """Schedules a compiled plan's shards over workers; the engine does
+    the planning and the combining."""
 
     def __init__(self, vol: GlobalVOL, n_workers: int = 4):
         self.vol = vol
@@ -114,121 +156,100 @@ class SkyhookDriver:
             pass
 
     # ------------------------------------------------------------ execute
-    def execute(self, q: Query) -> tuple[Any, QueryStats]:
-        omap = self.vol.open(q.dataset)
-        ops = q.pipeline()
+    def scan(self, dataset: str) -> Scan:
+        """A fluent scan whose ``execute`` is scheduled by this driver
+        (the plan executes through ``_runner``, i.e. the workers)."""
+        return Scan(dataset=dataset).bind(self.vol, runner=self._runner)
+
+    def execute(self, q: Query | Scan) -> tuple[Any, QueryStats]:
+        s = q.to_scan() if isinstance(q, Query) else q
+        omap = self.vol.open(s.dataset)
+        t0 = time.perf_counter()
+        before = self.store.fabric.snapshot()  # include compile traffic
+        plan = self.vol.engine.compile(omap, s)
+        result, vstats = self.vol.engine.execute(
+            plan, runner=self._runner, before=before)
+        return result, self._stats(vstats, t0)
+
+    # ------------------------------------------------------------ baseline
+    def execute_client_side(self, q: Query | Scan) -> tuple[Any, QueryStats]:
+        """The no-pushdown baseline: fetch every object's full bytes to
+        the client and evaluate the pipeline locally (the engine's
+        ``client-gather`` execution class)."""
+        s = q.to_scan() if isinstance(q, Query) else q
+        omap = self.vol.open(s.dataset)
         t0 = time.perf_counter()
         before = self.store.fabric.snapshot()
-        result, vstats = self._dispatch(omap, ops, q)
-        after = self.store.fabric.snapshot()
-        rows = None
-        if isinstance(result, dict) and result:
-            rows = len(next(iter(result.values())))
-        stats = QueryStats(
+        plan = self.vol.engine.compile_ops(omap, s.pipeline(),
+                                           baseline=True)
+        result, vstats = self.vol.engine.execute(plan, before=before)
+        return result, self._stats(vstats, t0)
+
+    # ------------------------------------------------------------ internals
+    def _stats(self, vstats: dict, t0: float) -> QueryStats:
+        return QueryStats(
             wall_s=time.perf_counter() - t0,
             objects_touched=vstats["objects_touched"],
             objects_pruned=vstats["objects_pruned"],
-            client_rx_bytes=after["client_rx"] - before["client_rx"],
-            storage_local_bytes=after["local_bytes"] - before["local_bytes"],
+            client_rx_bytes=vstats["client_rx"],
+            storage_local_bytes=vstats["local_bytes"],
             pushdown=vstats["pushdown"],
-            result_rows=rows,
-            fabric_ops=after["ops"] - before["ops"],
+            result_rows=vstats["result_rows"],
+            fabric_ops=vstats["ops"],
+            rx_frames=vstats["rx_frames"],
+            exec_class=vstats["exec_class"],
+            prune=vstats["prune"],
         )
-        return result, stats
 
-    def _dispatch(self, omap: ObjectMap, ops: list[oc.ObjOp],
-                  q: Query) -> tuple[Any, dict]:
-        """Shard object list over workers (Fig. 4's scheduler role), then
-        combine exactly as GlobalVOL.query would."""
-        plan = self.vol.plan(omap, ops)
-        names = [n for n, _ in plan.sub_requests]
-        # shard by primary OSD (not round-robin) so each OSD's objects
-        # stay in ONE worker's batch: the whole query costs <= K
-        # batched requests for K OSDs regardless of worker count
-        by_osd: dict[str, list[str]] = {}
-        for n in names:
-            by_osd.setdefault(self.store.cluster.primary(n), []).append(n)
-        shards: list[list[str]] = [[] for _ in self.workers]
-        for j, (_, group) in enumerate(sorted(by_osd.items())):
-            shards[j % len(self.workers)].extend(group)
+    def _runner(self, mode: str, names: list[str], pipelines,
+                predicates: tuple, plan_shards: tuple = ()) -> Any:
+        """The engine's runner, scheduled over workers: the plan's
+        per-OSD shards (each OSD's objects stay in ONE worker's batch,
+        so the whole query still costs <= K batched requests for K OSDs
+        regardless of worker count) round-robin across workers, then
+        shard-local results translate back to global positions."""
+        shared = not pipelines or isinstance(pipelines[0], oc.ObjOp)
+        if not plan_shards:  # derive placement if the plan carries none
+            by_osd: dict[str, list[int]] = {}
+            for i, n in enumerate(names):
+                by_osd.setdefault(
+                    self.store.cluster.primary(n), []).append(i)
+            plan_shards = tuple(sorted(by_osd.items()))
+        shards: list[list[int]] = [[] for _ in self.workers]
+        for j, (_, idxs) in enumerate(plan_shards):
+            shards[j % len(self.workers)].extend(idxs)
 
-        rewritten = False
-        if ops and ops[-1].name == "median" and q.allow_approx:
-            col = ops[-1].params["col"]
-            lo, hi = self.vol._column_bounds(omap, col)
-            ops = ops[:-1] + [oc.op("quantile_sketch", col=col,
-                                    lo=lo, hi=hi)]
-            rewritten = True
-
-        tail = oc.get_impl(ops[-1].name) if ops else None
-        holistic = ops and not tail.table_out and tail.combine is None
-
-        if holistic:  # gather projected inputs through workers
-            col = ops[-1].params["col"]
-            sub_ops = [o for o in ops[:-1]] + [oc.op("project", cols=[col])]
-        else:
-            sub_ops = ops
-        # decomposable aggregate tails combine per OSD: each worker's
-        # shard returns one partial per OSD it touches, O(K) client_rx
-        combine = bool(sub_ops) and oc.pipeline_mergeable(sub_ops)
+        def run_shard(pair):
+            w, idxs = pair
+            if not idxs:
+                return idxs, ([] if mode == "batch" else ([], []))
+            sub_names = [names[i] for i in idxs]
+            sub_pipes = pipelines if shared \
+                else [pipelines[i] for i in idxs]
+            return idxs, w.run(sub_names, sub_pipes, mode=mode,
+                               predicates=predicates)
 
         if self.store.io_simulated():  # workers overlap simulated I/O
-            parts_nested = list(self._pool.map(
-                lambda wn: wn[0].run(wn[1], sub_ops, combine),
-                zip(self.workers, shards)))
+            outs = list(self._pool.map(run_shard,
+                                       zip(self.workers, shards)))
         else:  # compute-bound: threads only add GIL contention
-            parts_nested = [w.run(s, sub_ops, combine)
-                            for w, s in zip(self.workers, shards)]
-        partials = [p for ps in parts_nested for p in ps]
+            outs = [run_shard(p) for p in zip(self.workers, shards)]
 
-        if not ops or tail.table_out:
-            result = concat_tables([fmt.decode_block(b) for b in partials])
-        elif holistic:
-            col = ops[-1].params["col"]
-            tabs = [fmt.decode_block(b) for b in partials]
-            result = oc.median_exact(
-                [{col: t[col].ravel()} for t in tabs], col)
-        else:
-            result = oc.combine_partials(ops, partials)
-
-        return result, {"objects_touched": len(names),
-                        "objects_pruned": len(plan.pruned),
-                        "pushdown": plan.pushdown and not holistic,
-                        "approx_rewrite": rewritten}
-
-    # ------------------------------------------------------------ baseline
-    def execute_client_side(self, q: Query) -> tuple[Any, QueryStats]:
-        """The no-pushdown baseline: fetch every (non-pruned) object's full
-        bytes to the client and evaluate the pipeline locally."""
-        omap = self.vol.open(q.dataset)
-        ops = q.pipeline()
-        t0 = time.perf_counter()
-        before = self.store.fabric.snapshot()
-        tables = []
-        for extent in omap:
-            blob = self.store.get(extent.name)
-            tables.append(fmt.decode_block(blob))
-        table = concat_tables(tables)
-        result: Any = table
-        for o in ops:
-            impl = oc.get_impl(o.name)
-            if o.name == "median":
-                result = float(np.median(np.asarray(
-                    result[o.params["col"]]).ravel()))
-            elif not impl.table_out:
-                result = impl.combine([impl.local(result, **o.params)],
-                                      **o.params)
-            else:
-                result = impl.local(result, **o.params)
-        after = self.store.fabric.snapshot()
-        rows = None
-        if isinstance(result, dict) and result:
-            rows = len(next(iter(result.values())))
-        stats = QueryStats(
-            wall_s=time.perf_counter() - t0,
-            objects_touched=omap.n_objects, objects_pruned=0,
-            client_rx_bytes=after["client_rx"] - before["client_rx"],
-            storage_local_bytes=after["local_bytes"] - before["local_bytes"],
-            pushdown=False, result_rows=rows,
-            fabric_ops=after["ops"] - before["ops"])
-        return result, stats
+        if mode == "combine":
+            partials, pruned = [], []
+            for _, (p, pr) in outs:
+                partials.extend(p)
+                pruned.extend(pr)
+            return partials, pruned
+        if mode == "concat":
+            frames, pruned = [], []
+            for idxs, (fr, pr) in outs:
+                frames.extend((tuple(idxs[k] for k in local), blob, counts)
+                              for local, blob, counts in fr)
+                pruned.extend(pr)
+            return frames, pruned
+        results: list[Any] = [None] * len(names)
+        for idxs, rs in outs:
+            for i, r in zip(idxs, rs):
+                results[i] = r
+        return results

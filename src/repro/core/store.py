@@ -55,7 +55,8 @@ from typing import Any, Callable, Iterable, Sequence
 import numpy as np
 
 from repro.core.objclass import (
-    ObjOp, merge_partials, pipeline_mergeable, run_pipeline)
+    ObjOp, concat_encode, get_impl as _impl, merge_partials,
+    pipeline_mergeable, run_pipeline, table_n_rows, zone_map_prunes)
 from repro.core.placement import ClusterMap, pg_delta
 
 # fixed cost modeled for one client<->OSD round trip (headers, framing,
@@ -75,6 +76,7 @@ class Fabric:
     ops: int = 0                # client<->OSD round trips (requests)
     overhead_bytes: int = 0     # per-request fixed cost (ops * 128 B)
     xattr_ops: int = 0          # metadata (xattr) lookups
+    rx_frames: int = 0          # framed result payloads the client parsed
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -83,7 +85,7 @@ class Fabric:
         self.client_tx = self.client_rx = 0
         self.replica_bytes = self.recovery_bytes = 0
         self.local_bytes = self.ops = 0
-        self.overhead_bytes = self.xattr_ops = 0
+        self.overhead_bytes = self.xattr_ops = self.rx_frames = 0
 
 
 class OSDDown(RuntimeError):
@@ -169,25 +171,60 @@ class OSD:
         blob = self.get(name)
         return run_pipeline(blob, ops), len(blob)
 
+    def _prunes_locally(self, name: str, prune) -> bool:
+        """Pushed-down prune: does this object's CURRENT local zone map
+        prove the filter conjunction matches none of its rows?  Runs
+        against the OSD's own xattrs, so the decision can never be
+        stale — there is no client cache (and no plan→execute TOCTOU
+        window) in the loop."""
+        if not prune:
+            return False
+        with self.lock:
+            x = self.xattrs.get(name)
+        return x is not None and zone_map_prunes(x.get("zone_map", {}),
+                                                 prune)
+
     def exec_cls_batch(
             self, items: Sequence[tuple[str, list[ObjOp]]],
-            combine: bool = False) -> Any:
+            combine: bool = False, concat: bool = False,
+            prune=None) -> Any:
         """One batched objclass request: run each (name, pipeline) item
         against local data.  The per-request latency is paid ONCE for
         the whole batch — that is the round-trip amortization batching
         buys.  Per-item failures come back as ``ObjectNotFound`` values
         (not raises) so the rest of the batch still completes.
 
+        ``prune`` is an optional tuple of (col, cmp, value) filter
+        predicates pushed down with the request: before scanning an
+        object the OSD consults its local zone-map xattr and skips
+        objects the conjunction provably cannot match — the pruned
+        names ride back in the response (they are a semantic skip, not
+        an absence, so the client must not fail them over).  Only the
+        combine/concat forms accept it (plain responses are positional).
+
         With ``combine=True`` the items must share one decomposable
         pipeline whose tail has an associative ``merge``: the OSD folds
         its local partials into ONE and returns a
-        ``(partial|None, n_found, scanned_bytes, missing_names)`` tuple
-        — a single partial leaves the OSD per request, not one per
-        object (the server-side half of the two-level combine).
+        ``(partial|None, n_found, scanned_bytes, missing_names,
+        pruned_names)`` tuple — a single partial leaves the OSD per
+        request, not one per object (the server-side half of the
+        two-level combine).
+
+        With ``concat=True`` every item's pipeline must be table-out:
+        the OSD concatenates the per-object result tables (item order)
+        and encodes them as ONE framed block, returning
+        ``(blob|None, served_indices, row_counts, scanned_bytes,
+        missing_names, pruned_names)`` — the table-out half of the same
+        symmetry, bounding per-OSD response framing at one frame.
         """
+        if combine and concat:
+            raise ValueError("combine and concat are exclusive")
         if self.latency_s:
             time.sleep(self.latency_s)
-        if not combine:
+        if not combine and not concat:
+            if prune:
+                raise ValueError("prune needs combine or concat "
+                                 "(plain batch responses are positional)")
             out: list[Any] = []
             for name, ops in items:
                 with self.lock:
@@ -197,11 +234,41 @@ class OSD:
                 else:
                     out.append((run_pipeline(blob, ops), len(blob)))
             return out
-        ops = items[0][1]
-        partials: list[Any] = []
+
+        pruned: list[str] = []
         missing: list[str] = []
         scanned = 0
+        if concat:
+            tables: list[dict] = []
+            served: list[int] = []
+            counts: list[int] = []
+            for k, (name, ops) in enumerate(items):
+                if self._prunes_locally(name, prune):
+                    pruned.append(name)
+                    continue
+                with self.lock:
+                    blob = self.data.get(name)
+                if blob is None:
+                    missing.append(name)
+                    continue
+                out = run_pipeline(blob, ops, encode=False)
+                if not isinstance(out, dict) or (
+                        ops and not _impl(ops[-1].name).table_out):
+                    raise ValueError("concat needs table-out pipelines")
+                scanned += len(blob)
+                tables.append(out)
+                served.append(k)
+                counts.append(table_n_rows(out))
+            frame = concat_encode(tables) if tables else None
+            return (frame, tuple(served), tuple(counts), scanned,
+                    tuple(missing), tuple(pruned))
+
+        ops = items[0][1]
+        partials: list[Any] = []
         for name, _ in items:
+            if self._prunes_locally(name, prune):
+                pruned.append(name)
+                continue
             with self.lock:
                 blob = self.data.get(name)
             if blob is None:
@@ -210,7 +277,8 @@ class OSD:
             partials.append(run_pipeline(blob, ops))
             scanned += len(blob)
         merged = merge_partials(ops, partials) if partials else None
-        return merged, len(partials), scanned, tuple(missing)
+        return (merged, len(partials), scanned, tuple(missing),
+                tuple(pruned))
 
     def list_xattrs(self, names: Sequence[str]) -> dict[str, dict]:
         """One batched metadata request: the xattrs of every local object
@@ -348,6 +416,34 @@ class ObjectStore:
                 for osd_id, idxs in ordered]
         return [f.result() for f in futs]
 
+    def _scatter_failover(self, names: list[str], run_group,
+                          handle) -> None:
+        """The shared replica-failover skeleton of the batched read
+        planes (``exec_batch`` / ``exec_combine`` / ``exec_concat``):
+        group pending items
+        by their next untried acting OSD, dispatch one batched request
+        per group, account the round trip, and let ``handle`` consume
+        each per-group response — returning the item indices to retry
+        (with their ``last_err`` set).  A whole-request failure (OSD
+        down) retries every item of its group."""
+        tried: list[set[str]] = [set() for _ in names]
+        last_err: list[Exception | None] = [None] * len(names)
+        pending = list(range(len(names)))
+        while pending:
+            ordered = self._next_targets(pending, names, tried, last_err)
+            outs = self._dispatch_groups(ordered, run_group)
+            pending = []
+            for (osd_id, idxs), got in zip(ordered, outs):
+                self._account_request()  # one round trip per OSD group
+                for i in idxs:
+                    tried[i].add(osd_id)
+                if isinstance(got, Exception):
+                    for i in idxs:
+                        last_err[i] = got
+                    pending.extend(idxs)
+                    continue
+                pending.extend(handle(idxs, got, last_err))
+
     # ------------------------------------------------------------ client IO
     def put(self, name: str, blob: bytes, xattr: dict | None = None) -> int:
         """Replicated write: client -> primary -> (fan-out) replicas.
@@ -473,6 +569,7 @@ class ObjectStore:
             try:
                 blob = self._osd(osd_id).get(name)
                 self.fabric.client_rx += len(blob)
+                self.fabric.rx_frames += 1
                 self._account_request()
                 self._client_xfer(len(blob))
                 return blob
@@ -508,6 +605,7 @@ class ObjectStore:
                 # best (only) hope — wait it out like a plain get()
                 blob = fut.result()
         self.fabric.client_rx += len(blob)
+        self.fabric.rx_frames += 1
         self._account_request()
         self._client_xfer(len(blob))
         return blob
@@ -523,6 +621,7 @@ class ObjectStore:
                 rx = _result_nbytes(result)
                 self.fabric.local_bytes += scanned
                 self.fabric.client_rx += rx
+                self.fabric.rx_frames += 1
                 self._account_request()
                 self._client_xfer(rx)
                 return result
@@ -558,41 +657,37 @@ class ObjectStore:
             pipelines = [list(ops)] * len(names)
 
         results: list[Any] = [None] * len(names)
-        last_err: list[Exception | None] = [None] * len(names)
-        tried: list[set[str]] = [set() for _ in names]
-        pending = list(range(len(names)))
 
-        def run_group(osd_id: str, idxs: list[int]) -> list[tuple[int, Any]]:
-            items = [(names[i], pipelines[i]) for i in idxs]
+        def run_group(osd_id: str, idxs: list[int]) -> Any:
             try:
                 osd = self._osd(osd_id)
-                return list(zip(idxs, osd.exec_cls_batch(items)))
+                return osd.exec_cls_batch(
+                    [(names[i], pipelines[i]) for i in idxs])
             except OSDDown as e:  # whole request failed
-                return [(i, e) for i in idxs]
+                return e
 
-        while pending:
-            ordered = self._next_targets(pending, names, tried, last_err)
-            outs = self._dispatch_groups(ordered, run_group)
-            pending = []
-            for (osd_id, _), pairs in zip(ordered, outs):
-                self._account_request()  # one round trip per OSD group
-                group_rx = 0
-                for i, r in pairs:
-                    tried[i].add(osd_id)
-                    if isinstance(r, Exception):
-                        last_err[i] = r
-                        pending.append(i)
-                        continue
-                    result, scanned = r
-                    self.fabric.local_bytes += scanned
-                    group_rx += _result_nbytes(result)
-                    results[i] = result
-                self.fabric.client_rx += group_rx
-                self._client_xfer(group_rx)
+        def handle(idxs, got, last_err):
+            group_rx = 0
+            retry = []
+            for i, r in zip(idxs, got):
+                if isinstance(r, Exception):  # per-item miss on this OSD
+                    last_err[i] = r
+                    retry.append(i)
+                    continue
+                result, scanned = r
+                self.fabric.local_bytes += scanned
+                group_rx += _result_nbytes(result)
+                self.fabric.rx_frames += 1
+                results[i] = result
+            self.fabric.client_rx += group_rx
+            self._client_xfer(group_rx)
+            return retry
+
+        self._scatter_failover(names, run_group, handle)
         return results
 
-    def exec_combine(self, names: Iterable[str],
-                     ops: list[ObjOp]) -> list[Any]:
+    def exec_combine(self, names: Iterable[str], ops: list[ObjOp],
+                     prune=None) -> Any:
         """Batched pushdown with SERVER-SIDE combine.
 
         Each involved OSD runs the (shared, decomposable) pipeline over
@@ -607,54 +702,120 @@ class ObjectStore:
         merged partial per issued request that found at least one
         object; finish with ``objclass.combine_partials`` (merged
         partials are shape-identical to raw ones).
+
+        ``prune`` pushes a tuple of (col, cmp, value) filter predicates
+        down with each request: the OSD skips objects whose CURRENT
+        local zone map proves the conjunction matches nothing, and the
+        call returns ``(partials, pruned_names)`` instead of the bare
+        partial list.  Pruned objects are a semantic skip — they are
+        NOT retried on replicas.
         """
         names = list(names)
         if not names:
-            return []
+            return ([], []) if prune is not None else []
         ops = list(ops)
         if not pipeline_mergeable(ops):
             raise ValueError("exec_combine needs a decomposable pipeline "
                              "whose tail has an associative merge")
 
         out_partials: list[Any] = []
-        tried: list[set[str]] = [set() for _ in names]
-        last_err: list[Exception | None] = [None] * len(names)
-        pending = list(range(len(names)))
+        out_pruned: list[str] = []
 
         def run_group(osd_id: str, idxs: list[int]) -> Any:
             try:
                 osd = self._osd(osd_id)
                 return osd.exec_cls_batch(
-                    [(names[i], ops) for i in idxs], combine=True)
+                    [(names[i], ops) for i in idxs], combine=True,
+                    prune=prune)
             except OSDDown as e:
                 return e
 
-        while pending:
-            ordered = self._next_targets(pending, names, tried, last_err)
-            outs = self._dispatch_groups(ordered, run_group)
-            pending = []
-            for (osd_id, idxs), got in zip(ordered, outs):
-                self._account_request()  # one round trip per OSD group
-                for i in idxs:
-                    tried[i].add(osd_id)
-                if isinstance(got, Exception):
-                    for i in idxs:
-                        last_err[i] = got
-                    pending.extend(idxs)
-                    continue
-                merged, _, scanned, missing = got
-                self.fabric.local_bytes += scanned
-                if merged is not None:
-                    rx = _result_nbytes(merged)
-                    self.fabric.client_rx += rx
-                    self._client_xfer(rx)
-                    out_partials.append(merged)
-                miss = set(missing)
-                for i in idxs:
-                    if names[i] in miss:
-                        last_err[i] = ObjectNotFound(names[i])
-                        pending.append(i)
-        return out_partials
+        def handle(idxs, got, last_err):
+            merged, _, scanned, missing, pruned = got
+            self.fabric.local_bytes += scanned
+            if merged is not None:
+                rx = _result_nbytes(merged)
+                self.fabric.client_rx += rx
+                self.fabric.rx_frames += 1
+                self._client_xfer(rx)
+                out_partials.append(merged)
+            out_pruned.extend(pruned)
+            miss = set(missing)
+            retry = [i for i in idxs if names[i] in miss]
+            for i in retry:
+                last_err[i] = ObjectNotFound(names[i])
+            return retry
+
+        self._scatter_failover(names, run_group, handle)
+        return (out_partials, out_pruned) if prune is not None \
+            else out_partials
+
+    def exec_concat(self, names: Iterable[str],
+                    ops: list[ObjOp] | Sequence[list[ObjOp]],
+                    prune=None) -> tuple[list, list[str]]:
+        """Batched pushdown with SERVER-SIDE table concat — the
+        table-out twin of ``exec_combine``.
+
+        Each involved OSD runs its items' (table-out) pipelines over
+        local data, concatenates the per-object result tables, and
+        returns ONE encoded block per request — a filter→project scan
+        over N objects on K OSDs moves exactly K framed responses
+        (``rx_frames`` O(K)) instead of N.  ``ops`` is one shared
+        pipeline or a per-object sequence (``len == len(names)``),
+        mirroring ``exec_batch``.
+
+        Returns ``(frames, pruned_names)`` where each frame is
+        ``(input_indices, blob, row_counts)``: the indices (into
+        ``names``) this frame serves, in the order their rows appear in
+        the concatenated block, with ``row_counts[j]`` rows belonging
+        to ``indices[j]`` — everything the client needs to re-slice the
+        block into per-object tables and restore global row order.
+        ``prune`` behaves exactly as in ``exec_combine`` (OSD-side
+        zone-map skip against current xattrs, no replica retry).
+        Missing objects fail over to the next replica as fresh batched
+        requests.
+        """
+        names = list(names)
+        if not names:
+            return [], []
+        if ops and isinstance(ops[0], (list, tuple)):
+            pipelines = [list(p) for p in ops]
+            if len(pipelines) != len(names):
+                raise ValueError(
+                    f"{len(pipelines)} pipelines for {len(names)} objects")
+        else:
+            pipelines = [list(ops)] * len(names)
+
+        frames: list[tuple] = []
+        out_pruned: list[str] = []
+
+        def run_group(osd_id: str, idxs: list[int]) -> Any:
+            try:
+                osd = self._osd(osd_id)
+                return osd.exec_cls_batch(
+                    [(names[i], pipelines[i]) for i in idxs],
+                    concat=True, prune=prune)
+            except OSDDown as e:
+                return e
+
+        def handle(idxs, got, last_err):
+            blob, served, counts, scanned, missing, pruned = got
+            self.fabric.local_bytes += scanned
+            if blob is not None:
+                self.fabric.client_rx += len(blob)
+                self.fabric.rx_frames += 1
+                self._client_xfer(len(blob))
+                frames.append(
+                    (tuple(idxs[k] for k in served), blob, counts))
+            out_pruned.extend(pruned)
+            miss = set(missing)
+            retry = [i for i in idxs if names[i] in miss]
+            for i in retry:
+                last_err[i] = ObjectNotFound(names[i])
+            return retry
+
+        self._scatter_failover(names, run_group, handle)
+        return frames, out_pruned
 
     def exec_many(self, names: Iterable[str], ops: list[ObjOp],
                   workers: int = 8) -> list[Any]:

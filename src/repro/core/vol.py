@@ -2,32 +2,34 @@
 
 ``GlobalVOL`` is the client-side plugin: it intercepts dataset-level
 calls (create/write/read/query), decomposes them into per-object
-sub-requests using the ObjectMap, scatter/gathers against the store, and
-performs *global* optimizations (object pruning via zone maps, parallel
-dispatch, decomposable-op pushdown planning).
+sub-requests using the ObjectMap, and hands every read-side request to
+the ONE scan engine (``core.scan``): ``read`` compiles to a row-range
+``PhysicalPlan``, ``query`` compiles a raw objclass pipeline, and
+``scan`` exposes the fluent builder (``vol.scan("ds").filter(...)
+.agg(...).execute()``).  The engine — not this module — decides the
+prune strategy and execution class; the VOL contributes the global
+metadata the engine compiles against (ObjectMap, zone-map cache,
+column bounds for the approx-median rewrite).
 
 Every interaction rides the store's symmetric per-OSD batch plane:
 writes go through ``ObjectStore.put_batch`` (one request per primary
-OSD), reads/queries through ``exec_batch`` / ``exec_combine`` (for
-decomposable aggregate tails the combine runs *on* each OSD, so the
-client receives one partial per OSD), and zone-map warming through
-``list_zone_maps`` (one metadata request per OSD) — fabric ops scale
-with the number of OSDs, not the number of objects, on every path.
+OSD); compiled plans execute through ``exec_combine`` (aggregate
+tails: one partial per OSD), ``exec_concat`` (table-out tails: ONE
+framed table response per OSD), or ``exec_batch`` (per-object
+results) — fabric ops AND result frames scale with the number of OSDs,
+not the number of objects, on every path.
 
-Planning consults an epoch-keyed client-side zone-map cache instead of
-issuing one xattr lookup per (object x filter) per query; the cache is
-invalidated (a) wholesale whenever the cluster-map epoch bumps
-(failure / resize — the acting sets and surviving xattrs may have
-changed), and (b) per object when this client rewrites it (``write``
-refreshes the object's zone map).  Cross-client coherence comes from
-the store's monotonic per-object ``version`` tag (stamped on every
-put): each cache entry remembers the version it was read at, and
-``plan`` revalidates every prune-positive object against its current
-version (one batched request per OSD) before trusting the prune.  That
-narrows the stale-prune window from the cache's lifetime to the gap
-between plan and execute — the unavoidable TOCTOU of any client-side
-prune; a rewrite landing inside that gap is caught by the next plan,
-not this one — at a cost of at most K extra metadata requests.
+Pruning is pushed down by default: the filter predicates ride inside
+the batched objclass request and each OSD skips objects its own
+CURRENT zone-map xattrs rule out — zero client zone-map requests and
+no plan→execute TOCTOU window.  The classic client-side prune
+(``plan``) remains for the ``prune="client"`` strategy: it consults an
+epoch-keyed zone-map cache (invalidated wholesale on cluster-epoch
+bumps, per object on local rewrites, warmed in one metadata request
+per OSD) and revalidates every prune-positive object against the
+store's monotonic per-object ``version`` tag — narrowing cross-client
+staleness to the plan→execute gap, which only the pushed-down prune
+closes entirely.
 
 ``LocalVOL`` is the storage-side plugin: it decides the *physical*
 representation of each object (layout row/col, per-column codec) from
@@ -46,9 +48,10 @@ import numpy as np
 from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core.logical import (
-    LogicalDataset, RowRange, concat_tables, validate_table)
+    LogicalDataset, RowRange, validate_table)
 from repro.core.partition import (
     ObjectMap, PartitionPolicy, objmap_key, plan_partition)
+from repro.core.scan import Scan, ScanEngine
 from repro.core.store import ObjectStore
 
 
@@ -121,6 +124,9 @@ class GlobalVOL:
         self.store = store
         self.local = local or LocalVOL()
         self.workers = workers
+        # the ONE plan→compile→execute surface (core.scan); read/query/
+        # scan and the Skyhook driver all route through it
+        self.engine = ScanEngine(self)
         # client-side zone-map cache, keyed by cluster-map epoch:
         # name -> (zone_map, version-it-was-read-at).  Warmed in one
         # batched metadata request per OSD instead of one xattr lookup
@@ -225,29 +231,34 @@ class GlobalVOL:
             self._zm_cache[name] = (zm, v)  # keep the cache fresh
         return sum(len(b) for b in blobs)
 
+    # ------------------------------------------------------------ scan
+    def scan(self, dataset: str | ObjectMap) -> Scan:
+        """Open a fluent scan over a mapped dataset: compose filters /
+        projection / aggregates, then ``.execute()`` (or ``.explain()``
+        for the compiled :class:`~repro.core.scan.PhysicalPlan`)."""
+        name = dataset if isinstance(dataset, str) \
+            else dataset.dataset.name
+        return Scan(dataset=name).bind(self)
+
     # ------------------------------------------------------------ read
     def read(self, omap: ObjectMap, rows: RowRange,
              columns: list[str] | None = None) -> dict[str, np.ndarray]:
         """Gather a row range; per-object select+project run storage-side
-        so only requested rows/columns move.  The per-object pipelines go
-        out as one batched request per OSD (``exec_batch``)."""
-        subs = omap.lookup(rows)
-        names, pipelines = [], []
-        for extent, local in subs:
-            pipeline = [oc.op("select", rows=(local.start, local.stop))]
-            if columns is not None:
-                pipeline.append(oc.op("project", cols=list(columns)))
-            names.append(extent.name)
-            pipelines.append(pipeline)
-        blobs = self.store.exec_batch(names, pipelines)
-        for _ in names:
-            self.local.note_access("fetch")
-        return concat_tables([fmt.decode_block(b) for b in blobs])
+        so only requested rows/columns move, and each OSD concatenates
+        its result tables into ONE framed response (``exec_concat``)."""
+        plan = self.engine.compile_read(omap, rows, columns)
+        table, _ = self.engine.execute(plan)
+        return table
 
     # ------------------------------------------------------------ query
-    def plan(self, omap: ObjectMap, ops: list[oc.ObjOp]) -> ReadPlan:
-        """Global optimization: prune objects whose zone maps cannot match
-        a leading filter; decide pushdown vs gather.
+    def plan(self, omap: ObjectMap, ops: list[oc.ObjOp],
+             names: list[str] | None = None) -> ReadPlan:
+        """CLIENT-SIDE prune planning (the ``prune="client"`` strategy;
+        the default pushed-down prune needs no client plan at all —
+        see ``core.scan``): prune objects whose cached zone maps cannot
+        match the filter conjunction.  ``names`` restricts planning to
+        a candidate subset (e.g. a row-ranged scan's objects) so the
+        warm/revalidation never touches the rest of the dataset.
 
         Prune decisions are only as good as the cached zone map, so
         every prune-positive object is revalidated against its current
@@ -260,21 +271,17 @@ class GlobalVOL:
         scanning an object whose zone map went stale is safe, its data
         is read fresh from the OSD."""
         pushdown = oc.pipeline_decomposable(ops)
+        names = list(names) if names is not None \
+            else [e.name for e in omap]
         prunable = [o for o in ops if o.name == "filter"]
         if not prunable:
-            return ReadPlan(tuple((e.name, None) for e in omap), (),
+            return ReadPlan(tuple((n, None) for n in names), (),
                             pushdown)
-        names = [e.name for e in omap]
         fresh = self._warm_zone_maps(names)  # K requests however cold
+        preds = oc.filter_predicates(prunable)
 
         def prunes(name: str) -> bool:
-            zm = self._zm_cache[name][0]
-            for f in prunable:
-                rng = zm.get(f.params["col"])
-                if rng and _prunable(rng, f.params["cmp"],
-                                     f.params["value"]):
-                    return True
-            return False
+            return oc.zone_map_prunes(self._zm_cache[name][0], preds)
 
         keep, pruned = [], []
         for name in names:
@@ -298,56 +305,20 @@ class GlobalVOL:
                         pushdown)
 
     def query(self, omap: ObjectMap, ops: list[oc.ObjOp],
-              *, allow_approx: bool = False) -> tuple[Any, dict]:
-        """Execute an op pipeline over the whole dataset.
-
-        Decomposable pipelines push down: each object runs the pipeline on
-        its OSD, partials combine client-side.  Holistic tails (median)
-        gather their projected input instead — unless ``allow_approx``
-        rewrites them to the decomposable sketch (paper §3.2).
-        Returns (result, stats).
+              *, allow_approx: bool = False,
+              prune: str = "auto") -> tuple[Any, dict]:
+        """Execute an op pipeline over the whole dataset through the
+        scan engine: mergeable aggregate tails combine per OSD, table
+        tails concatenate per OSD, holistic tails (median) gather their
+        projected input — unless ``allow_approx`` rewrites them to the
+        decomposable sketch (paper §3.2).  ``prune`` picks the strategy
+        ("auto"/"pushdown": predicates ride to the OSDs; "client": the
+        cached-zone-map planner; "none").  Returns (result, stats).
         """
-        ops = list(ops)
-        rewritten = False
-        if ops and ops[-1].name == "median" and allow_approx:
-            col = ops[-1].params["col"]
-            lo, hi = self._column_bounds(omap, col)
-            ops[-1] = oc.op("quantile_sketch", col=col, lo=lo, hi=hi)
-            rewritten = True
-
-        plan = self.plan(omap, ops)
-        names = [n for n, _ in plan.sub_requests]
         before = self.store.fabric.snapshot()
-        tail = oc.get_impl(ops[-1].name) if ops else None
-
-        if ops and not tail.table_out and tail.combine is not None:
-            if oc.pipeline_mergeable(ops):
-                # two-level combine: each OSD folds its local partials
-                # and ships ONE back — client_rx is O(K), not O(N)
-                partials = self.store.exec_combine(names, ops)
-            else:
-                partials = self.store.exec_batch(names, ops)
-            for _ in names:
-                self.local.note_access("scan")
-            result = oc.combine_partials(ops, partials)
-        elif ops and not tail.table_out:  # holistic: gather projected input
-            proj = [oc.op(o.name, **o.params) for o in ops[:-1]]
-            col = ops[-1].params["col"]
-            proj.append(oc.op("project", cols=[col]))
-            blobs = self.store.exec_batch(names, proj)
-            cols = [fmt.decode_block(b) for b in blobs]
-            result = oc.median_exact(
-                [{col: c[col].ravel()} for c in cols], col)
-        else:  # table-out pipeline: gather result tables
-            blobs = self.store.exec_batch(names, ops)
-            result = concat_tables([fmt.decode_block(b) for b in blobs])
-
-        after = self.store.fabric.snapshot()
-        stats = {k: after[k] - before[k] for k in after}
-        stats.update(objects_touched=len(names),
-                     objects_pruned=len(plan.pruned),
-                     pushdown=plan.pushdown, approx_rewrite=rewritten)
-        return result, stats
+        plan = self.engine.compile_ops(
+            omap, ops, allow_approx=allow_approx, prune=prune)
+        return self.engine.execute(plan, before=before)
 
     # ------------------------------------------------------------ helpers
     def _column_bounds(self, omap: ObjectMap, col: str) -> tuple[float, float]:
@@ -360,18 +331,3 @@ class GlobalVOL:
         if not np.isfinite(lo):
             lo, hi = 0.0, 1.0
         return float(lo), float(hi) + 1e-9
-
-
-def _prunable(rng: list, cmp: str, value: float) -> bool:
-    lo, hi = rng
-    if cmp == "<":
-        return lo >= value
-    if cmp == "<=":
-        return lo > value
-    if cmp == ">":
-        return hi <= value
-    if cmp == ">=":
-        return hi < value
-    if cmp == "==":
-        return value < lo or value > hi
-    return False

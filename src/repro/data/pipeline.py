@@ -8,8 +8,10 @@ The loader is the GlobalVOL acting as a training-data client:
   * data-parallel aligned: each host/dp-rank fetches only its slice of
     the global batch (``dp_rank``/``dp_size``), and the per-object
     sub-requests run storage-side (select pushdown) so only that slice
-    moves — one batched objclass request per OSD (the store's symmetric
-    per-OSD batch plane), never one per contiguous run;
+    moves — compiled and executed through the shared ``ScanEngine``
+    (``fetch_objects``), so a plain fetch rides the server-concat plane
+    (ONE framed table response per OSD) and a packed fetch gathers raw
+    word partials, never one request per contiguous run;
   * packed mode: rows are fetched as planar-bitpacked words via the
     zero-decode ``select_packed`` objclass op — bytes on the wire (and
     into HBM) are ~bits/32 of raw, and the unpack happens in the
@@ -30,7 +32,6 @@ from typing import Iterator
 
 import numpy as np
 
-from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core.logical import RowRange
 from repro.core.partition import ObjectMap
@@ -148,8 +149,7 @@ class ObjectDataLoader:
             return {"tokens_packed": np.concatenate(packed_parts, axis=0)}
 
         parts = []
-        for (extent, run, lo, _), blob in zip(runs, results):
-            tab = fmt.decode_block(blob)
+        for (extent, run, lo, _), tab in zip(runs, results):
             keep = (run - extent.row_start - lo).astype(np.int64)
             parts.append(tab["tokens"][keep])
         toks = np.concatenate(parts, axis=0)
@@ -158,14 +158,18 @@ class ObjectDataLoader:
         return {"tokens": toks, "labels": labels}
 
     def _exec_runs(self, names: list[str], pipelines: list[list]):
+        """Per-run results (decoded tables, or packed word partials),
+        aligned with ``names``."""
         if self.hedge_timeout_s is not None:
             # hedged read of the raw objects, then local pipelines: used
             # when an OSD is straggling (exec would block on the slow
             # primary).
             return [oc.run_pipeline(
-                self.vol.store.get_hedged(n, self.hedge_timeout_s), p)
+                self.vol.store.get_hedged(n, self.hedge_timeout_s), p,
+                encode=False)
                 for n, p in zip(names, pipelines)]
-        return self.vol.store.exec_batch(names, pipelines)
+        return self.vol.engine.fetch_objects(names, pipelines,
+                                             packed=self.packed)
 
     # ------------------------------------------------------------ iterate
     def make_batch(self, step: int) -> dict[str, np.ndarray]:

@@ -316,6 +316,10 @@ def test_plan_warms_cache_in_k_requests():
 
 
 # --------------------------------------------- cross-client coherence
+# (the client-side prune plane: pinned to prune="client" — under the
+# default pushed-down prune the OSD always sees its own CURRENT zone
+# maps, so there is no cache to go stale; tests/test_scan.py covers
+# that side of the symmetry)
 def test_two_client_stale_zone_map_caught_by_version_tag():
     """Client A warms its zone-map cache; client B rewrites the data at
     the SAME cluster epoch.  A's next plan must revalidate its
@@ -327,7 +331,7 @@ def test_two_client_stale_zone_map_caught_by_version_tag():
 
     impossible = [oc.op("filter", col="y", cmp=">", value=2000),
                   oc.op("agg", col="x", fn="count")]
-    res, stats = vol_a.query(omap, impossible)
+    res, stats = vol_a.query(omap, impossible, prune="client")
     assert res == 0.0 and stats["objects_pruned"] == omap.n_objects
 
     # client B (same epoch!) rewrites with values that DO match
@@ -336,7 +340,7 @@ def test_two_client_stale_zone_map_caught_by_version_tag():
     vol_b.write(omap, table2)
     assert store.cluster.epoch == 0  # no epoch bump to hide behind
 
-    res2, stats2 = vol_a.query(omap, impossible)
+    res2, stats2 = vol_a.query(omap, impossible, prune="client")
     assert res2 == float(len(table2["y"]))  # stale prune would say 0
     assert stats2["objects_pruned"] == 0
 
@@ -358,7 +362,7 @@ def test_revalidated_unprune_preserves_row_order():
     assert plan_a.pruned == (first.name,)
     # client B rewrites everything back so nothing should prune
     vol_b.write(omap, table)
-    out, _ = vol_a.query(omap, flt)  # table-out pipeline
+    out, _ = vol_a.query(omap, flt, prune="client")  # table-out pipeline
     assert np.array_equal(out["y"], table["y"])  # rows in ROW order
 
 
@@ -368,9 +372,9 @@ def test_version_revalidation_costs_only_k_requests():
     primaries = {store.cluster.primary(n) for n in omap.object_names()}
     impossible = [oc.op("filter", col="y", cmp=">", value=2000),
                   oc.op("agg", col="x", fn="count")]
-    vol.query(omap, impossible)  # cache warm, everything prunes
+    vol.query(omap, impossible, prune="client")  # warm; everything prunes
     store.fabric.reset()
-    vol.query(omap, impossible)
+    vol.query(omap, impossible, prune="client")
     # the repeat query pays ONLY the prune revalidation: <= K metadata
     # requests, zero data requests (everything still prunes)
     assert store.fabric.xattr_ops <= len(primaries)
@@ -382,9 +386,9 @@ def test_unpruned_scan_needs_no_revalidation():
     vol.write(omap, table)
     nothing_prunes = [oc.op("filter", col="y", cmp="<", value=2000),
                       oc.op("agg", col="x", fn="count")]
-    vol.query(omap, nothing_prunes)
+    vol.query(omap, nothing_prunes, prune="client")
     store.fabric.reset()
-    vol.query(omap, nothing_prunes)
+    vol.query(omap, nothing_prunes, prune="client")
     assert store.fabric.xattr_ops == 0  # kept objects revalidate for free
 
 

@@ -151,10 +151,12 @@ def test_read_through_batch_equals_slice():
 
 
 # ------------------------------------------------------- zone-map cache
+# (the client-side prune plane: pinned to prune="client" — the default
+# pushed-down prune needs no client zone-map cache at all)
 def test_zone_map_cache_amortizes_xattr_lookups():
     store, vol, omap, table = make_world()
     store.fabric.reset()
-    vol.query(omap, FILTER_AGG)
+    vol.query(omap, FILTER_AGG, prune="client")
     # the writing client cached its own zone maps on write: no lookups
     assert store.fabric.xattr_ops == 0
     # a fresh client warms its whole cache with ONE batched metadata
@@ -167,19 +169,24 @@ def test_zone_map_cache_amortizes_xattr_lookups():
     two_filters = [oc.op("filter", col="y", cmp=">", value=0),
                    oc.op("filter", col="y", cmp="<", value=900),
                    oc.op("agg", col="x", fn="count")]
-    vol2.query(omap, two_filters)
+    vol2.query(omap, two_filters, prune="client")
     assert store.fabric.xattr_ops == len(primaries)
-    vol2.query(omap, two_filters)
+    vol2.query(omap, two_filters, prune="client")
     assert store.fabric.xattr_ops == len(primaries)  # warm: no new ones
+    # the pushed-down prune path needs NO zone-map requests at all
+    vol3 = GlobalVOL(store)
+    store.fabric.reset()
+    vol3.query(omap, two_filters)
+    assert store.fabric.xattr_ops == 0
 
 
 def test_zone_map_cache_invalidated_on_epoch_bump():
     store, vol, omap, table = make_world()
-    vol.query(omap, FILTER_AGG)
+    vol.query(omap, FILTER_AGG, prune="client")
     store.fail_osd(store.cluster.up_osds[0])  # epoch bump
     store.recover()
     store.fabric.reset()
-    res, stats = vol.query(omap, FILTER_AGG)
+    res, stats = vol.query(omap, FILTER_AGG, prune="client")
     assert store.fabric.xattr_ops > 0  # cache was dropped and re-warmed
     assert res == pytest.approx(table["x"][table["y"] < 500].sum(),
                                 rel=1e-12)
@@ -189,12 +196,12 @@ def test_zone_map_cache_refreshed_by_write():
     store, vol, omap, table = make_world()
     # warm the cache, then rewrite with shifted data: pruning decisions
     # must follow the NEW zone maps, not the cached ones
-    assert vol.query(omap, [oc.op("filter", col="y", cmp=">", value=2000),
-                            oc.op("agg", col="x", fn="count")])[0] == 0.0
+    impossible = [oc.op("filter", col="y", cmp=">", value=2000),
+                  oc.op("agg", col="x", fn="count")]
+    assert vol.query(omap, impossible, prune="client")[0] == 0.0
     table2 = dict(table, y=(table["y"] + 5000).astype(np.int32))
     vol.write(omap, table2)
-    res, _ = vol.query(omap, [oc.op("filter", col="y", cmp=">", value=2000),
-                              oc.op("agg", col="x", fn="count")])
+    res, _ = vol.query(omap, impossible, prune="client")
     assert res == float(len(table2["y"]))
 
 

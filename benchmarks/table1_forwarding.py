@@ -1,4 +1,5 @@
-"""Paper Table 1: dataset creation — native vs forwarding plugin x N OSDs.
+"""Paper Table 1: dataset creation — native vs forwarding plugin x N OSDs,
+plus the streaming-pipelined ingest/scan sections.
 
 The paper writes a 3 GB HDF5 dataset:
   native (no plugin), 1 node ........ 26.28 s
@@ -16,10 +17,32 @@ local disk; the forwarding path pays the client hop + replication, and
 N parallel OSDs amortize the disk time while the shared NIC sets the
 floor.  The claim validated is the ratio structure (fwd_1 > native;
 fwd_N decreasing toward the NIC floor), not absolute seconds.
+
+``streaming`` section — the windowed-ingest claim at the same 192 MB
+scale, with an LM-corpus-shaped payload (int32 token ids, planar
+bitpack17 at rest) and the simulated NIC *calibrated to this
+machine's measured encode rate* so encode time ~= stream time on any
+host (the regime where overlap matters; also what keeps the CI gate
+from flapping on runner CPU speed): ``vol.write``'s windowed mode
+overlaps encode with the NIC stream (one long-lived put request per
+primary OSD), which must beat the buffered
+encode-everything-then-stream path by >= 1.3x (STREAM_GATE) with
+identical fabric ops and bit-identical stored bytes.  ``scan`` section — the read-side twin: per-OSD result frames
+decode as they land, so time-to-first-frame << total scan wall.
+
+Emits ``BENCH_table1.json`` at the repo root (like
+``BENCH_pushdown.json``).  ``--smoke`` / ``BENCH_SMOKE=1`` runs only
+the streaming + scan sections and their gates — cheap enough for the
+per-PR ``bench-smoke`` CI job.
 """
 
 from __future__ import annotations
 
+import hashlib
+import json
+import os
+import pathlib
+import sys
 import time
 
 import numpy as np
@@ -29,9 +52,13 @@ from repro.core.partition import PartitionPolicy
 from repro.core.store import make_store
 from repro.core.vol import GlobalVOL, LocalVOL
 
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_table1.json"
 TOTAL_BYTES = 192 << 20
 PAPER = {"native_1": 26.28, "fwd_1": 61.12, "fwd_2": 36.07,
          "fwd_3": 29.34}
+# windowed ingest must beat buffered by this factor at table1 scale
+STREAM_GATE = 1.3
 
 
 def build_world(n_osds: int):
@@ -67,8 +94,155 @@ def run() -> dict:
     return rows
 
 
+# ------------------------------------------------------------ streaming
+def _calibrated_bw(table: dict, sample_rows: int = 8192) -> float:
+    """Simulated NIC bandwidth (bytes/s of WIRE payload) chosen so the
+    table's encoded bytes take about as long to stream as this
+    machine's encoder takes to produce them — the balanced regime where
+    windowed overlap matters most.  Calibrating the (simulated anyway)
+    transport to the host's real encode rate keeps the regime — and the
+    >= STREAM_GATE wall-clock gate — a property of the CODE, not of how
+    fast the CI runner's CPU happens to run numpy."""
+    local = LocalVOL()
+    sample = {k: np.asarray(v)[:sample_rows] for k, v in table.items()}
+    local.encode(sample)  # warm
+    t0 = time.perf_counter()
+    wire = len(local.encode(sample))
+    dt = time.perf_counter() - t0
+    return wire / dt  # bytes of encoded output per second of encode
+
+
+def build_stream_world(n_osds: int = 4):
+    """The streaming section's world: token payload (int32, 17-bit
+    values -> planar bitpack17 at rest), so the per-object encode is
+    real work, with the simulated NIC calibrated to match its rate
+    (``_calibrated_bw``) — the regime the windowed overlap targets."""
+    n_rows = TOTAL_BYTES // 1024  # 1 KB/row of raw int32 tokens
+    ds = LogicalDataset(
+        "t1s", (Column("tokens", "int32", (256,)),), n_rows, 2048)
+    rng = np.random.default_rng(0)
+    table = {"tokens": rng.integers(0, 1 << 17, (n_rows, 256),
+                                    dtype=np.int32)}
+    bw = _calibrated_bw(table)
+    # disks at the NIC rate: each OSD writes ~(wire/K) primary and as
+    # much again as a replica, so disk time per OSD stays under half
+    # the (serial) NIC wall — never the bottleneck being measured
+    store = make_store(n_osds, replicas=2, n_pgs=64,
+                       client_bw=bw, disk_bw=bw)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=8 << 20,
+                                          max_object_bytes=32 << 20))
+    return store, vol, omap, table
+
+
+def _stored_digest(store, names) -> dict[str, str]:
+    out = {}
+    for n in names:
+        for osd_id in store.cluster.locate(n):
+            out[f"{osd_id}/{n}"] = hashlib.sha256(
+                store.osds[osd_id].data[n]).hexdigest()
+    return out
+
+
+def bench_streaming(n_osds: int = 4) -> tuple:
+    """Windowed vs buffered ingest of the SAME table into identically
+    laid-out stores: the stream must win >= STREAM_GATE wall-clock with
+    the same O(K) request count and bit-identical stored bytes.
+    Returns ``(report_dict, streamed_store, vol, omap)`` — the streamed
+    world is reused by ``bench_scan_stream``."""
+    store_b, vol_b, omap, table = build_stream_world(n_osds)
+    store_b.fabric.reset()
+    t0 = time.perf_counter()
+    vol_b.write(omap, table, window_objects=0)  # buffered
+    wall_buffered = time.perf_counter() - t0
+    buffered = store_b.fabric.snapshot()
+
+    store_s, vol_s, omap_s, _ = build_stream_world(n_osds)
+    store_s.fabric.reset()
+    t0 = time.perf_counter()
+    vol_s.write(omap_s, table)  # windowed (default window, io simulated)
+    wall_streamed = time.perf_counter() - t0
+    streamed = store_s.fabric.snapshot()
+
+    names = omap.object_names()
+    primaries = {store_b.cluster.primary(n) for n in names}
+    # O(K) unchanged: ONE (streaming) put request per primary OSD
+    assert streamed["ops"] == buffered["ops"] == len(primaries), \
+        (streamed["ops"], buffered["ops"])
+    assert streamed["client_tx"] == buffered["client_tx"]
+    assert streamed["replica_bytes"] == buffered["replica_bytes"]
+    assert streamed["stream_windows"] > 0 and streamed["overlap_s"] > 0
+    # bit-exact stored bytes on every replica
+    assert _stored_digest(store_s, names) == _stored_digest(store_b,
+                                                            names)
+    ratio = wall_buffered / wall_streamed
+    assert ratio >= STREAM_GATE, \
+        f"streaming ingest only {ratio:.2f}x buffered (< {STREAM_GATE}x)"
+    return {
+        "total_bytes": TOTAL_BYTES, "n_objects": omap.n_objects,
+        "n_osds": n_osds, "wire_bytes": streamed["client_tx"],
+        "calibrated_nic_MBps": store_b.client_bw / 2**20,
+        "buffered": {"wall_s": wall_buffered,
+                     "fabric_ops": buffered["ops"]},
+        "streamed": {"wall_s": wall_streamed,
+                     "fabric_ops": streamed["ops"],
+                     "stream_windows": streamed["stream_windows"],
+                     "overlap_s": streamed["overlap_s"]},
+        "speedup": ratio,
+    }, store_s, vol_s, omap_s
+
+
+def bench_scan_stream(store, vol, omap) -> dict:
+    """The read-side overlap at the same scale: per-OSD frames decode
+    as they land, so the first frame reaches the consumer long before
+    the full scan wall."""
+    from repro.core import objclass as oc
+    names = omap.object_names()
+    ops = [oc.op("project", cols=["tokens"])]
+    store.fabric.reset()
+    t0 = time.perf_counter()
+    ttfb = None
+    n_frames = 0
+    for _ in store.exec_concat_iter(names, ops):
+        if ttfb is None:
+            ttfb = time.perf_counter() - t0
+        n_frames += 1
+    wall = time.perf_counter() - t0
+    snap = store.fabric.snapshot()
+    primaries = {store.cluster.primary(n) for n in names}
+    assert snap["ops"] == n_frames == len(primaries)  # O(K) frames
+    assert snap["stream_windows"] == n_frames
+    assert ttfb < wall  # frames really stream, not gather-then-return
+    return {"wall_s": wall, "time_to_first_frame_s": ttfb,
+            "rx_frames": n_frames, "fabric_ops": snap["ops"],
+            "client_rx_bytes": snap["client_rx"]}
+
+
 def main() -> None:
+    smoke = "--smoke" in sys.argv or os.environ.get("BENCH_SMOKE") == "1"
+    streaming, store_s, vol_s, omap_s = bench_streaming()
+    scan = bench_scan_stream(store_s, vol_s, omap_s)
+    report: dict = {"streaming": streaming, "scan": scan}
+
+    s, b = streaming["streamed"], streaming["buffered"]
+    print(f"streaming ingest (192MB, {streaming['n_osds']} OSDs, "
+          f"{streaming['n_objects']} objects): "
+          f"{s['wall_s']:.2f}s windowed vs {b['wall_s']:.2f}s buffered "
+          f"(x{streaming['speedup']:.2f}, gate >= {STREAM_GATE}x), "
+          f"{s['stream_windows']} windows, "
+          f"{s['overlap_s']:.2f}s encode hidden, "
+          f"ops {s['fabric_ops']} == {b['fabric_ops']} (O(K)), "
+          f"stored bytes bit-exact")
+    print(f"streaming scan: first frame at "
+          f"{scan['time_to_first_frame_s'] * 1e3:.0f}ms of "
+          f"{scan['wall_s'] * 1e3:.0f}ms total, "
+          f"{scan['rx_frames']} frames (= K primaries)")
+    if smoke:
+        print("table1_forwarding --smoke: streaming gates hold")
+        return
+
     rows = run()
+    report["table1"] = {"paper": PAPER, "measured": rows}
     native = rows["native_1"]
     print("table1_forwarding (192MB scale; paper ratios at 3GB)")
     print(f"{'config':<10}{'time_s':>9}{'vs_native':>11}{'paper':>8}")
@@ -81,6 +255,8 @@ def main() -> None:
     assert rows["fwd_2"] < rows["fwd_1"] and rows["fwd_3"] < rows["fwd_2"], \
         "parallel writers must amortize the overhead"
     print("claims: fwd_1 > native; fwd_N monotonically amortizes -> OK")
+    OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"BENCH_table1 -> {OUT_PATH}")
 
 
 if __name__ == "__main__":

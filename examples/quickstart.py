@@ -1,12 +1,14 @@
-"""Quickstart: the paper's system in ~60 lines.
+"""Quickstart: the paper's system in ~80 lines.
 
 1. stand up a replicated object store (Ceph stand-in)
 2. map a logical dataset onto objects through the GlobalVOL
 3. run storage-side scans through the composable builder
    (filters AND together, aggregates compose, pruning happens ON the
    OSDs, table results come back as one framed response per OSD)
-4. survive an OSD failure
-5. train a tiny LM whose data path IS that object store
+4. stream a windowed ingest: encode overlaps the NIC, replicas chain
+5. survive an OSD failure
+6. train a tiny LM whose data path IS that object store (the loader's
+   windowed fetch assembles early batches while slow OSDs still serve)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -57,7 +59,30 @@ med, qstats = drv.execute(drv.scan("sensors")
 print(f"median(temp) ~= {med:.3f}  [approx sketch, "
       f"{qstats.client_rx_bytes} B moved, pushdown={qstats.pushdown}]")
 
-# -- 4. kill an OSD mid-flight --------------------------------------------
+# -- 4. streaming pipelined ingest ----------------------------------------
+# with a transport model (shared client NIC, per-OSD disks) vol.write
+# STREAMS: per-OSD sub-write groups flush as the encoder produces
+# blobs, so encode overlaps the NIC instead of running ahead of it, and
+# each replica write pipelines entry -> replica -> replica (chain), so
+# the entry OSD sends each blob once.  (table1_forwarding measures
+# ~1.7x over buffered encode-then-stream at the 192 MB scale.)
+sim = make_store(4, replicas=3, client_bw=400 << 20, disk_bw=200 << 20)
+svol = GlobalVOL(sim)
+sds = LogicalDataset("stream_demo",
+                     (Column("tokens", "int32", (64,)),),
+                     n_rows=20_000, unit_rows=512)
+somap = svol.create(sds, PartitionPolicy(target_object_bytes=1 << 20))
+sim.fabric.reset()
+svol.write(somap, {"tokens": rng.integers(0, 1 << 15, (20_000, 64))
+                   .astype(np.int32)}, window_bytes=256 << 10)
+f = sim.fabric
+print(f"streamed ingest: {f.ops} put requests (one per OSD) in "
+      f"{f.stream_windows} windows, {f.overlap_s * 1e3:.0f}ms encode "
+      f"hidden behind the NIC; chain replication: entry OSD egress "
+      f"{f.entry_egress_bytes >> 20}MB of {f.replica_bytes >> 20}MB "
+      f"total replica traffic")
+
+# -- 5. kill an OSD mid-flight --------------------------------------------
 victim = store.cluster.primary(omap.object_names()[0])
 store.fail_osd(victim)
 rec = store.recover()
@@ -66,7 +91,7 @@ print(f"killed {victim}: recovered {rec['objects_moved']} replicas, "
       f"lost {rec['objects_lost']}; reads fine: temp[:5]="
       f"{np.round(rows['temp'], 2)}")
 
-# -- 5. train a tiny LM straight off the store -----------------------------
+# -- 6. train a tiny LM straight off the store -----------------------------
 import jax
 from repro.configs.base import get_config
 from repro.data.corpus import CorpusSpec, build_corpus
@@ -79,7 +104,10 @@ cfg = get_config("yi_9b", smoke=True)
 build_corpus(vol, CorpusSpec(n_seqs=256, seq_len=128,
                              vocab_size=cfg.vocab_size))
 model = build_model(cfg, remat="none")
-loader = ObjectDataLoader(vol, "corpus", global_batch=8, packed=True)
+# window_steps=2: the loader fetches two steps' rows in one streaming
+# gather and assembles each batch the moment ITS frames land
+loader = ObjectDataLoader(vol, "corpus", global_batch=8, packed=True,
+                          window_steps=2)
 trainer = Trainer(model, loader, store, opt=OptConfig(lr=1e-3),
                   cfg=TrainerConfig(total_steps=20, ckpt_every=10,
                                     log_every=5, packed_ingest=True))

@@ -53,36 +53,53 @@ def _leaf_dataset(tag: str, step: int, idx: int,
 def save(store: ObjectStore, state: Any, step: int, *, tag: str = "train",
          policy: PartitionPolicy = _DEFAULT_POLICY, workers: int = 8,
          extra: dict | None = None) -> dict:
-    """Write a checkpoint; returns the manifest."""
-    leaves = _flatten(state)
+    """Write a checkpoint; returns the manifest.
+
+    The object mapping of every leaf is planned up front from shapes
+    alone (cheap); the expensive part — serializing each leaf
+    (``tobytes``) — happens lazily.  When transfers take simulated time
+    the whole checkpoint ships as ONE windowed streaming ``put_batch``
+    (one request per primary OSD for the entire checkpoint), so leaf
+    i+1 serializes while leaf i's windows are still on the NIC — true
+    cross-leaf encode/stream overlap, at the cost of the write ledger
+    holding the serialized checkpoint until the batch acks.  In-process
+    stores (no simulated I/O) keep the bounded-memory path: one
+    buffered batch per leaf, at most one leaf's blobs in memory.
+    ``workers`` is kept for API compatibility; parallelism is the
+    store's, per OSD group.
+    """
+    del workers
+    leaves = sorted(_flatten(state).items())
     manifest: dict = {"step": step, "tag": tag, "leaves": {},
                       "extra": extra or {}}
-
-    def plan_leaf(item) -> tuple[str, dict, list, list]:
-        idx, (key, arr) = item
-        raw = arr.tobytes()
+    planned = []  # (key, arr, omap) — no serialization yet
+    for idx, (key, arr) in enumerate(leaves):
         ds = _leaf_dataset(tag, step, idx, arr)
-        omap = plan_partition(ds, policy)
-        names = [e.name for e in omap]
-        blobs = [raw[e.row_start:e.row_stop] for e in omap]
-        meta = {"dtype": str(arr.dtype), "shape": list(arr.shape),
-                "objects": [[e.name, e.row_start, e.row_stop]
-                            for e in omap],
-                "crc": zlib.crc32(raw)}
-        return key, meta, names, blobs
+        planned.append((key, arr, plan_partition(ds, policy)))
 
-    # ship each leaf's objects through the batched write plane — one
-    # put request per primary OSD per leaf instead of one per object —
-    # while holding at most ONE leaf's serialized blobs in memory
-    # (``workers`` kept for API compatibility; parallelism is the
-    # store's, per OSD group)
-    del workers
-    for key, meta, names, blobs in map(plan_leaf,
-                                       enumerate(sorted(leaves.items()))):
-        manifest["leaves"][key] = meta
-        store.put_batch(names, blobs)
+    def serialize(key, arr, omap) -> list[bytes]:
+        raw = arr.tobytes()
+        manifest["leaves"][key] = {
+            "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "objects": [[e.name, e.row_start, e.row_stop]
+                        for e in omap],
+            "crc": zlib.crc32(raw)}
+        return [raw[e.row_start:e.row_stop] for e in omap]
 
-    # commit record LAST — atomicity point
+    window = store.default_window_bytes()
+    if window:
+        names = [e.name for _, _, omap in planned for e in omap]
+        store.put_batch(
+            names,
+            (blob for leaf in planned for blob in serialize(*leaf)),
+            window_bytes=window)
+    else:
+        for key, arr, omap in planned:
+            store.put_batch([e.name for e in omap],
+                            serialize(key, arr, omap))
+
+    # commit record LAST — atomicity point (and only after every leaf's
+    # meta was filled in by its serialize())
     store.put(f"ckpt/{tag}/step-{step}/.manifest",
               json.dumps(manifest).encode())
     return manifest

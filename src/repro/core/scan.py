@@ -260,6 +260,14 @@ class ScanEngine:
     per-object results aligned with ``names``.  ``shards`` is the
     plan's per-OSD grouping (``(osd_id, name_indices)`` pairs) so a
     scheduling runner need not re-derive placement.
+
+    The ``partials`` / ``frames`` half of a combine/concat response may
+    be LAZY — an iterator that yields per-OSD results as they land
+    (the store's ``exec_*_iter`` planes, or a driver streaming shard
+    results in worker-completion order).  The engine consumes it
+    frame-by-frame, decoding/folding each result while slower OSDs are
+    still scanning, and reads ``pruned_names`` (which may fill during
+    iteration) only after exhaustion.
     """
 
     def __init__(self, vol):
@@ -431,8 +439,11 @@ class ScanEngine:
         shards = plan.shards
 
         if plan.exec_cls == EXEC_OSD_COMBINE:
-            partials, osd_pruned = run("combine", names, pipes, preds,
-                                       shards)
+            partials_src, pruned_src = run("combine", names, pipes,
+                                           preds, shards)
+            # consume lazily: each OSD's partial folds in as it lands
+            partials = list(partials_src)
+            osd_pruned = list(pruned_src)
             result = oc.combine_partials(ops, partials)
             result_rows = 1
         elif plan.exec_cls == EXEC_PARTIAL_GATHER:
@@ -441,16 +452,22 @@ class ScanEngine:
             result_rows = 1
         elif plan.exec_cls == EXEC_HOLISTIC_GATHER:
             col = ops[-1].params["col"]
-            frames, osd_pruned = run("concat", names, pipes, preds,
-                                     shards)
-            tabs = [fmt.decode_block(blob) for _, blob, _ in frames]
-            result = oc.median_exact(
-                [{col: t[col].ravel()} for t in tabs], col)
+            frames_src, pruned_src = run("concat", names, pipes, preds,
+                                         shards)
+            # frame-by-frame: decode each OSD's block on arrival, while
+            # slower OSDs are still scanning
+            cols = [{col: fmt.decode_block(blob)[col].ravel()}
+                    for _, blob, _ in frames_src]
+            osd_pruned = list(pruned_src)
+            result = oc.median_exact(cols, col)
             result_rows = 1
         elif plan.exec_cls == EXEC_SERVER_CONCAT:
-            frames, osd_pruned = run("concat", names, pipes, preds,
-                                     shards)
-            parts = _split_frames(len(names), frames)
+            frames_src, pruned_src = run("concat", names, pipes, preds,
+                                         shards)
+            parts: list = [None] * len(names)
+            for frame in frames_src:  # decode overlaps slower OSDs
+                _place_frame(parts, frame)
+            osd_pruned = list(pruned_src)
             if plan.assemble == "parts":
                 result = parts
             else:
@@ -493,17 +510,38 @@ class ScanEngine:
         parts, _ = self.execute(plan)
         return parts
 
+    def fetch_objects_stream(self, names: Sequence[str],
+                             pipelines: Sequence[Sequence[oc.ObjOp]],
+                             packed: bool = False):
+        """Streaming twin of ``fetch_objects``: yields ``(index,
+        result)`` pairs the moment their per-OSD frame lands and
+        decodes, in arrival order — the loader's windowed consume.  A
+        consumer holding results for early indices finishes before the
+        slowest OSD responds; results are bit-identical to the buffered
+        gather."""
+        store = self.vol.store
+        plan = self.compile_gather(names, pipelines, packed=packed)
+        pipes = [list(p) for p in plan.pipelines]
+        if plan.exec_cls == EXEC_TABLE_GATHER:
+            yield from store.exec_batch_iter(list(plan.names), pipes)
+            return
+        for frame in store.exec_concat_iter(list(plan.names), pipes):
+            yield from _iter_frame(frame)
+
     # ------------------------------------------------------------ internals
     def _direct(self, mode, names, pipelines, predicates, shards=()):
         del shards  # the store regroups by primary OSD itself
         store = self.vol.store
         if mode == "combine":
-            got = store.exec_combine(names, pipelines,
-                                     prune=tuple(predicates) or None)
-            return got if isinstance(got, tuple) else (got, [])
+            pruned: list[str] = []
+            return store.exec_combine_iter(
+                names, pipelines, prune=tuple(predicates) or None,
+                pruned_out=pruned), pruned
         if mode == "concat":
-            return store.exec_concat(names, pipelines,
-                                     prune=tuple(predicates) or None)
+            pruned = []
+            return store.exec_concat_iter(
+                names, pipelines, prune=tuple(predicates) or None,
+                pruned_out=pruned), pruned
         return store.exec_batch(names, pipelines)
 
     def _client_eval(self, names, ops):
@@ -530,13 +568,29 @@ def _split_frames(n: int, frames) -> list:
     """Re-slice per-OSD concatenated frames into per-object tables,
     placed at their input positions (global row order restored)."""
     parts: list[dict | None] = [None] * n
-    for idxs, blob, counts in frames:
-        tab = fmt.decode_block(blob)
-        off = 0
-        for i, c in zip(idxs, counts):
-            parts[i] = {k: v[off:off + c] for k, v in tab.items()}
-            off += c
+    for frame in frames:
+        _place_frame(parts, frame)
     return parts
+
+
+def _iter_frame(frame: tuple):
+    """Decode one per-OSD concatenated frame and yield its per-object
+    ``(input_index, table)`` slices — the ONE place the frame layout
+    (row_counts offsets into the concatenated block) is interpreted."""
+    idxs, blob, counts = frame
+    tab = fmt.decode_block(blob)
+    off = 0
+    for i, c in zip(idxs, counts):
+        yield i, {k: v[off:off + c] for k, v in tab.items()}
+        off += c
+
+
+def _place_frame(parts: list, frame: tuple) -> None:
+    """Slot one frame's per-object tables at their input positions
+    (global row order restored) — the incremental half of the
+    streaming consume."""
+    for i, part in _iter_frame(frame):
+        parts[i] = part
 
 
 def _result_rows(ops, result) -> int:

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ThreadPoolExecutor, as_completed
 from typing import Any
 
 from repro.core import objclass as oc
@@ -229,27 +229,50 @@ class SkyhookDriver:
             return idxs, w.run(sub_names, sub_pipes, mode=mode,
                                predicates=predicates)
 
-        if self.store.io_simulated():  # workers overlap simulated I/O
-            outs = list(self._pool.map(run_shard,
-                                       zip(self.workers, shards)))
-        else:  # compute-bound: threads only add GIL contention
-            outs = [run_shard(p) for p in zip(self.workers, shards)]
+        io = self.store.io_simulated()
+        if mode == "batch":
+            if io:  # workers overlap simulated I/O
+                outs = list(self._pool.map(run_shard,
+                                           zip(self.workers, shards)))
+            else:  # compute-bound: threads only add GIL contention
+                outs = [run_shard(p) for p in zip(self.workers, shards)]
+            results: list[Any] = [None] * len(names)
+            for idxs, rs in outs:
+                for i, r in zip(idxs, rs):
+                    results[i] = r
+            return results
 
-        if mode == "combine":
-            partials, pruned = [], []
-            for _, (p, pr) in outs:
-                partials.extend(p)
-                pruned.extend(pr)
-            return partials, pruned
-        if mode == "concat":
-            frames, pruned = [], []
-            for idxs, (fr, pr) in outs:
-                frames.extend((tuple(idxs[k] for k in local), blob, counts)
-                              for local, blob, counts in fr)
-                pruned.extend(pr)
-            return frames, pruned
-        results: list[Any] = [None] * len(names)
-        for idxs, rs in outs:
-            for i, r in zip(idxs, rs):
-                results[i] = r
-        return results
+        # combine/concat follow the engine's LAZY runner protocol: the
+        # partial/frame half streams in worker-completion order (the
+        # engine decodes each shard's results while slower workers are
+        # still scanning); ``pruned`` fills during consumption and is
+        # complete once the stream is exhausted
+        pruned: list[str] = []
+
+        def emit(idxs, got):
+            items, pr = got
+            pruned.extend(pr)
+            if mode == "concat":
+                for local, blob, counts in items:
+                    yield (tuple(idxs[k] for k in local), blob, counts)
+            else:
+                yield from items
+
+        def stream():
+            if io:
+                futs = [self._pool.submit(run_shard, p)
+                        for p in zip(self.workers, shards)]
+                # concat frames are index-placed by the engine, so they
+                # may land in completion order (decode overlaps slower
+                # workers); combine partials feed an order-sensitive
+                # float fold and keep submission order (deterministic)
+                for f in (as_completed(futs) if mode == "concat"
+                          else futs):
+                    idxs, got = f.result()
+                    yield from emit(idxs, got)
+            else:
+                for p in zip(self.workers, shards):
+                    idxs, got = run_shard(p)
+                    yield from emit(idxs, got)
+
+        return stream(), pruned

@@ -17,11 +17,26 @@ OSDs touched (K), never the number of objects (N):
     partials *on* each OSD (the tail op's associative ``merge``) and
     returns ONE partial per OSD, so ``client_rx`` is O(K) too;
   * writes — ``put_batch(names, blobs, xattrs)`` groups sub-writes by
-    primary OSD (one request + one server-side replica fan-out per
-    object), with per-object failover inside the batch;
+    primary OSD (one request + server-side replication per object),
+    with per-object failover inside the batch;
   * metadata — ``list_zone_maps(names)`` fetches many objects' xattrs
     in one request per OSD (one ``xattr_ops`` per request, not per
     object).
+
+Streaming pipelined data plane: the O(K) request plane is also an
+O(overlap) wall-clock plane.  ``put_batch(window_bytes=...)`` accepts a
+lazy blob producer and flushes per-OSD sub-write groups into one
+long-lived streaming request per primary OSD as each window fills, so
+client-side encode overlaps the NIC stream (measured in
+``Fabric.overlap_s`` / ``stream_windows``); ``exec_batch_iter`` /
+``exec_combine_iter`` / ``exec_concat_iter`` are the read-side twins —
+per-OSD result frames are delivered in completion order so the client
+decodes early frames while slower OSDs are still scanning.  Replica
+writes pipeline down a CHAIN (entry -> replica -> replica, Ceph's
+primary-copy forwarding) instead of fanning out, halving the entry
+OSD's replication egress (``Fabric.entry_egress_bytes``) at 3x
+replication; ``replication="fanout"`` keeps the legacy topology for
+comparison.
 
 Every put stamps the object's xattr with a monotonic ``version`` tag;
 clients cache zone maps keyed by (epoch, version) and revalidate prune
@@ -47,10 +62,11 @@ retried as new (batched) requests.
 from __future__ import annotations
 
 import dataclasses
+import queue as _queue
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Iterable, Sequence
+from concurrent.futures import ThreadPoolExecutor, as_completed
+from typing import Any, Callable, Iterable, Iterator, Sequence
 
 import numpy as np
 
@@ -63,29 +79,53 @@ from repro.core.placement import ClusterMap, pg_delta
 # dispatch) — what per-object fan-out pays N times and a batch pays once
 PER_REQUEST_OVERHEAD_BYTES = 128
 
+# default ingest window for the streaming write plane: sub-write groups
+# flush to their per-OSD streams every this-many encoded bytes, so the
+# encoder runs at most one window ahead of the NIC
+DEFAULT_WINDOW_BYTES = 8 << 20
+
 
 @dataclasses.dataclass
 class Fabric:
-    """Byte/op counters for the client<->storage network."""
+    """Byte/op counters for the client<->storage network.
+
+    Counters are exact for any single accounting thread: the store's
+    internal workers (replica chains, stream feeders, scatter groups)
+    never touch them — deltas are accumulated by the thread that issued
+    the call.  Two *independent* client threads driving the store
+    concurrently (a prefetching data loader beside an async
+    checkpointer, say) interleave their updates without synchronization
+    — read invariants around single-threaded windows, as the tests and
+    benchmarks do."""
 
     client_tx: int = 0          # client -> OSD (writes)
     client_rx: int = 0          # OSD -> client (reads / results)
-    replica_bytes: int = 0      # OSD -> OSD primary-copy fan-out
+    replica_bytes: int = 0      # OSD -> OSD replication (all hops)
+    entry_egress_bytes: int = 0  # replication bytes SENT BY the entry
+    #                              OSD (chain: first hop only; fan-out:
+    #                              every replica — the 2x the chain cuts)
     recovery_bytes: int = 0     # OSD -> OSD re-replication
     local_bytes: int = 0        # bytes processed inside OSDs (pushdown)
     ops: int = 0                # client<->OSD round trips (requests)
     overhead_bytes: int = 0     # per-request fixed cost (ops * 128 B)
     xattr_ops: int = 0          # metadata (xattr) lookups
     rx_frames: int = 0          # framed result payloads the client parsed
+    stream_windows: int = 0     # windowed sub-write groups flushed +
+    #                             result frames delivered while streaming
+    overlap_s: float = 0.0      # encode time hidden behind an active
+    #                             NIC stream (windowed ingest)
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
 
     def reset(self) -> None:
         self.client_tx = self.client_rx = 0
-        self.replica_bytes = self.recovery_bytes = 0
+        self.replica_bytes = self.entry_egress_bytes = 0
+        self.recovery_bytes = 0
         self.local_bytes = self.ops = 0
         self.overhead_bytes = self.xattr_ops = self.rx_frames = 0
+        self.stream_windows = 0
+        self.overlap_s = 0.0
 
 
 class OSDDown(RuntimeError):
@@ -314,10 +354,15 @@ class ObjectStore:
 
     def __init__(self, cluster: ClusterMap, *,
                  client_bw: float | None = None,
-                 disk_bw: float | None = None):
+                 disk_bw: float | None = None,
+                 replication: str = "chain"):
+        if replication not in ("chain", "fanout"):
+            raise ValueError(f"bad replication topology {replication!r}; "
+                             "known: ('chain', 'fanout')")
         self.cluster = cluster
         self.client_bw = client_bw
         self.disk_bw = disk_bw
+        self.replication = replication
         self.osds: dict[str, OSD] = {o: OSD(o, disk_bw)
                                      for o in cluster.osds}
         self.fabric = Fabric()
@@ -327,10 +372,13 @@ class ObjectStore:
         # with a fresh ``version`` so ANY client can detect that a
         # cached zone map is stale (cross-client coherence)
         self._vclock = 0
-        # persistent scatter/gather executor for exec_batch/exec_many —
-        # no per-call ThreadPoolExecutor churn
+        # persistent scatter/gather executor for every batched plane —
+        # no per-call ThreadPoolExecutor churn.  Sized at 2x the OSD
+        # count so windowed ingest can hold one streaming request per
+        # primary OSD AND still run the per-object replica chains that
+        # hang off their ``landed`` hooks concurrently.
         self._pool = ThreadPoolExecutor(
-            max_workers=max(8, len(self.osds)),
+            max_workers=max(8, 2 * len(self.osds)),
             thread_name_prefix="store-io")
         # hedged reads get their own small persistent pool: an abandoned
         # straggler parks on a worker for its full latency and must not
@@ -364,6 +412,54 @@ class ObjectStore:
         pure in-process compute runs faster sequentially (GIL)."""
         return bool(self.client_bw or self.disk_bw
                     or any(o.latency_s for o in self.osds.values()))
+
+    def default_window_bytes(self) -> int | None:
+        """The ingest window callers should pass to ``put_batch`` when
+        they have no opinion: windowed streaming only pays off when
+        transfers actually take time — pure in-process writes run
+        faster through the buffered path (no feeder threads)."""
+        return DEFAULT_WINDOW_BYTES if self.io_simulated() else None
+
+    def _replicate(self, name: str, blob: bytes, xattr: dict,
+                   acting: Sequence[str],
+                   entry: str | None = None) -> tuple[int, int]:
+        """Server-side replication of one landed write from ``entry``
+        (the OSD that took it — the primary, or a later replica after
+        failover) across the rest of the acting set; returns
+        ``(total_bytes_moved, bytes_sent_by_entry)`` for the caller to
+        charge to ``replica_bytes`` / ``entry_egress_bytes`` — counters
+        are never touched from replication worker threads (lost-update
+        hazard under concurrent ``+=``).
+
+        ``chain`` (default) pipelines entry -> replica -> replica, the
+        way Ceph forwards primary-copy writes: each hop moves the blob
+        once and only the FIRST hop leaves the entry OSD, so the entry's
+        egress is one blob regardless of the replica count (half the
+        fan-out egress at 3x replication) — tracked separately in
+        ``entry_egress_bytes``.  A down OSD mid-chain is skipped and the
+        chain continues from the last OSD that holds the blob (per-
+        object failover; peering re-replicates the skipped copy later),
+        so only hops that actually transferred are charged.
+
+        ``fanout`` is the legacy topology: the entry OSD sends to every
+        replica directly (entry egress = (replicas - 1) blobs).
+        """
+        entry = acting[0] if entry is None else entry
+        sender = entry
+        moved = entry_moved = 0
+        for rep in acting:
+            if rep == entry:
+                continue
+            try:
+                self._osd(rep).put(name, blob, xattr)
+            except OSDDown:  # skipped hop: peering/recovery heals it
+                continue
+            moved += len(blob)
+            if self.replication == "fanout" or sender == entry:
+                entry_moved += len(blob)
+            if self.replication == "chain":
+                sender = rep  # the new tail forwards the next hop
+        return moved, entry_moved
 
     # ------------------------------------------------------------ helpers
     def _acting(self, name: str) -> tuple[str, ...]:
@@ -416,24 +512,43 @@ class ObjectStore:
                 for osd_id, idxs in ordered]
         return [f.result() for f in futs]
 
-    def _scatter_failover(self, names: list[str], run_group,
-                          handle) -> None:
+    def _scatter_iter(self, names: list[str], run_group, handle,
+                      stream: bool = False,
+                      completion_order: bool | None = None
+                      ) -> Iterator[Any]:
         """The shared replica-failover skeleton of the batched read
-        planes (``exec_batch`` / ``exec_combine`` / ``exec_concat``):
-        group pending items
-        by their next untried acting OSD, dispatch one batched request
-        per group, account the round trip, and let ``handle`` consume
-        each per-group response — returning the item indices to retry
-        (with their ``last_err`` set).  A whole-request failure (OSD
-        down) retries every item of its group."""
+        planes (``exec_batch`` / ``exec_combine`` / ``exec_concat``),
+        as a generator: group pending items by their next untried
+        acting OSD, dispatch one batched request per group, account the
+        round trip, and let ``handle`` consume each per-group response
+        — returning ``(retry_indices, emitted_items)``.  Under
+        ``completion_order`` (default: follows ``stream``) emitted
+        items are yielded the moment THEIR group's response lands, so a
+        streaming consumer decodes early frames while slower OSDs are
+        still scanning; otherwise groups are consumed in dispatch
+        (sorted-OSD) order, which keeps order-sensitive reductions —
+        float partial folds — bit-deterministic run to run.  Under
+        ``stream=True`` each delivered item also counts in
+        ``Fabric.stream_windows``.  A whole-request failure (OSD down)
+        retries every item of its group."""
+        if completion_order is None:
+            completion_order = stream
         tried: list[set[str]] = [set() for _ in names]
         last_err: list[Exception | None] = [None] * len(names)
         pending = list(range(len(names)))
         while pending:
             ordered = self._next_targets(pending, names, tried, last_err)
-            outs = self._dispatch_groups(ordered, run_group)
             pending = []
-            for (osd_id, idxs), got in zip(ordered, outs):
+            if len(ordered) == 1 or not self.io_simulated():
+                completions = ((pair, run_group(*pair))
+                               for pair in ordered)
+            else:
+                futs = {self._pool.submit(run_group, o, idxs): (o, idxs)
+                        for o, idxs in ordered}
+                completions = ((futs[f], f.result())
+                               for f in (as_completed(futs)
+                                         if completion_order else futs))
+            for (osd_id, idxs), got in completions:
                 self._account_request()  # one round trip per OSD group
                 for i in idxs:
                     tried[i].add(osd_id)
@@ -442,39 +557,71 @@ class ObjectStore:
                         last_err[i] = got
                     pending.extend(idxs)
                     continue
-                pending.extend(handle(idxs, got, last_err))
+                retry, emitted = handle(idxs, got, last_err)
+                pending.extend(retry)
+                for item in emitted:
+                    if stream:
+                        self.fabric.stream_windows += 1
+                    yield item
 
     # ------------------------------------------------------------ client IO
     def put(self, name: str, blob: bytes, xattr: dict | None = None) -> int:
-        """Replicated write: client -> primary -> (fan-out) replicas.
-        Client pays one transfer; replica fan-out is server-side, matching
-        Ceph's primary-copy replication.  The object's xattr is stamped
-        with a fresh monotonic ``version``, which is returned."""
+        """Replicated write: client -> primary -> replica chain.  Client
+        pays one transfer; replication is server-side (``_replicate``:
+        chain-pipelined by default, matching Ceph's primary-copy
+        forwarding).  The object's xattr is stamped with a fresh
+        monotonic ``version``, which is returned."""
         version = self._next_version()
         stamped = {**(xattr or {}), "version": version}
         acting = self._acting(name)
         self.fabric.client_tx += len(blob)
         self._account_request()
         self._client_xfer(len(blob))
-        for i, osd_id in enumerate(acting):
-            self._osd(osd_id).put(name, blob, stamped)
-            if i > 0:  # replica fan-out is OSD->OSD (cluster network),
-                self.fabric.replica_bytes += len(blob)  # not client bytes
+        self._osd(acting[0]).put(name, blob, stamped)
+        # replication is OSD->OSD (cluster network), not client bytes
+        moved, entry_moved = self._replicate(name, blob, stamped, acting)
+        self.fabric.replica_bytes += moved
+        self.fabric.entry_egress_bytes += entry_moved
         return version
 
-    def put_batch(self, names: Iterable[str], blobs: Sequence[bytes],
-                  xattrs: Sequence[dict | None] | None = None) -> list[int]:
+    def put_batch(self, names: Iterable[str],
+                  blobs: Iterable[bytes | tuple[bytes, dict | None]],
+                  xattrs: Sequence[dict | None] | None = None, *,
+                  window_bytes: int | None = None,
+                  window_objects: int | None = None) -> list[int]:
         """Batched replicated write: ONE client request per primary OSD.
 
         Sub-writes are grouped by their primary OSD and each group goes
         out as a single ``OSD.put_batch`` round trip, so ingesting N
-        objects over K OSDs costs K fabric ops instead of N.  The
-        replica fan-out stays server-side per object (entry OSD -> rest
-        of the acting set, charged to ``replica_bytes``).  Objects whose
-        group request failed (entry OSD down mid-batch) are re-grouped
-        onto their next untried replica and retried as fresh batched
-        requests — per-object failover inside the batch, mirroring
-        ``exec_batch``.
+        objects over K OSDs costs K fabric ops instead of N.
+        Replication stays server-side per object (``_replicate``: the
+        entry OSD chain-forwards down the acting set the moment that
+        object's primary write lands, charged to ``replica_bytes`` /
+        ``entry_egress_bytes``).  Objects whose group request failed
+        (entry OSD down mid-batch) are re-grouped onto their next
+        untried replica and retried as fresh batched requests —
+        per-object failover inside the batch, mirroring ``exec_batch``.
+
+        **Windowed streaming mode** (``window_bytes`` and/or
+        ``window_objects``): ``blobs`` may be a lazy iterable — a
+        generator still *encoding* — and sub-writes flush to ONE
+        long-lived streaming request per primary OSD as each window
+        fills, so client-side encode overlaps the NIC stream instead of
+        buffering the whole batch first.  Still exactly one fabric op
+        per OSD touched (the stream is one request), identical payload
+        accounting, and bit-identical stored bytes; each flushed
+        per-OSD sub-write group counts in ``Fabric.stream_windows`` and
+        the encode time hidden behind an active stream accrues to
+        ``Fabric.overlap_s``.  In this mode an element of ``blobs`` may
+        also be a ``(blob, xattr)`` pair, letting one generator produce
+        payload and metadata together (``xattrs`` entries are the
+        fallback).  Sub-writes whose stream died mid-flight fail over
+        through the buffered retry rounds — their blobs are already
+        materialized.  Length validation is necessarily lazy here: a
+        producer that ends early (or yields extra items) raises
+        ValueError only once the mismatch is SEEN — after the already-
+        produced sub-writes persisted with stamped versions — unlike
+        the buffered path, which validates before writing anything.
 
         Every object's xattr is stamped with a fresh monotonic
         ``version`` tag; the per-object versions are returned (in input
@@ -482,66 +629,92 @@ class ObjectStore:
         coherent without a read-back.
         """
         names = list(names)
-        blobs = list(blobs)
-        xattrs = list(xattrs) if xattrs is not None else [None] * len(names)
-        if not (len(names) == len(blobs) == len(xattrs)):
-            raise ValueError(f"{len(names)} names / {len(blobs)} blobs / "
-                             f"{len(xattrs)} xattrs")
+        windowed = bool(window_bytes) or bool(window_objects)
+        if xattrs is not None:
+            xattrs = list(xattrs)
+            if len(xattrs) != len(names):
+                raise ValueError(f"{len(names)} names / "
+                                 f"{len(xattrs)} xattrs")
+        else:
+            xattrs = [None] * len(names)
+        if windowed:  # filled as the producer yields each item
+            blobs_l: list[bytes | None] = [None] * len(names)
+        else:
+            blobs_l = [b for b in blobs]
+            if len(blobs_l) != len(names):
+                raise ValueError(f"{len(names)} names / "
+                                 f"{len(blobs_l)} blobs")
         if not names:
             return []
         versions = [self._next_version() for _ in names]
-        stamped = [{**(x or {}), "version": v}
-                   for x, v in zip(xattrs, versions)]
+        if windowed:
+            stamped: list[dict | None] = [None] * len(names)
+        else:
+            stamped = [{**(x or {}), "version": v}
+                       for x, v in zip(xattrs, versions)]
 
         tried: list[set[str]] = [set() for _ in names]
         last_err: list[Exception | None] = [None] * len(names)
-        pending = list(range(len(names)))
-
-        def replicate(work: tuple[int, str]) -> int:
-            i, rep = work
-            try:
-                self._osd(rep).put(names[i], blobs[i], stamped[i])
-                return len(blobs[i])
-            except OSDDown:  # peering/recovery restores it later
-                return 0
-
-        # server-side replica fan-out: one task per (object, replica),
-        # submitted the moment that OBJECT's primary write lands (the
-        # ``landed`` stream hook), so replication fills disk-idle gaps
-        # of the NIC-paced primary streams instead of queueing behind
-        # whole groups (the pooled tasks are never waited on from
-        # inside a worker — no deadlock); ints are inline results
         use_pool = self.io_simulated()
+        # server-side replication: one chain task per object, submitted
+        # the moment that OBJECT's primary write lands (the ``landed``
+        # hook), so replication fills disk-idle gaps of the NIC-paced
+        # primary streams instead of queueing behind whole groups (the
+        # pooled tasks are never waited on from inside a worker — no
+        # deadlock); bare tuples are inline results
         rep_out: list[Any] = []
+
+        def replicate(i: int, entry: str) -> tuple[int, int]:
+            try:
+                return self._replicate(names[i], blobs_l[i], stamped[i],
+                                       self._acting(names[i]), entry)
+            except OSDDown:  # peering/recovery restores it later
+                return 0, 0
+
+        def submit_replicas(i: int, entry: str) -> None:
+            rep_out.append(self._pool.submit(replicate, i, entry)
+                           if use_pool else replicate(i, entry))
+
+        def drain_replicas() -> None:
+            # the write acks only after its replicas landed; counters
+            # accumulate HERE, on the caller's thread (worker threads
+            # never touch the fabric — no lost-update hazard)
+            for r in rep_out:
+                moved, entry_moved = r.result() if use_pool else r
+                self.fabric.replica_bytes += moved
+                self.fabric.entry_egress_bytes += entry_moved
+            rep_out.clear()
 
         def write_group(osd_id: str,
                         idxs: list[int]) -> list[tuple[int, Any]]:
             done: set[int] = set()
 
             def landed(k: int) -> None:
-                i = idxs[k]
-                done.add(i)
-                for rep in self._acting(names[i]):
-                    if rep != osd_id:
-                        rep_out.append(
-                            self._pool.submit(replicate, (i, rep))
-                            if use_pool else replicate((i, rep)))
+                done.add(idxs[k])
+                submit_replicas(idxs[k], osd_id)
 
             try:
                 entry = self._osd(osd_id)
                 # one framed request; the NIC stream (``_client_xfer``
                 # per sub-write) keeps shared-NIC serialization per blob
                 entry.put_batch(
-                    [(names[i], blobs[i], stamped[i]) for i in idxs],
+                    [(names[i], blobs_l[i], stamped[i]) for i in idxs],
                     stream=self._client_xfer, landed=landed)
             except OSDDown as e:
                 # sub-writes that landed before the failure keep their
-                # success (their replica fan-out is already in flight);
-                # only the unlanded remainder fails over — retrying a
-                # landed item would double-count its NIC stream and
-                # replica bytes
+                # success (their replication is already in flight); only
+                # the unlanded remainder fails over — retrying a landed
+                # item would double-count its NIC stream + replica bytes
                 return [(i, None if i in done else e) for i in idxs]
             return [(i, None) for i in idxs]
+
+        if windowed:
+            pending = self._stream_put(
+                names, blobs, xattrs, versions, blobs_l, stamped,
+                tried, last_err, submit_replicas,
+                window_bytes=window_bytes, window_objects=window_objects)
+        else:
+            pending = list(range(len(names)))
 
         while pending:
             ordered = self._next_targets(pending, names, tried, last_err)
@@ -555,12 +728,120 @@ class ObjectStore:
                         last_err[i] = r
                         pending.append(i)
                         continue
-                    self.fabric.client_tx += len(blobs[i])
-            # the write acks only after its replicas landed
-            self.fabric.replica_bytes += sum(
-                r.result() if use_pool else r for r in rep_out)
-            rep_out.clear()
+                    self.fabric.client_tx += len(blobs_l[i])
+            drain_replicas()
+        drain_replicas()
         return versions
+
+    def _stream_put(self, names, blob_iter, xattrs, versions, blobs_l,
+                    stamped, tried, last_err, submit_replicas, *,
+                    window_bytes, window_objects) -> list[int]:
+        """The windowed half of ``put_batch``: consume the (possibly
+        still-encoding) blob producer, flush per-OSD sub-write groups
+        into long-lived per-primary streaming requests as each window
+        fills, and return the item indices that need buffered failover
+        (their entry OSD died mid-stream).  Feeder queues are bounded,
+        so a stalled stream back-pressures the encoder instead of
+        buffering the whole batch."""
+        streams: dict[str, tuple[_queue.Queue, Any]] = {}
+
+        def stream_group(osd_id: str, q: _queue.Queue) -> list:
+            consumed: list[int] = []   # indices in consumption order
+            done: set[int] = set()
+
+            def landed(k: int) -> None:
+                done.add(consumed[k])
+                submit_replicas(consumed[k], osd_id)
+
+            def feed():
+                while True:
+                    grp = q.get()
+                    if grp is None:
+                        return
+                    for i in grp:
+                        consumed.append(i)
+                        yield (names[i], blobs_l[i], stamped[i])
+
+            try:
+                entry = self._osd(osd_id)
+                entry.put_batch(feed(), stream=self._client_xfer,
+                                landed=landed)
+                return [(i, None) for i in consumed]
+            except OSDDown as e:
+                # keep draining so the (still-producing) client never
+                # blocks on a dead stream's bounded queue; every
+                # unlanded sub-write fails over
+                out = [(i, None if i in done else e) for i in consumed]
+                while True:
+                    grp = q.get()
+                    if grp is None:
+                        return out
+                    out.extend((i, e) for i in grp)
+
+        win: dict[str, list[int]] = {}
+        win_nbytes = win_nobjs = 0
+
+        def flush() -> None:
+            nonlocal win_nbytes, win_nobjs
+            for osd_id, idxs in sorted(win.items()):
+                if osd_id not in streams:
+                    q: _queue.Queue = _queue.Queue(maxsize=8)
+                    self._account_request()  # ONE request per stream
+                    streams[osd_id] = (
+                        q, self._pool.submit(stream_group, osd_id, q))
+                streams[osd_id][0].put(idxs)
+                self.fabric.stream_windows += 1
+            win.clear()
+            win_nbytes = win_nobjs = 0
+
+        overlap = 0.0
+        it = iter(blob_iter)
+        try:
+            for i in range(len(names)):
+                t0 = time.perf_counter()
+                try:
+                    item = next(it)
+                except StopIteration:
+                    raise ValueError(f"{len(names)} names but the blob "
+                                     f"producer ended at {i}") from None
+                if streams:  # encode time hidden behind an active stream
+                    overlap += time.perf_counter() - t0
+                blob, x = item if isinstance(item, tuple) \
+                    else (item, xattrs[i])
+                blobs_l[i] = bytes(blob)
+                stamped[i] = {**(x or {}), "version": versions[i]}
+                win.setdefault(self._acting(names[i])[0], []).append(i)
+                win_nbytes += len(blob)
+                win_nobjs += 1
+                if (window_bytes and win_nbytes >= window_bytes) or \
+                        (window_objects and win_nobjs >= window_objects):
+                    flush()
+            flush()
+            try:  # mirror the buffered path's length validation: an
+                next(it)  # overlong producer is a caller bug, not data
+            except StopIteration:  # to drop silently
+                pass
+            else:
+                raise ValueError(f"blob producer yielded more than "
+                                 f"{len(names)} items")
+        finally:
+            # sentinel every started stream even when the producer blew
+            # up mid-encode — a stream left unterminated would park a
+            # pool worker on its queue forever
+            for q, _ in streams.values():
+                q.put(None)
+
+        failed: list[int] = []
+        for osd_id, (q, fut) in streams.items():
+            for i, r in fut.result():
+                tried[i].add(osd_id)
+                if isinstance(r, Exception):
+                    last_err[i] = r
+                    failed.append(i)
+                else:
+                    self.fabric.client_tx += len(blobs_l[i])
+        self.fabric.overlap_s += overlap
+        return failed
 
     def get(self, name: str) -> bytes:
         """Read from the primary, failing over down the acting set."""
@@ -645,9 +926,28 @@ class ObjectStore:
         results are returned in input order, bit-identical to the
         per-object ``exec`` path.
         """
+        gen, results = self._exec_batch_impl(names, ops)
+        for _ in gen:
+            pass
+        return results
+
+    def exec_batch_iter(self, names: Iterable[str],
+                        ops: list[ObjOp] | Sequence[list[ObjOp]]
+                        ) -> Iterator[tuple[int, Any]]:
+        """Streaming twin of ``exec_batch``: yields ``(index, result)``
+        pairs the moment their per-OSD group response lands (completion
+        order), so the consumer decodes early results while slower OSDs
+        are still scanning.  Same requests, failover, and accounting as
+        the buffered form; delivered results count in
+        ``Fabric.stream_windows``."""
+        gen, _ = self._exec_batch_impl(names, ops, stream=True)
+        return gen
+
+    def _exec_batch_impl(self, names, ops, stream: bool = False):
         names = list(names)
+        results: list[Any] = [None] * len(names)
         if not names:
-            return []
+            return iter(()), results
         if ops and isinstance(ops[0], (list, tuple)):
             pipelines = [list(p) for p in ops]
             if len(pipelines) != len(names):
@@ -655,8 +955,6 @@ class ObjectStore:
                     f"{len(pipelines)} pipelines for {len(names)} objects")
         else:
             pipelines = [list(ops)] * len(names)
-
-        results: list[Any] = [None] * len(names)
 
         def run_group(osd_id: str, idxs: list[int]) -> Any:
             try:
@@ -669,6 +967,7 @@ class ObjectStore:
         def handle(idxs, got, last_err):
             group_rx = 0
             retry = []
+            emitted = []
             for i, r in zip(idxs, got):
                 if isinstance(r, Exception):  # per-item miss on this OSD
                     last_err[i] = r
@@ -679,12 +978,13 @@ class ObjectStore:
                 group_rx += _result_nbytes(result)
                 self.fabric.rx_frames += 1
                 results[i] = result
+                emitted.append((i, result))
             self.fabric.client_rx += group_rx
             self._client_xfer(group_rx)
-            return retry
+            return retry, emitted
 
-        self._scatter_failover(names, run_group, handle)
-        return results
+        gen = self._scatter_iter(names, run_group, handle, stream=stream)
+        return gen, results
 
     def exec_combine(self, names: Iterable[str], ops: list[ObjOp],
                      prune=None) -> Any:
@@ -710,16 +1010,35 @@ class ObjectStore:
         partial list.  Pruned objects are a semantic skip — they are
         NOT retried on replicas.
         """
+        gen, pruned_out = self._exec_combine_impl(names, ops, prune)
+        partials = list(gen)
+        return (partials, pruned_out) if prune is not None else partials
+
+    def exec_combine_iter(self, names: Iterable[str], ops: list[ObjOp],
+                          prune=None, pruned_out: list | None = None
+                          ) -> Iterator[Any]:
+        """Streaming twin of ``exec_combine``: yields each OSD's merged
+        partial as the scatter progresses.  Partials are scalar-sized
+        (there is no decode to overlap), so delivery keeps DISPATCH
+        order — a float fold over the yields is bit-deterministic run
+        to run, unlike a completion-order stream.  OSD-pruned names
+        accumulate into ``pruned_out`` (complete once the iterator is
+        exhausted)."""
+        gen, _ = self._exec_combine_impl(names, ops, prune, stream=True,
+                                         pruned_out=pruned_out)
+        return gen
+
+    def _exec_combine_impl(self, names, ops, prune, stream: bool = False,
+                           pruned_out: list | None = None):
         names = list(names)
+        out_pruned: list[str] = pruned_out if pruned_out is not None \
+            else []
         if not names:
-            return ([], []) if prune is not None else []
+            return iter(()), out_pruned
         ops = list(ops)
         if not pipeline_mergeable(ops):
             raise ValueError("exec_combine needs a decomposable pipeline "
                              "whose tail has an associative merge")
-
-        out_partials: list[Any] = []
-        out_pruned: list[str] = []
 
         def run_group(osd_id: str, idxs: list[int]) -> Any:
             try:
@@ -733,22 +1052,26 @@ class ObjectStore:
         def handle(idxs, got, last_err):
             merged, _, scanned, missing, pruned = got
             self.fabric.local_bytes += scanned
+            emitted = []
             if merged is not None:
                 rx = _result_nbytes(merged)
                 self.fabric.client_rx += rx
                 self.fabric.rx_frames += 1
                 self._client_xfer(rx)
-                out_partials.append(merged)
+                emitted.append(merged)
             out_pruned.extend(pruned)
             miss = set(missing)
             retry = [i for i in idxs if names[i] in miss]
             for i in retry:
                 last_err[i] = ObjectNotFound(names[i])
-            return retry
+            return retry, emitted
 
-        self._scatter_failover(names, run_group, handle)
-        return (out_partials, out_pruned) if prune is not None \
-            else out_partials
+        # dispatch order even when streaming: merged partials are a few
+        # bytes each, so there is no decode to overlap — but the fold
+        # over them is float-order-sensitive and must stay deterministic
+        gen = self._scatter_iter(names, run_group, handle, stream=stream,
+                                 completion_order=False)
+        return gen, out_pruned
 
     def exec_concat(self, names: Iterable[str],
                     ops: list[ObjOp] | Sequence[list[ObjOp]],
@@ -775,9 +1098,31 @@ class ObjectStore:
         Missing objects fail over to the next replica as fresh batched
         requests.
         """
+        gen, pruned_out = self._exec_concat_impl(names, ops, prune)
+        return list(gen), pruned_out
+
+    def exec_concat_iter(self, names: Iterable[str],
+                         ops: list[ObjOp] | Sequence[list[ObjOp]],
+                         prune=None, pruned_out: list | None = None
+                         ) -> Iterator[tuple]:
+        """Streaming twin of ``exec_concat``: yields each OSD's framed
+        block ``(input_indices, blob, row_counts)`` the moment its
+        response lands (completion order), so the client decodes early
+        frames while slower OSDs are still scanning — the scan-side
+        half of the windowed overlap (delivered frames count in
+        ``Fabric.stream_windows``).  OSD-pruned names accumulate into
+        ``pruned_out`` (complete once the iterator is exhausted)."""
+        gen, _ = self._exec_concat_impl(names, ops, prune, stream=True,
+                                        pruned_out=pruned_out)
+        return gen
+
+    def _exec_concat_impl(self, names, ops, prune, stream: bool = False,
+                          pruned_out: list | None = None):
         names = list(names)
+        out_pruned: list[str] = pruned_out if pruned_out is not None \
+            else []
         if not names:
-            return [], []
+            return iter(()), out_pruned
         if ops and isinstance(ops[0], (list, tuple)):
             pipelines = [list(p) for p in ops]
             if len(pipelines) != len(names):
@@ -785,9 +1130,6 @@ class ObjectStore:
                     f"{len(pipelines)} pipelines for {len(names)} objects")
         else:
             pipelines = [list(ops)] * len(names)
-
-        frames: list[tuple] = []
-        out_pruned: list[str] = []
 
         def run_group(osd_id: str, idxs: list[int]) -> Any:
             try:
@@ -801,28 +1143,22 @@ class ObjectStore:
         def handle(idxs, got, last_err):
             blob, served, counts, scanned, missing, pruned = got
             self.fabric.local_bytes += scanned
+            emitted = []
             if blob is not None:
                 self.fabric.client_rx += len(blob)
                 self.fabric.rx_frames += 1
                 self._client_xfer(len(blob))
-                frames.append(
+                emitted.append(
                     (tuple(idxs[k] for k in served), blob, counts))
             out_pruned.extend(pruned)
             miss = set(missing)
             retry = [i for i in idxs if names[i] in miss]
             for i in retry:
                 last_err[i] = ObjectNotFound(names[i])
-            return retry
+            return retry, emitted
 
-        self._scatter_failover(names, run_group, handle)
-        return frames, out_pruned
-
-    def exec_many(self, names: Iterable[str], ops: list[ObjOp],
-                  workers: int = 8) -> list[Any]:
-        """Legacy fan-out entry point; now an alias for the batched
-        per-OSD plane (``workers`` is kept for API compatibility)."""
-        del workers
-        return self.exec_batch(names, ops)
+        gen = self._scatter_iter(names, run_group, handle, stream=stream)
+        return gen, out_pruned
 
     def delete(self, name: str) -> None:
         for osd_id in self.cluster.up_osds:
@@ -957,7 +1293,9 @@ def _result_nbytes(result: Any) -> int:
 
 def make_store(n_osds: int, *, replicas: int = 3, n_pgs: int = 128,
                prefix: str = "osd", client_bw: float | None = None,
-               disk_bw: float | None = None) -> ObjectStore:
+               disk_bw: float | None = None,
+               replication: str = "chain") -> ObjectStore:
     cm = ClusterMap(tuple(f"{prefix}.{i}" for i in range(n_osds)),
                     n_pgs=n_pgs, replicas=min(replicas, n_osds))
-    return ObjectStore(cm, client_bw=client_bw, disk_bw=disk_bw)
+    return ObjectStore(cm, client_bw=client_bw, disk_bw=disk_bw,
+                       replication=replication)

@@ -13,11 +13,14 @@ column bounds for the approx-median rewrite).
 
 Every interaction rides the store's symmetric per-OSD batch plane:
 writes go through ``ObjectStore.put_batch`` (one request per primary
-OSD); compiled plans execute through ``exec_combine`` (aggregate
-tails: one partial per OSD), ``exec_concat`` (table-out tails: ONE
-framed table response per OSD), or ``exec_batch`` (per-object
-results) — fabric ops AND result frames scale with the number of OSDs,
-not the number of objects, on every path.
+OSD — windowed/streaming when transfers take simulated time, so the
+per-object encode overlaps the NIC stream); compiled plans execute
+through the streaming consume of ``exec_combine`` (aggregate tails:
+one partial per OSD), ``exec_concat`` (table-out tails: ONE framed
+table response per OSD, decoded frame-by-frame as they land), or
+``exec_batch`` (per-object results) — fabric ops AND result frames
+scale with the number of OSDs, not the number of objects, on every
+path, and wall clock scales with the slowest OSD, not the sum.
 
 Pruning is pushed down by default: the filter predicates ride inside
 the batched objclass request and each OSD skips objects its own
@@ -184,14 +187,28 @@ class GlobalVOL:
     # ------------------------------------------------------------ write
     def write(self, omap: ObjectMap, table: Mapping[str, np.ndarray],
               *, rows: RowRange | None = None, workers: int | None = None,
-              forwarding: bool = True) -> int:
+              forwarding: bool = True,
+              window_bytes: int | None = None,
+              window_objects: int | None = None) -> int:
         """Scatter a row range to its objects through the batched write
-        plane: sub-writes are encoded client-side, then shipped via
-        ``ObjectStore.put_batch`` — ONE request per primary OSD (with
-        server-side replica fan-out and in-batch failover), so ingest
-        pays K round trips for N objects.  Parallelism across OSD groups
-        is the store's, gated on ``io_simulated()``; ``workers`` is kept
-        for API compatibility and ignored.
+        plane: ONE request per primary OSD (with server-side chain
+        replication and in-batch failover), so ingest pays K round
+        trips for N objects.  Parallelism across OSD groups is the
+        store's, gated on ``io_simulated()``; ``workers`` is kept for
+        API compatibility and ignored.
+
+        When transfers take simulated time the sub-writes STREAM: the
+        per-object encode (slice + zone map + codec) runs lazily and
+        ``put_batch``'s windowed mode flushes per-OSD sub-write groups
+        as each window of encoded bytes is ready, overlapping encode
+        with the NIC stream instead of buffering the whole batch
+        (``Fabric.overlap_s`` / ``stream_windows`` measure it).  Pass
+        ``window_bytes``/``window_objects`` to pick the window, or
+        ``window_objects=0`` to force the buffered path; the default
+        defers to ``ObjectStore.default_window_bytes()`` (buffered when
+        no I/O is simulated — feeder threads only cost GIL there).
+        Stored bytes, versions, and fabric-op counts are identical
+        either way.
 
         ``forwarding=False`` bypasses the plugin machinery and writes one
         native blob — the paper's Table-1 native-HDF5 baseline.
@@ -215,21 +232,38 @@ class GlobalVOL:
         # about to cache-on-write survive the first read-side lookup
         self._pin_epoch()
 
-        names, blobs, xattrs, zms = [], [], [], []
-        for extent, local_rows in subs:
-            glob = local_rows.shift(extent.row_start)
-            part = {k: np.asarray(v)[glob.start - rows.start:
-                                     glob.stop - rows.start]
-                    for k, v in table.items()}
-            zm = fmt.zone_map(part)
-            names.append(extent.name)
-            blobs.append(self.local.encode(part))
-            xattrs.append({"zone_map": zm, "rows": [glob.start, glob.stop]})
-            zms.append(zm)
-        versions = self.store.put_batch(names, blobs, xattrs)
+        if window_bytes is None and window_objects is None:
+            window_bytes = self.store.default_window_bytes()
+        names = [extent.name for extent, _ in subs]
+        zms: list[dict] = []
+        nbytes = [0]
+
+        def encoded():
+            """Lazy per-object encoder: yields (blob, xattr) pairs for
+            ``put_batch`` to stream while the next part encodes."""
+            for extent, local_rows in subs:
+                glob = local_rows.shift(extent.row_start)
+                part = {k: np.asarray(v)[glob.start - rows.start:
+                                         glob.stop - rows.start]
+                        for k, v in table.items()}
+                zm = fmt.zone_map(part)
+                zms.append(zm)
+                blob = self.local.encode(part)
+                nbytes[0] += len(blob)
+                yield blob, {"zone_map": zm,
+                             "rows": [glob.start, glob.stop]}
+
+        if window_bytes or window_objects:
+            versions = self.store.put_batch(
+                names, encoded(), window_bytes=window_bytes,
+                window_objects=window_objects)
+        else:
+            items = list(encoded())
+            versions = self.store.put_batch(
+                names, [b for b, _ in items], [x for _, x in items])
         for name, zm, v in zip(names, zms, versions):
             self._zm_cache[name] = (zm, v)  # keep the cache fresh
-        return sum(len(b) for b in blobs)
+        return nbytes[0]
 
     # ------------------------------------------------------------ scan
     def scan(self, dataset: str | ObjectMap) -> Scan:

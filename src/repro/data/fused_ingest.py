@@ -13,6 +13,8 @@ batch, with zero collectives added (elementwise unpack).
 
 from __future__ import annotations
 
+from collections import deque
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -68,6 +70,35 @@ def derive_labels(tokens: jax.Array) -> jax.Array:
 def fused_batch(packed: jax.Array) -> dict[str, jax.Array]:
     tokens = unpack_tokens(packed)
     return {"tokens": tokens, "labels": derive_labels(tokens)}
+
+
+def device_stream(loader, *, lookahead: int = 1):
+    """Iterate a *packed* loader as device-resident packed words with
+    transfer lookahead — the device tail of the streaming input path.
+
+    The loader (ideally ``prefetch > 0`` and ``window_steps > 1``)
+    assembles host batches while slow OSDs are still serving later
+    steps; this generator keeps ``lookahead`` batches' packed words
+    already ``jax.device_put`` while the caller computes on the current
+    one, so OSD frames -> host window -> device words -> in-graph
+    unpack (``make_fused_train_step``) form one pipeline with no serial
+    hop.  Yields the device array a fused step consumes directly.
+    """
+    q: deque = deque()
+    it = iter(loader)
+
+    def pull() -> None:
+        try:
+            q.append(jax.device_put(next(it)["tokens_packed"]))
+        except StopIteration:
+            pass
+
+    for _ in range(max(lookahead, 0) + 1):
+        pull()
+    while q:
+        words = q.popleft()
+        pull()
+        yield words
 
 
 def make_fused_train_step(base_train_step):

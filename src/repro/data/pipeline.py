@@ -18,6 +18,13 @@ The loader is the GlobalVOL acting as a training-data client:
     compiled step (``data.fused_ingest``);
   * prefetch: a background thread keeps ``prefetch`` batches ahead, so
     storage latency overlaps step compute;
+  * windowed streaming (``window_steps > 1``): the producer fetches
+    several steps' runs in ONE streaming gather and assembles each
+    step's batch the moment ITS frames land (``ScanEngine.
+    fetch_objects_stream`` delivers per-OSD frames in arrival order),
+    so early batches reach the trainer while the slowest OSD is still
+    serving later steps' rows — batches stay bit-identical and in step
+    order;
   * straggler mitigation: reads hedge to a replica after
     ``hedge_timeout_s`` (paper: "fully leveraging ... load balancing ...
     of distributed storage systems").
@@ -64,12 +71,24 @@ class ObjectDataLoader:
         seed: int = 0,
         packed: bool = False,
         prefetch: int = 2,
+        window_steps: int = 1,
         hedge_timeout_s: float | None = None,
         start_step: int = 0,
     ):
         if global_batch % dp_size:
             raise ValueError(f"global_batch {global_batch} % dp_size "
                              f"{dp_size} != 0")
+        if window_steps < 1:
+            raise ValueError(f"window_steps must be >= 1, "
+                             f"got {window_steps}")
+        if window_steps > 1 and prefetch < 1:
+            raise ValueError("window_steps > 1 needs the prefetch "
+                             "producer (prefetch >= 1) — the windowed "
+                             "streaming fetch runs there")
+        if window_steps > 1 and hedge_timeout_s is not None:
+            raise ValueError("window_steps > 1 cannot combine with "
+                             "hedge_timeout_s (hedged reads bypass the "
+                             "engine's streaming gather)")
         self.vol = vol
         self.omap: ObjectMap = vol.open(dataset_name)
         self.ds = self.omap.dataset
@@ -78,10 +97,17 @@ class ObjectDataLoader:
         self.dp_rank, self.dp_size = dp_rank, dp_size
         self.seed = seed
         self.packed = packed
+        self.window_steps = window_steps
         self.hedge_timeout_s = hedge_timeout_s
         self.state = LoaderState(step=start_step)
         self.steps_per_epoch = max(self.ds.n_rows // global_batch, 1)
+        # streaming-consume observability: set per window by the
+        # windowed producer — how many of the window's per-object
+        # results had landed when its FIRST batch was assembled (the
+        # "first batch out before the slowest OSD finished" claim)
+        self.last_window_stats: dict | None = None
 
+        self._prefetch = prefetch
         self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -109,12 +135,10 @@ class ObjectDataLoader:
         return np.sort(batch[self.dp_rank::self.dp_size])
 
     # ------------------------------------------------------------ fetch
-    def _fetch_rows(self, rows: np.ndarray) -> dict[str, np.ndarray]:
-        """Group sorted rows into per-object contiguous runs, then fetch
-        ALL runs with one batched objclass request per OSD (packed or
-        decoded) — the train input path pays fabric ops per OSD, not per
-        run."""
-        runs: list[tuple] = []                   # (extent, run, lo, hi)
+    def _runs_for(self, rows: np.ndarray) -> list[tuple]:
+        """Group sorted rows into per-object contiguous runs:
+        (extent, run, lo, hi) tuples."""
+        runs: list[tuple] = []
         i = 0
         while i < len(rows):
             subs = self.omap.lookup(RowRange(int(rows[i]),
@@ -128,18 +152,19 @@ class ObjectDataLoader:
             hi = int(run[-1] - extent.row_start) + 1
             runs.append((extent, run, lo, hi))
             i = j
+        return runs
 
+    def _run_pipelines(self, runs: list[tuple]) -> list[list]:
         if self.packed:
-            pipelines = [[oc.op("select_packed", rows=(lo, hi),
-                                col="tokens")]
-                         for _, _, lo, hi in runs]
-        else:
-            pipelines = [[oc.op("select", rows=(lo, hi)),
-                          oc.op("project", cols=["tokens"])]
-                         for _, _, lo, hi in runs]
-        results = self._exec_runs([e.name for e, _, _, _ in runs],
-                                  pipelines)
+            return [[oc.op("select_packed", rows=(lo, hi), col="tokens")]
+                    for _, _, lo, hi in runs]
+        return [[oc.op("select", rows=(lo, hi)),
+                 oc.op("project", cols=["tokens"])]
+                for _, _, lo, hi in runs]
 
+    def _assemble(self, runs: list[tuple],
+                  results: list) -> dict[str, np.ndarray]:
+        """Per-run results (aligned with ``runs``) -> one batch."""
         if self.packed:
             packed_parts = []
             for (extent, run, lo, _), res in zip(runs, results):
@@ -156,6 +181,54 @@ class ObjectDataLoader:
         labels = np.roll(toks, -1, axis=1)
         labels[:, -1] = -1  # no target across sequence boundary
         return {"tokens": toks, "labels": labels}
+
+    def _fetch_rows(self, rows: np.ndarray) -> dict[str, np.ndarray]:
+        """Group sorted rows into per-object contiguous runs, then fetch
+        ALL runs with one batched objclass request per OSD (packed or
+        decoded) — the train input path pays fabric ops per OSD, not per
+        run."""
+        runs = self._runs_for(rows)
+        results = self._exec_runs([e.name for e, _, _, _ in runs],
+                                  self._run_pipelines(runs))
+        return self._assemble(runs, results)
+
+    def _fetch_window(self, start_step: int):
+        """Windowed streaming fetch: ONE gather for ``window_steps``
+        steps' runs, yielding ``(step, batch)`` in step order as each
+        step's frames land — the engine streams per-OSD result frames
+        in arrival order, so step s's batch goes out the moment ITS
+        runs are complete, even while the slowest OSD is still serving
+        later steps' rows."""
+        steps = list(range(start_step, start_step + self.window_steps))
+        runs_per_step = [self._runs_for(self.rows_for_step(s))
+                         for s in steps]
+        flat_runs = [r for runs in runs_per_step for r in runs]
+        owner = [k for k, runs in enumerate(runs_per_step)
+                 for _ in runs]
+        results: list = [None] * len(flat_runs)
+        missing = [len(runs) for runs in runs_per_step]
+        emitted = 0
+        landed = 0
+        for i, res in self.vol.engine.fetch_objects_stream(
+                [e.name for e, _, _, _ in flat_runs],
+                self._run_pipelines(flat_runs), packed=self.packed):
+            results[i] = res
+            landed += 1
+            missing[owner[i]] -= 1
+            # flush every leading step whose runs are all present (step
+            # order is the loader's determinism contract)
+            while emitted < len(steps) and missing[emitted] == 0:
+                if emitted == 0:
+                    self.last_window_stats = {
+                        "results_at_first_yield": landed,
+                        "total_results": len(flat_runs),
+                        "window_steps": self.window_steps,
+                    }
+                lo = sum(len(r) for r in runs_per_step[:emitted])
+                runs = runs_per_step[emitted]
+                yield steps[emitted], self._assemble(
+                    runs, results[lo:lo + len(runs)])
+                emitted += 1
 
     def _exec_runs(self, names: list[str], pipelines: list[list]):
         """Per-run results (decoded tables, or packed word partials),
@@ -177,14 +250,23 @@ class ObjectDataLoader:
 
     def _producer(self) -> None:
         step = self.state.step
+        # hedged reads bypass the engine (per-object raw gets), so the
+        # windowed streaming consume only applies without them
+        windowed = self.window_steps > 1 and self.hedge_timeout_s is None
         while not self._stop.is_set():
             try:
-                batch = self.make_batch(step)
+                if windowed:
+                    for _, batch in self._fetch_window(step):
+                        self._q.put(batch)
+                        step += 1
+                        if self._stop.is_set():
+                            return
+                else:
+                    self._q.put(self.make_batch(step))
+                    step += 1
             except Exception as e:  # surface in consumer
                 self._q.put(e)
                 return
-            self._q.put(batch)
-            step += 1
 
     def __next__(self) -> dict[str, np.ndarray]:
         if self._thread is None:
@@ -198,6 +280,32 @@ class ObjectDataLoader:
 
     def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
         return self
+
+    def seek(self, step: int) -> None:
+        """Reposition the loader so the NEXT consumed batch is
+        ``step``'s.  A batch is a pure function of (seed, step), so a
+        seek is exact: the prefetch producer is restarted at the new
+        position and re-fills its window from there — how the trainer
+        resumes from a checkpoint without losing prefetch/windowed
+        overlap.  A seek to the current position is free (the already-
+        prefetched batches stay valid)."""
+        if step == self.state.step:
+            return  # queue holds [state.step, ...) — already positioned
+        if self._thread is not None:
+            self._stop.set()
+            while self._thread.is_alive():  # unblock a parked producer
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    self._thread.join(timeout=0.005)
+            self._thread = None
+        self.state.step = step
+        if self._prefetch > 0:
+            self._q = queue.Queue(maxsize=max(self._prefetch, 1))
+            self._stop = threading.Event()
+            self._thread = threading.Thread(
+                target=self._producer, daemon=True)
+            self._thread.start()
 
     def close(self) -> None:
         self._stop.set()

@@ -60,7 +60,10 @@ def cache_to_objects(store: ObjectStore, cache: Any, session: str,
                 blobs.append(np.ascontiguousarray(page).tobytes())
                 meta["pages"].append([name, p0])
         # each leaf's pages ride the batched write plane (one request
-        # per OSD per leaf, and at most one leaf buffered in memory)
+        # per OSD per leaf, and at most one leaf buffered in memory —
+        # pages are already materialized here, so the windowed
+        # streaming mode would add feeder overhead with nothing left
+        # to overlap)
         store.put_batch(names, blobs)
         manifest["leaves"][key] = meta
     # manifest LAST — the commit point stays ordered after the data

@@ -105,11 +105,15 @@ class Trainer:
             state, start = self.init_or_restore()
             start_step = start if start_step is None else start_step
         start_step = start_step or 0
-        self.loader.state.step = start_step
+        # exact reposition (data order is a pure function of step); the
+        # consume below rides the loader's prefetch queue, so storage
+        # fetches — windowed across steps when window_steps > 1 —
+        # overlap step compute instead of serializing ahead of it
+        self.loader.seek(start_step)
 
         for step in range(start_step, self.cfg.total_steps):
             t0 = time.perf_counter()
-            batch = self.loader.make_batch(step)
+            batch = next(self.loader)
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
             state, metrics = self.train_step(state, batch)
             metrics = jax.tree.map(float, jax.device_get(metrics))

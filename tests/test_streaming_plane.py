@@ -1,0 +1,573 @@
+"""Streaming pipelined data plane: windowed ingest (put_batch streaming
+mode), chain replication, streaming scan consume (exec_*_iter + engine
+frame-by-frame decode), and the loader's windowed multi-step fetch.
+Example-based on purpose: must run without hypothesis."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Column, GlobalVOL, LogicalDataset, PartitionPolicy,
+                        RowRange, make_store)
+from repro.core import format as fmt
+from repro.core import objclass as oc
+from repro.core.store import OSDDown
+
+
+def make_world(n=4000, n_osds=5, replicas=3, seed=0, **store_kw):
+    rng = np.random.default_rng(seed)
+    ds = LogicalDataset(
+        "t", (Column("x", "float64"), Column("y", "int32")), n, 64)
+    store = make_store(n_osds, replicas=replicas, **store_kw)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=8 << 10,
+                                          max_object_bytes=8 << 12))
+    table = {"x": rng.normal(size=n),
+             "y": rng.integers(0, 1000, n).astype(np.int32)}
+    return store, vol, omap, table
+
+
+def _blobs_for(names):
+    return [f"blob-{i}".encode() * 40 for i in range(len(names))]
+
+
+# ------------------------------------------------------ windowed ingest
+def test_windowed_put_batch_same_bytes_ops_and_accounting():
+    """Streaming mode must change WHEN bytes move, never WHAT moves:
+    identical stored bytes, one request per primary OSD, identical
+    payload accounting — plus stream_windows > 0 proving the windows
+    actually flushed."""
+    store, vol, omap, table = make_world()
+    names = omap.object_names()
+    blobs = _blobs_for(names)
+    primaries = {store.cluster.primary(n) for n in names}
+
+    store.fabric.reset()
+    store.put_batch(names, blobs)
+    buffered = store.fabric.snapshot()
+    stored_buffered = {(o, n): store.osds[o].data[n]
+                       for n in names for o in store.cluster.locate(n)}
+
+    store.fabric.reset()
+    store.put_batch(names, iter(blobs), window_objects=3)
+    streamed = store.fabric.snapshot()
+
+    assert streamed["ops"] == buffered["ops"] == len(primaries)
+    assert streamed["client_tx"] == buffered["client_tx"]
+    assert streamed["replica_bytes"] == buffered["replica_bytes"]
+    assert streamed["entry_egress_bytes"] == buffered["entry_egress_bytes"]
+    assert streamed["stream_windows"] > 0
+    assert buffered["stream_windows"] == 0
+    for (o, n), blob in stored_buffered.items():
+        assert store.osds[o].data[n] == blob  # bit-exact stored bytes
+
+
+def test_windowed_put_batch_accepts_lazy_blob_xattr_producer():
+    store, vol, omap, table = make_world()
+    names = omap.object_names()
+    blobs = _blobs_for(names)
+
+    def produce():
+        for i, b in enumerate(blobs):
+            yield b, {"tag": i}
+
+    versions = store.put_batch(names, produce(), window_bytes=1 << 10)
+    assert len(versions) == len(names)
+    for i, (n, v) in enumerate(zip(names, versions)):
+        x = store.xattr(n)
+        assert x["tag"] == i and x["version"] == v
+        assert store.get(n) == blobs[i]
+
+
+def test_windowed_put_batch_truncated_producer_raises():
+    store, vol, omap, table = make_world()
+    names = omap.object_names()
+    with pytest.raises(ValueError):
+        store.put_batch(names, iter([b"only-one"]), window_objects=1)
+
+
+def test_windowed_put_batch_overlong_producer_raises():
+    """An extra blob beyond len(names) is a caller bug and must raise
+    (the buffered path's length validation), never drop data silently."""
+    store, vol, omap, table = make_world()
+    names = omap.object_names()
+    blobs = _blobs_for(names) + [b"one-too-many"]
+    with pytest.raises(ValueError):
+        store.put_batch(names, iter(blobs), window_objects=2)
+
+
+def test_checkpoint_streaming_save_restores_bit_exact():
+    """With simulated I/O the checkpoint ships as ONE windowed batch
+    spanning all leaves (cross-leaf encode/stream overlap): one put
+    request per primary OSD for the whole checkpoint + the manifest,
+    stream_windows > 0, restore bit-exact."""
+    from repro.checkpoint import ckpt
+    from repro.core import PartitionPolicy
+    store = make_store(4, replicas=2, client_bw=500 << 20)
+    state = {"w": np.arange(8192, dtype=np.float32),
+             "b": np.ones(256, dtype=np.float32)}
+    store.fabric.reset()
+    ckpt.save(store, state, step=3,
+              policy=PartitionPolicy(target_object_bytes=2 << 10,
+                                     max_object_bytes=2 << 10))
+    k = len(store.cluster.up_osds)
+    assert store.fabric.ops <= k + 1  # ONE streamed batch + manifest
+    assert store.fabric.stream_windows > 0
+    restored, _ = ckpt.restore(store, state, step=3)
+    assert np.array_equal(restored["w"], state["w"])
+    assert np.array_equal(restored["b"], state["b"])
+
+
+def test_windowed_put_batch_overlaps_encode_with_stream():
+    """With a simulated NIC, encode time after the first flush must be
+    hidden behind the stream (overlap_s > 0) and the windowed wall must
+    beat serial encode-then-stream."""
+    store, vol, omap, table = make_world(client_bw=100 << 20)
+    names = omap.object_names()
+    payload = [b"x" * (256 << 10) for _ in names]
+    encode_s = 0.004  # simulated per-object encode cost
+
+    # measure what this machine's sleep-based "encoder" actually costs
+    # (time.sleep overshoots under load — a nominal sum flakes)
+    t0 = time.perf_counter()
+    for _ in names:
+        time.sleep(encode_s)
+    encode_measured = time.perf_counter() - t0
+
+    def produce():
+        for b in payload:
+            time.sleep(encode_s)
+            yield b
+
+    store.fabric.reset()
+    t0 = time.perf_counter()
+    store.put_batch(names, produce(), window_objects=1)
+    wall = time.perf_counter() - t0
+    snap = store.fabric.snapshot()
+    nic_s = sum(len(b) for b in payload) / (100 << 20)
+    assert nic_s > 0.3 * encode_measured  # overlap is non-trivial here
+    # the claim, measured directly: all encode after the first flush ran
+    # while a stream was active (sleep inflation under load only raises
+    # it, so this is machine-load-robust where a wall-clock subtraction
+    # is not; the table1 bench gates the wall ratio in a controlled run)
+    assert snap["overlap_s"] > 0.5 * encode_measured
+    assert wall < encode_measured + nic_s + 0.5  # sanity ceiling only
+
+
+def test_windowed_put_batch_entry_death_mid_stream_fails_over():
+    """The entry OSD dies mid-stream: landed sub-writes keep their
+    success, unlanded ones (queued or not yet produced) fail over, and
+    payload accounting stays exact."""
+    store, vol, omap, table = make_world()
+    names = omap.object_names()
+    blobs = _blobs_for(names)
+    by_primary = {}
+    for n in names:
+        by_primary.setdefault(store.cluster.primary(n), []).append(n)
+    victim, group = max(by_primary.items(), key=lambda kv: len(kv[1]))
+    assert len(group) >= 2
+
+    real = store.osds[victim].put_batch
+    died = {"yet": False}
+
+    def dies_midway(items, stream=None, landed=None):
+        if died["yet"]:
+            return real(items, stream=stream, landed=landed)
+        died["yet"] = True
+        it = iter(items)
+        real([next(it)], stream=stream, landed=landed)  # first one lands
+        raise OSDDown(victim)
+
+    store.osds[victim].put_batch = dies_midway
+    store.fabric.reset()
+    versions = store.put_batch(names, iter(blobs), window_objects=2)
+    assert len(versions) == len(names)
+    for n, b in zip(names, blobs):
+        for osd_id in store.cluster.locate(n):
+            assert store.osds[osd_id].data[n] == b
+    payload = sum(len(b) for b in blobs)
+    assert store.fabric.client_tx == payload
+    assert store.fabric.replica_bytes == \
+        payload * (store.cluster.replicas - 1)
+
+
+def test_vol_write_windowed_matches_buffered_bit_exact():
+    store, vol, omap, table = make_world()
+    vol.write(omap, table, window_objects=0)  # force buffered
+    stored = {(o, n): store.osds[o].data[n]
+              for n in omap.object_names()
+              for o in store.cluster.locate(n)}
+    store.fabric.reset()
+    vol.write(omap, table, window_objects=2)
+    primaries = {store.cluster.primary(n) for n in omap.object_names()}
+    assert store.fabric.ops == len(primaries)  # still O(K)
+    assert store.fabric.stream_windows > 0
+    for (o, n), blob in stored.items():
+        assert store.osds[o].data[n] == blob
+    out = vol.read(omap, RowRange(0, omap.dataset.n_rows))
+    assert np.allclose(out["x"], table["x"])
+
+
+# ---------------------------------------------------- chain replication
+def test_chain_replication_halves_entry_egress_vs_fanout():
+    """Same objects, same total replication bytes — but the entry OSD
+    sends each blob ONCE down the chain instead of (replicas-1) times."""
+    snaps = {}
+    for topo in ("chain", "fanout"):
+        store, vol, omap, table = make_world(replicas=3,
+                                             replication=topo)
+        names = omap.object_names()
+        blobs = _blobs_for(names)
+        store.fabric.reset()
+        store.put_batch(names, blobs)
+        snaps[topo] = store.fabric.snapshot()
+        for n, b in zip(names, blobs):
+            for osd_id in store.cluster.locate(n):
+                assert store.osds[osd_id].data[n] == b
+    assert snaps["chain"]["replica_bytes"] == \
+        snaps["fanout"]["replica_bytes"]
+    assert snaps["fanout"]["entry_egress_bytes"] == \
+        snaps["fanout"]["replica_bytes"]
+    # R=3: fan-out sends 2 copies from the entry, the chain sends 1
+    assert snaps["chain"]["entry_egress_bytes"] * 2 == \
+        snaps["fanout"]["entry_egress_bytes"]
+
+
+def test_chain_replication_single_put_matches_batch_accounting():
+    store, vol, omap, table = make_world(replicas=3)
+    names = omap.object_names()
+    blobs = _blobs_for(names)
+    store.fabric.reset()
+    for n, b in zip(names, blobs):
+        store.put(n, b)
+    per_obj = store.fabric.snapshot()
+    payload = sum(len(b) for b in blobs)
+    assert per_obj["replica_bytes"] == payload * 2
+    assert per_obj["entry_egress_bytes"] == payload  # chain: one hop out
+
+
+def test_chain_mid_death_skips_hop_and_keeps_accounting_exact():
+    """A mid-chain replica dies between the primary write and its
+    replication hop: the chain must skip it (the tail still gets its
+    copy, forwarded by the last holder), versions stay monotonic, and
+    replica_bytes counts ONLY the hops that actually moved bytes."""
+    store, vol, omap, table = make_world(replicas=3)
+    name = omap.object_names()[0]
+    acting = store.cluster.locate(name)
+    middle = acting[1]
+    real_put = store.osds[middle].put
+    calls = {"n": 0}
+
+    def down_once(*a, **kw):
+        if calls["n"] == 0:
+            calls["n"] += 1
+            raise OSDDown(middle)
+        return real_put(*a, **kw)
+
+    store.osds[middle].put = down_once
+    store.fabric.reset()
+    v1 = store.put(name, b"chain-payload")
+    assert store.fabric.replica_bytes == len(b"chain-payload")  # 1 hop
+    assert store.fabric.entry_egress_bytes == len(b"chain-payload")
+    assert store.osds[acting[2]].data[name] == b"chain-payload"
+    assert name not in store.osds[middle].data  # skipped, not retried
+
+    # the next write replicates everywhere again with a bumped version
+    v2 = store.put(name, b"chain-payload-2")
+    assert v2 > v1
+    for osd_id in acting:
+        assert store.osds[osd_id].data[name] == b"chain-payload-2"
+        assert store.osds[osd_id].xattrs[name]["version"] == v2
+
+
+def test_recover_heals_skipped_chain_hop():
+    store, vol, omap, table = make_world(replicas=3)
+    name = omap.object_names()[0]
+    acting = store.cluster.locate(name)
+    middle = acting[1]
+    real_put = store.osds[middle].put
+    store.osds[middle].put = lambda *a, **kw: (_ for _ in ()).throw(
+        OSDDown(middle))
+    store.put(name, b"heal-me")
+    store.osds[middle].put = real_put
+    store.recover()
+    assert store.osds[middle].data[name] == b"heal-me"
+
+
+# ------------------------------------------------- streaming scan consume
+def test_exec_concat_iter_first_frame_before_slow_osd():
+    """With one straggler OSD, the fast OSDs' frames must reach the
+    consumer while the straggler is still scanning — and the assembled
+    result must be bit-exact vs the buffered gather."""
+    store, vol, omap, table = make_world(n_osds=4, replicas=2)
+    vol.write(omap, table)
+    names = omap.object_names()
+    ops = [oc.op("project", cols=["y"])]
+    frames_ref, _ = store.exec_concat(names, ops)
+    primaries = {store.cluster.primary(n) for n in names}
+    assert len(primaries) >= 3
+
+    slow = sorted(primaries)[0]
+    store.osds[slow].latency_s = 0.25
+    store.fabric.reset()
+    first_rx = None
+    frames = []
+    for frame in store.exec_concat_iter(names, ops):
+        if first_rx is None:
+            first_rx = store.fabric.rx_frames
+        frames.append(frame)
+    store.osds[slow].latency_s = 0.0
+    assert first_rx < len(primaries)  # straggler had not answered yet
+    assert store.fabric.stream_windows == len(frames) == len(primaries)
+
+    from repro.core.scan import _split_frames
+    parts_ref = _split_frames(len(names), frames_ref)
+    parts = _split_frames(len(names), frames)
+    for a, b in zip(parts, parts_ref):
+        assert np.array_equal(a["y"], b["y"])
+
+
+def test_engine_execute_streams_frames_and_stats_count_windows():
+    """vol-level scans ride the streaming consume: stream_windows in
+    the emitted stats equals the per-OSD frames delivered."""
+    store, vol, omap, table = make_world()
+    vol.write(omap, table)
+    primaries = {store.cluster.primary(n) for n in omap.object_names()}
+    out, stats = (vol.scan(omap).filter("y", "<", 500)
+                  .project("x", "y").execute(omap))
+    mask = table["y"] < 500
+    assert np.array_equal(out["y"], table["y"][mask])
+    assert stats["rx_frames"] == stats["stream_windows"] \
+        <= len(primaries)
+
+    res, astats = vol.scan(omap).agg("mean", "x").execute(omap)
+    assert res == pytest.approx(table["x"].mean(), rel=1e-12)
+    assert astats["stream_windows"] == astats["rx_frames"]
+
+
+def test_exec_batch_iter_matches_buffered_results():
+    store, vol, omap, table = make_world()
+    vol.write(omap, table)
+    names = omap.object_names()
+    ops = [oc.op("project", cols=["y"])]
+    buffered = store.exec_batch(names, ops)
+    got: dict = {}
+    for i, res in store.exec_batch_iter(names, ops):
+        got[i] = res
+    assert set(got) == set(range(len(names)))
+    for i, blob in enumerate(buffered):
+        assert got[i] == blob
+
+
+def test_exec_combine_iter_failover_and_equivalence():
+    store, vol, omap, table = make_world()
+    vol.write(omap, table)
+    names = omap.object_names()
+    ops = [oc.op("agg", col="x", fn="sum")]
+    expect = oc.combine_partials(ops, store.exec_combine(names, ops))
+    victim = names[0]
+    primary = store.cluster.primary(victim)
+    with store.osds[primary].lock:
+        del store.osds[primary].data[victim]
+    pruned: list = []
+    partials = list(store.exec_combine_iter(names, ops,
+                                            pruned_out=pruned))
+    assert not pruned
+    assert oc.combine_partials(ops, partials) == pytest.approx(
+        expect, rel=1e-12)
+
+
+# -------------------------------------------------- loader windowed mode
+def _corpus_world(n_osds=4, n_seqs=64, seq_len=64, obj_kb=2):
+    from repro.data.corpus import CorpusSpec, build_corpus
+    store = make_store(n_osds, replicas=2)
+    vol = GlobalVOL(store)
+    build_corpus(vol, CorpusSpec(n_seqs=n_seqs, seq_len=seq_len,
+                                 vocab_size=512),
+                 PartitionPolicy(target_object_bytes=obj_kb << 10,
+                                 max_object_bytes=64 << 10))
+    return store, vol
+
+
+def test_loader_windowed_batches_bit_exact_vs_per_step():
+    from repro.data.pipeline import ObjectDataLoader
+    store, vol = _corpus_world()
+    ref = ObjectDataLoader(vol, "corpus", global_batch=8, prefetch=0)
+    win = ObjectDataLoader(vol, "corpus", global_batch=8, prefetch=2,
+                           window_steps=3)
+    try:
+        for _ in range(7):
+            a = next(ref)
+            b = next(win)
+            assert np.array_equal(a["tokens"], b["tokens"])
+            assert np.array_equal(a["labels"], b["labels"])
+    finally:
+        ref.close()
+        win.close()
+
+
+def test_loader_windowed_yields_first_batch_before_slow_osd():
+    """One OSD is a straggler serving only LATER steps' rows: the first
+    batch must pop out of the loader while that OSD's frames are still
+    in flight (the windowed ingest/scan overlap, loader side)."""
+    from repro.data.pipeline import ObjectDataLoader
+    store, vol = _corpus_world(n_osds=8, n_seqs=512, obj_kb=16)
+    probe = ObjectDataLoader(vol, "corpus", global_batch=4, prefetch=0)
+    # find a window start whose FIRST step skips some OSD that serves a
+    # LATER step of the window — that OSD's frame cannot gate the first
+    # batch out of the loader
+    straggler = start = None
+    for s0 in range(12):
+        runs0 = {e.name for e, _, _, _ in
+                 probe._runs_for(probe.rows_for_step(s0))}
+        later = set()
+        for s in range(s0 + 1, s0 + 4):
+            later |= {e.name for e, _, _, _ in
+                      probe._runs_for(probe.rows_for_step(s))}
+        prim0 = {store.cluster.primary(n) for n in runs0}
+        cands = [store.cluster.primary(n) for n in later - runs0
+                 if store.cluster.primary(n) not in prim0]
+        if cands:
+            straggler, start = cands[0], s0
+            break
+    probe.close()
+    assert straggler is not None, "no straggler-free first step found"
+    store.osds[straggler].latency_s = 0.3
+
+    win = ObjectDataLoader(vol, "corpus", global_batch=4, prefetch=2,
+                           window_steps=4, start_step=start)
+    ref = ObjectDataLoader(vol, "corpus", global_batch=4, prefetch=0,
+                           start_step=start)
+    try:
+        t0 = time.perf_counter()
+        first = next(win)
+        first_wall = time.perf_counter() - t0
+        stats = win.last_window_stats
+        assert stats is not None
+        # the first batch left before the whole window's results landed
+        assert stats["results_at_first_yield"] < stats["total_results"]
+        assert first_wall < 0.3  # did not wait for the straggler
+        assert np.array_equal(first["tokens"], next(ref)["tokens"])
+    finally:
+        store.osds[straggler].latency_s = 0.0
+        win.close()
+        ref.close()
+
+
+def test_loader_windowed_mode_rejects_unservable_configs():
+    """window_steps > 1 only runs inside the prefetch producer and
+    conflicts with hedged reads — both must fail LOUDLY, not silently
+    fall back to the per-step path."""
+    from repro.data.pipeline import ObjectDataLoader
+    store, vol = _corpus_world()
+    with pytest.raises(ValueError):
+        ObjectDataLoader(vol, "corpus", global_batch=8, prefetch=0,
+                         window_steps=2)
+    with pytest.raises(ValueError):
+        ObjectDataLoader(vol, "corpus", global_batch=8, prefetch=2,
+                         window_steps=2, hedge_timeout_s=0.1)
+
+
+def test_exec_combine_streaming_fold_is_deterministic():
+    """Merged partials feed an order-sensitive float fold: with
+    simulated I/O and racing OSD threads, repeated identical aggregate
+    scans must still fold in one (dispatch) order — bit-equal results
+    run to run."""
+    store, vol, omap, table = make_world(n_osds=5, seed=3)
+    vol.write(omap, table)
+    for osd in store.osds.values():  # jitter completion order
+        osd.latency_s = 0.001
+    try:
+        results = {vol.scan(omap).agg("sum", "x").execute(omap)[0]
+                   for _ in range(6)}
+    finally:
+        for osd in store.osds.values():
+            osd.latency_s = 0.0
+    assert len(results) == 1, results  # bit-identical every run
+
+
+def test_loader_seek_repositions_producer_exactly():
+    from repro.data.pipeline import ObjectDataLoader
+    store, vol = _corpus_world()
+    ld = ObjectDataLoader(vol, "corpus", global_batch=8, prefetch=2,
+                          window_steps=2)
+    ref = ObjectDataLoader(vol, "corpus", global_batch=8, prefetch=0)
+    try:
+        next(ld)
+        next(ld)
+        ld.seek(5)
+        got = next(ld)
+        ref.seek(5)  # threadless seek: just repositions state
+        want = ref.make_batch(5)
+        assert np.array_equal(got["tokens"], want["tokens"])
+        assert ld.state.step == 6
+    finally:
+        ld.close()
+        ref.close()
+
+
+def test_device_stream_matches_make_batch():
+    pytest.importorskip("jax")
+    from repro.data.fused_ingest import device_stream
+    from repro.data.pipeline import ObjectDataLoader
+    store, vol = _corpus_world()
+    win = ObjectDataLoader(vol, "corpus", global_batch=8, prefetch=2,
+                           packed=True, window_steps=2)
+    ref = ObjectDataLoader(vol, "corpus", global_batch=8, prefetch=0,
+                           packed=True)
+    try:
+        stream = device_stream(win, lookahead=1)
+        for s in range(4):
+            words = next(stream)
+            want = ref.make_batch(s)["tokens_packed"]
+            assert np.array_equal(np.asarray(words), want)
+    finally:
+        win.close()
+        ref.close()
+
+
+# ------------------------------------- hedged reads vs in-flight stream
+def test_hedged_read_during_windowed_put_batch():
+    """A hedged read must share the store's pools with an in-flight
+    windowed put_batch without deadlock, and NIC accounting must stay
+    exact on both sides."""
+    store, vol, omap, table = make_world(n_osds=4, replicas=2,
+                                         client_bw=50 << 20)
+    target = "hedge/victim"
+    blob0 = b"h" * 4096
+    store.put(target, blob0)
+    store.osds[store.cluster.primary(target)].latency_s = 0.15
+
+    names = [f"stream/{i:03d}" for i in range(24)]
+    blobs = [bytes([i % 251]) * (64 << 10) for i in range(24)]
+
+    def produce():
+        for b in blobs:
+            time.sleep(0.002)  # encoder pacing
+            yield b
+
+    store.fabric.reset()
+    done: dict = {}
+
+    def writer():
+        store.put_batch(names, produce(), window_objects=2)
+        done["w"] = True
+
+    th = threading.Thread(target=writer)
+    th.start()
+    time.sleep(0.02)  # stream is in flight
+    got = store.get_hedged(target, timeout_s=0.02)
+    th.join(timeout=30)
+    assert done.get("w") and got == blob0
+    snap = store.fabric.snapshot()
+    assert snap["client_tx"] == sum(len(b) for b in blobs)
+    assert snap["client_rx"] == len(blob0)
+    for n, b in zip(names, blobs):
+        assert store.get(n) == b
+
+
+def test_exec_many_is_retired():
+    store, _, _, _ = make_world()
+    assert not hasattr(store, "exec_many")

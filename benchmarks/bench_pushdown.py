@@ -16,6 +16,12 @@ Four sections:
              each OSD prunes against its own current xattrs), and a
              table-out filter→project scan returns exactly K framed
              responses (per-OSD server-side table concat).
+  predicate_algebra — the expression-tree pushdown plane: an OR-group /
+             IN-list scan with pushed-down pruning issues ZERO client
+             zone-map requests and O(K) framed responses, returns rows
+             bit-identical to the client-filtered baseline, and an
+             Or-of-disjoint-ranges predicate prunes objects (identically
+             under both strategies) that no flat conjunction could.
   ingest   — the symmetric write-plane claim: writing N objects over K
              OSDs through ``put_batch`` costs exactly one put request
              per primary OSD (the seed paid N), plus the batched
@@ -265,6 +271,92 @@ def bench_prune_pushdown(n_rows: int = N_ROWS) -> dict:
     }
 
 
+def bench_predicate_algebra(n_rows: int = N_ROWS) -> dict:
+    """The expression-tree pushdown claims: rich predicates (OR / IN)
+    keep the O(K) request/metadata invariants and bit-exact results,
+    and interval pruning over the tree skips objects a flat
+    conjunction never could."""
+    ds = LogicalDataset(
+        "pa_events",
+        (Column("e_pt", "float32"), Column("run", "int32")),
+        n_rows, 4096)
+    store = make_store(8, replicas=2)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=64 << 10,
+                                          max_object_bytes=1 << 20))
+    rng = np.random.default_rng(7)
+    # run is SORTED so every object's zone map is a tight interval —
+    # what makes Or-of-disjoint-ranges pruning observable
+    run = (np.arange(n_rows) * 100 // n_rows).astype(np.int32)
+    table = {"e_pt": rng.gamma(2.0, 20.0, n_rows).astype(np.float32),
+             "run": run}
+    vol.write(omap, table)
+    n_osds = len(store.cluster.up_osds)
+    primaries = {store.cluster.primary(e.name) for e in omap}
+    drv = SkyhookDriver(vol, n_workers=4)
+
+    # OR-group aggregate: pushdown vs the client-filter baseline
+    or_scan = (vol.scan("pa_events").or_(("run", "<", 10),
+                                         ("run", ">", 90))
+               .agg("sum", "e_pt"))
+    or_stats: dict = {}
+
+    def run_or():
+        store.fabric.reset()
+        r, stats = or_scan.execute(omap)
+        or_stats.update(stats, result=r)
+        assert store.fabric.xattr_ops == 0, store.fabric.xattr_ops
+
+    or_wall = _median_wall(run_or)
+    or_zm_reqs = store.fabric.xattr_ops  # measured (gated in snapshot)
+    base_walls: list[float] = []
+    r_base = None
+    for _ in range(5):
+        r_base, s_base = drv.execute_client_side(
+            drv.scan("pa_events").or_(("run", "<", 10), ("run", ">", 90))
+            .agg("sum", "e_pt"))
+        base_walls.append(s_base.wall_s)
+    mask = (run < 10) | (run > 90)
+    expect = float(table["e_pt"][mask].astype(np.float64).sum())
+    assert abs(or_stats["result"] - r_base) < 1e-6 * max(abs(expect), 1.0)
+    assert or_stats["ops"] <= n_osds
+    # the Or prunes every middle object — identically on both planes
+    _, s_cli = or_scan.prune("client").execute(omap)
+    assert s_cli["objects_pruned"] == or_stats["objects_pruned"] > 0
+
+    # IN-list table-out scan: exactly K framed responses
+    in_scan = (vol.scan("pa_events").isin("run", [3, 5, 7])
+               .project("e_pt"))
+    in_stats: dict = {}
+
+    def run_in():
+        store.fabric.reset()
+        _, stats = in_scan.execute(omap)
+        in_stats.update(stats)
+        assert store.fabric.xattr_ops == 0
+
+    in_wall = _median_wall(run_in)
+    in_zm_reqs = store.fabric.xattr_ops  # measured (gated in snapshot)
+    assert in_stats["rx_frames"] <= len(primaries) <= n_osds
+
+    return {
+        "n_rows": n_rows, "n_objects": omap.n_objects, "n_osds": n_osds,
+        "or_agg": {
+            "zone_map_requests": or_zm_reqs,
+            "fabric_ops": or_stats["ops"],
+            "objects_pruned": or_stats["objects_pruned"],
+            "client_rx_bytes": or_stats["client_rx"],
+            "wall_s": or_wall,
+            "client_filter_wall_s": sorted(base_walls)[2]},
+        "in_table_out": {
+            "zone_map_requests": in_zm_reqs,
+            "rx_frames": in_stats["rx_frames"],
+            "fabric_ops": in_stats["ops"],
+            "result_rows": in_stats["result_rows"],
+            "wall_s": in_wall},
+    }
+
+
 def bench_ingest(n_rows: int = N_ROWS) -> dict:
     """The symmetric write plane: N objects over K OSDs in K put
     requests (``put_batch``) vs the seed's one put per object, plus the
@@ -367,6 +459,24 @@ def check_against_snapshot(report: dict, committed: dict) -> list[str]:
                 f"prune_pushdown.table_out.rx_frames: "
                 f"{pp['table_out']['rx_frames']} > "
                 f"{old_pp['table_out']['rx_frames']}")
+    old_pa = committed.get("predicate_algebra")
+    if old_pa:
+        pa = report["predicate_algebra"]
+        for sec in ("or_agg", "in_table_out"):
+            if pa[sec]["zone_map_requests"] > 0:
+                problems.append(
+                    f"predicate_algebra.{sec} zone_map_requests > 0")
+            if pa[sec]["fabric_ops"] > old_pa[sec]["fabric_ops"]:
+                problems.append(
+                    f"predicate_algebra.{sec}.fabric_ops: "
+                    f"{pa[sec]['fabric_ops']} > "
+                    f"{old_pa[sec]['fabric_ops']}")
+        if pa["in_table_out"]["rx_frames"] > \
+                old_pa["in_table_out"]["rx_frames"]:
+            problems.append(
+                f"predicate_algebra.in_table_out.rx_frames: "
+                f"{pa['in_table_out']['rx_frames']} > "
+                f"{old_pa['in_table_out']['rx_frames']}")
     return problems
 
 
@@ -376,12 +486,15 @@ def main() -> None:
     codec_n = 100_000 if smoke else 1_000_000
     report = {"queries": bench_queries(n_rows),
               "prune_pushdown": bench_prune_pushdown(n_rows),
+              "predicate_algebra": bench_predicate_algebra(n_rows),
               "ingest": bench_ingest(n_rows),
               "codec": bench_codec(codec_n)}
     if smoke:
         print("bench_pushdown --smoke: O(K) invariants hold "
               f"(scan ops <= K, pushed-down prune zone-map reqs == 0, "
-              f"table-out rx frames == K, ingest ops == primaries <= K, "
+              f"table-out rx frames == K, OR/IN expression scans keep "
+              f"zone-map reqs == 0 + O(K) frames + Or-prune parity, "
+              f"ingest ops == primaries <= K, "
               f"warm xattr ops <= K) at {n_rows} rows")
     else:
         if OUT_PATH.exists():
@@ -403,6 +516,14 @@ def main() -> None:
     print(f"  prune_pushdown zone-map reqs 0 (agg, OSD-side prune), "
           f"table-out frames {pp['table_out']['rx_frames']} "
           f"(= K primaries) for {pp['n_objects']} objects")
+    pa = report["predicate_algebra"]
+    print(f"  predicate_algebra OR-agg pruned "
+          f"{pa['or_agg']['objects_pruned']}/{pa['n_objects']} objects "
+          f"OSD-side (0 zone-map reqs, both strategies agree), "
+          f"wall {pa['or_agg']['wall_s'] * 1e3:.1f}ms vs "
+          f"{pa['or_agg']['client_filter_wall_s'] * 1e3:.1f}ms "
+          f"client-filter; IN table-out "
+          f"{pa['in_table_out']['rx_frames']} frames")
     ing = report["ingest"]
     print(f"  ingest         ops {ing['batched']['fabric_ops']:>3} vs "
           f"{ing['per_object']['fabric_ops']:>3} "

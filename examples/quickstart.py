@@ -59,6 +59,33 @@ med, qstats = drv.execute(drv.scan("sensors")
 print(f"median(temp) ~= {med:.3f}  [approx sketch, "
       f"{qstats.client_rx_bytes} B moved, pushdown={qstats.pushdown}]")
 
+# -- 3b. expression filters + OSD-side row ranges --------------------------
+# filters are a full predicate ALGEBRA (core.expr): OR-groups, IN-lists,
+# ranges, negations, string prefixes — the whole tree ships serialized
+# inside the batched request, each OSD evaluates it with vectorized
+# masks AND prunes with interval arithmetic against its own current
+# zone maps (an Or prunes only when EVERY branch provably misses; Not
+# never prunes — conservative by construction, so prune="client" and
+# prune="pushdown" always agree)
+extremes, stats = (vol.scan("sensors")
+                   .or_(("temp", "<", -10), ("temp", ">", 40))
+                   .isin("station", [7, 11, 13])
+                   .project("temp", "station").execute())
+print(f"OR/IN scan: {stats['result_rows']} extreme rows from 3 stations "
+      f"in {stats['rx_frames']} frames, {stats['objects_pruned']} objects "
+      f"pruned ON their OSDs, {stats['xattr_ops']} zone-map round trips")
+
+# .rows() ships as a row_slice op carrying GLOBAL rows: each OSD
+# resolves its objects' sub-ranges from their own extent xattrs at
+# execute time, so one compiled plan keeps serving the right rows even
+# after the dataset is re-partitioned — and a row-ranged aggregate now
+# rides the same per-OSD combine plane as a whole-table scan
+windowed, stats = (vol.scan("sensors").rows(10_000, 60_000)
+                   .filter("temp", ">", 20).agg("mean", "temp")
+                   .execute())
+print(f"rows[10k:60k] mean(temp|>20) = {windowed:.2f}  "
+      f"[{stats['exec_class']}, prune={stats['prune']}]")
+
 # -- 4. streaming pipelined ingest ----------------------------------------
 # with a transport model (shared client NIC, per-OSD disks) vol.write
 # STREAMS: per-OSD sub-write groups flush as the encoder produces

@@ -52,7 +52,8 @@ def _leaf_dataset(tag: str, step: int, idx: int,
 
 def save(store: ObjectStore, state: Any, step: int, *, tag: str = "train",
          policy: PartitionPolicy = _DEFAULT_POLICY, workers: int = 8,
-         extra: dict | None = None) -> dict:
+         extra: dict | None = None,
+         window_bytes: int | None = None) -> dict:
     """Write a checkpoint; returns the manifest.
 
     The object mapping of every leaf is planned up front from shapes
@@ -61,10 +62,13 @@ def save(store: ObjectStore, state: Any, step: int, *, tag: str = "train",
     the whole checkpoint ships as ONE windowed streaming ``put_batch``
     (one request per primary OSD for the entire checkpoint), so leaf
     i+1 serializes while leaf i's windows are still on the NIC — true
-    cross-leaf encode/stream overlap, at the cost of the write ledger
-    holding the serialized checkpoint until the batch acks.  In-process
-    stores (no simulated I/O) keep the bounded-memory path: one
-    buffered batch per leaf, at most one leaf's blobs in memory.
+    cross-leaf encode/stream overlap.  The store's write ledger
+    releases each sub-write's blob once it AND its replica chain land,
+    so the client retains O(window) serialized bytes, never the whole
+    checkpoint (``store.last_put_ledger_peak_bytes`` records the
+    peak).  In-process stores (no simulated I/O) keep the buffered
+    path: one batch per leaf, at most one leaf's blobs in memory.
+    ``window_bytes`` overrides the store's default ingest window.
     ``workers`` is kept for API compatibility; parallelism is the
     store's, per OSD group.
     """
@@ -86,7 +90,8 @@ def save(store: ObjectStore, state: Any, step: int, *, tag: str = "train",
             "crc": zlib.crc32(raw)}
         return [raw[e.row_start:e.row_stop] for e in omap]
 
-    window = store.default_window_bytes()
+    window = store.default_window_bytes() if window_bytes is None \
+        else window_bytes
     if window:
         names = [e.name for _, _, omap in planned for e in omap]
         store.put_batch(

@@ -7,6 +7,8 @@ Layering (bottom up):
   format     — physical block format, codecs, layout transformation
   logical    — access-library-facing datasets (rows, columns, units)
   partition  — logical units -> objects (grouping/splitting/sizing)
+  expr       — predicate-expression algebra: one tree for evaluation,
+               zone-map interval pruning, and the wire form
   objclass   — storage-side op registry (select/project/filter/agg/...)
   scan       — the ONE query surface: Scan builder -> PhysicalPlan ->
                ScanEngine (prune pushdown, per-OSD combine/concat)
@@ -15,11 +17,14 @@ Layering (bottom up):
   pushdown_jax — the TPU data plane: compute-at-shard via shard_map
 """
 
+from repro.core.expr import (  # noqa: F401
+    And, Between, Cmp, In, Not, Or, StrPrefix)
 from repro.core.logical import Column, LogicalDataset, RowRange  # noqa: F401
 from repro.core.partition import (  # noqa: F401
     ObjectMap, PartitionPolicy, plan_partition)
 from repro.core.placement import ClusterMap  # noqa: F401
-from repro.core.store import ObjectStore, make_store  # noqa: F401
+from repro.core.store import (  # noqa: F401
+    ObjectStore, PartialWriteError, make_store)
 from repro.core.scan import PhysicalPlan, Scan, ScanEngine  # noqa: F401
 from repro.core.vol import GlobalVOL, LocalVOL  # noqa: F401
 from repro.core.skyhook import Query, SkyhookDriver  # noqa: F401

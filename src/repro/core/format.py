@@ -233,12 +233,25 @@ def _decode_column(buf, codec: str, dtype: str,
 
 
 def zone_map(table: Mapping[str, np.ndarray]) -> dict:
-    """Per-column min/max for numeric columns (object-pruning index)."""
+    """Per-column min/max (object-pruning index).  Numeric columns map
+    to float bounds; string columns to lexicographic bounds, which make
+    equality/range/prefix predicates (``expr.StrPrefix``) prunable the
+    same interval-arithmetic way."""
     zm = {}
     for k, a in table.items():
         a = np.asarray(a)
-        if a.size and np.issubdtype(a.dtype, np.number):
+        if not a.size:
+            continue
+        if np.issubdtype(a.dtype, np.number):
             zm[k] = [float(a.min()), float(a.max())]
+        elif a.dtype.kind in ("U", "S"):
+            # str dtypes have no min/max ufunc loop; sort is C-speed
+            srt = np.sort(a.ravel())
+            lo, hi = srt[0], srt[-1]
+            if a.dtype.kind == "S":
+                lo, hi = (lo.decode("utf-8", "replace"),
+                          hi.decode("utf-8", "replace"))
+            zm[k] = [str(lo), str(hi)]
     return zm
 
 

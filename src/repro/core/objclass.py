@@ -19,12 +19,8 @@ from typing import Any, Callable, Mapping
 
 import numpy as np
 
+from repro.core import expr as ex
 from repro.core import format as fmt
-
-_PRED = {
-    "<": np.less, "<=": np.less_equal, ">": np.greater,
-    ">=": np.greater_equal, "==": np.equal, "!=": np.not_equal,
-}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,10 +93,21 @@ def _project(table, cols: list[str]):
     return {c: table[c] for c in cols}
 
 
-def _filter(table, col: str, cmp: str, value):
-    mask = _PRED[cmp](table[col], value)
-    flat = mask if mask.ndim == 1 else mask.any(
-        axis=tuple(range(1, mask.ndim)))
+def _filter_expr(params: Mapping) -> ex.Expr:
+    """The expression of one ``filter`` op: a predicate tree in
+    ``expr`` (wire dict or Expr), or the legacy flat
+    ``(col, cmp, value)`` params — normalized to ONE representation so
+    every layer walks the same tree."""
+    e = params.get("expr")
+    if e is not None:
+        return ex.ensure(e)
+    return ex.Cmp(params["col"], params["cmp"], params["value"])
+
+
+def _filter(table, **params):
+    """Tree-walking filter: one vectorized numpy mask per leaf, mask
+    combinators per node (``expr.Expr.mask``)."""
+    flat = _filter_expr(params).mask(table)
     return {k: v[flat] for k, v in table.items()}
 
 
@@ -302,40 +309,93 @@ register("select_packed", OpImpl(
     lambda *a, **k: None, None, decomposable=True, table_out=False))
 
 
+# ---- OSD-resolved row ranges (pushed-down row-range pruning) ----
+
+
+def _row_slice_unresolved(table, rows):
+    raise ValueError(
+        "row_slice carries GLOBAL dataset rows; resolve it against the "
+        "object's extent first (resolve_row_slice — on the OSD, from "
+        "its own 'rows' xattr)")
+
+
+register("row_slice", OpImpl(_row_slice_unresolved, None,
+                             decomposable=True))
+
+
+def has_row_slice(ops: list[ObjOp]) -> bool:
+    return any(o.name == "row_slice" for o in ops)
+
+
+def resolve_row_slice(ops: list[ObjOp], extent: tuple[int, int],
+                      clamp: bool = False) -> list[ObjOp] | None:
+    """Rewrite every ``row_slice`` op (GLOBAL dataset rows) into this
+    object's local ``select``, given the object's CURRENT extent
+    ``(row_start, row_stop)`` — on the OSD from its own ``rows`` xattr,
+    so a compiled plan keeps serving correct rows after the dataset is
+    re-partitioned under it.  Returns None when a slice is provably
+    disjoint from the extent (the object serves no rows — a
+    prune-equivalent skip), unless ``clamp`` forces an empty
+    ``select(0, 0)`` instead (positional responses need a result)."""
+    out: list[ObjOp] = []
+    for o in ops:
+        if o.name != "row_slice":
+            out.append(o)
+            continue
+        g0, g1 = (int(v) for v in o.params["rows"])
+        s0, s1 = int(extent[0]), int(extent[1])
+        lo, hi = max(g0, s0), min(g1, s1)
+        if lo >= hi:
+            if not clamp:
+                return None
+            lo = hi = s0
+        out.append(op("select", rows=(lo - s0, hi - s0)))
+    return out
+
+
 # --------------------------------------------------------------------------
 # zone-map pruning (shared by the client planner and the OSDs)
 # --------------------------------------------------------------------------
 
 
-def filter_predicates(ops: list[ObjOp]) -> tuple:
-    """The (col, cmp, value) triples of every ``filter`` op in a
-    pipeline — the conjunction a prune decision may consult."""
-    return tuple((o.params["col"], o.params["cmp"], o.params["value"])
-                 for o in ops if o.name == "filter")
+def normalize_exprs(ops: list[ObjOp]) -> list[ObjOp]:
+    """Parse each ``filter`` op's serialized expression ONCE per
+    request (wire dict -> Expr), so per-object evaluation and column
+    analysis reuse the parsed tree instead of re-parsing it per
+    object."""
+    out: list[ObjOp] = []
+    for o in ops:
+        e = o.params.get("expr") if o.name == "filter" else None
+        if e is not None and not isinstance(e, ex.Expr):
+            o = ObjOp(o.name, {**o.params, "expr": ex.ensure(e)})
+        out.append(o)
+    return out
+
+
+def filter_predicates(ops: list[ObjOp]) -> ex.Expr | None:
+    """The conjunction of every ``filter`` op's expression tree — the
+    ONE predicate a prune decision consults (None: no filters)."""
+    return ex.conj_all(_filter_expr(o.params)
+                       for o in ops if o.name == "filter")
 
 
 def zone_map_prunes(zone_map: Mapping, predicates) -> bool:
-    """True when the zone map PROVES the filter conjunction matches no
-    row of the object: any single predicate whose [lo, hi] range is
-    disjoint from the matching set empties the whole conjunction.
+    """True when the zone map PROVES the filter expression matches no
+    row of the object — interval arithmetic over the predicate tree
+    (``expr.Expr.prunes``): a leaf prunes when its [lo, hi] interval is
+    disjoint from the matching set, ``And`` prunes if ANY child prunes,
+    ``Or`` only if ALL children prune, ``Not``/unknown leaves never
+    prune — conservative by construction.
 
     This is the one prune rule in the system: ``GlobalVOL.plan`` applies
     it to cached zone maps (client-side prune) and ``OSD.exec_cls_batch``
     applies it to the object's CURRENT xattrs (pushed-down prune), so
     the two strategies always agree on identical metadata.
+    ``predicates`` may be an :class:`~repro.core.expr.Expr`, its wire
+    dict, or the legacy iterable of (col, cmp, value) triples.
     """
-    for col, cmp, value in predicates:
-        rng = zone_map.get(col)
-        if not rng:
-            continue
-        lo, hi = rng
-        if ((cmp == "<" and lo >= value)
-                or (cmp == "<=" and lo > value)
-                or (cmp == ">" and hi <= value)
-                or (cmp == ">=" and hi < value)
-                or (cmp == "==" and (value < lo or value > hi))):
-            return True
-    return False
+    pred = ex.ensure_pred(predicates)
+    return pred is not None and pred.prunes(zone_map)
 
 
 # --------------------------------------------------------------------------
@@ -369,9 +429,9 @@ def merge_partials(ops: list[ObjOp], partials: list) -> Any:
 
 
 # ops whose column needs are fully described by a single "col" param
-_SINGLE_COL_OPS = frozenset({"filter", "agg", "median", "quantile_sketch"})
+_SINGLE_COL_OPS = frozenset({"agg", "median", "quantile_sketch"})
 # ops that touch no columns at all (pure row-range slicing)
-_COL_FREE_OPS = frozenset({"select"})
+_COL_FREE_OPS = frozenset({"select", "row_slice"})
 
 
 def required_columns(ops: list[ObjOp]) -> list[str] | None:
@@ -394,6 +454,9 @@ def required_columns(ops: list[ObjOp]) -> list[str] | None:
         if o.name == "project":
             needed.update(o.params["cols"])
             have_project = True
+            continue
+        if o.name == "filter":
+            needed.update(_filter_expr(o.params).columns())
             continue
         if o.name in _SINGLE_COL_OPS:
             needed.add(o.params["col"])

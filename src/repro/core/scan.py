@@ -4,12 +4,14 @@ The paper's promise is *composability of access operations* over an
 object-mapped dataset.  This module is where that promise lives:
 
   * :class:`Scan` — a fluent, immutable logical plan.  Filters compose
-    as a conjunction, aggregates compose side by side, a holistic
-    median can opt into its decomposable sketch approximation, and a
-    row range restricts the scan — all independent of how anything
-    executes::
+    as a predicate-expression tree (``.filter`` ANDs a comparison;
+    ``.or_``/``.isin``/``.filter_expr`` AND OR-groups, IN-lists,
+    ranges, string prefixes, negations — ``core.expr``), aggregates
+    compose side by side, a holistic median can opt into its
+    decomposable sketch approximation, and a row range restricts the
+    scan — all independent of how anything executes::
 
-        vol.scan("events").filter("run", "<", 50) \\
+        vol.scan("events").or_(("run", "<", 10), ("run", ">", 90)) \\
                           .filter("hits", ">=", 3) \\
                           .agg("mean", "e_pt").agg("count", "e_pt") \\
                           .execute()
@@ -40,15 +42,24 @@ Execution classes
 
 Prune strategies
 ----------------
-``pushdown`` (default): the filter predicates ride inside the batched
-objclass request and each OSD prunes against its own CURRENT zone-map
-xattrs — zero client zone-map requests, and no plan→execute TOCTOU
-window (the OSD can never see a stale zone map).  ``client``: the
-classic cached-zone-map prune with version-tag revalidation
+``pushdown`` (default): the serialized predicate tree rides inside the
+batched objclass request and each OSD prunes against its own CURRENT
+zone-map xattrs — zero client zone-map requests, and no plan→execute
+TOCTOU window (the OSD can never see a stale zone map).  ``client``:
+the classic cached-zone-map prune with version-tag revalidation
 (``GlobalVOL.plan``) — kept for workloads that want to skip whole OSD
 round trips when everything prunes.  ``none``: scan everything.  Both
-strategies share one prune rule (``objclass.zone_map_prunes``), so on
-identical metadata they prune identical sets.
+strategies share one prune rule (``objclass.zone_map_prunes`` over the
+same expression tree), so on identical metadata they prune identical
+sets — including ``Or``-of-disjoint-ranges sets no flat conjunction
+could prune.
+
+Row ranges ship OSD-side too: ``.rows()`` compiles to a ``row_slice``
+op carrying GLOBAL dataset rows; each OSD resolves its objects'
+sub-ranges from their own extent (``rows``) xattrs at execute time, so
+one compiled plan keeps serving correct rows after the dataset is
+re-partitioned under it — and a row-ranged aggregate now rides the
+per-OSD combine plane (shared pipeline) instead of per-object gathers.
 """
 
 from __future__ import annotations
@@ -58,6 +69,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
+from repro.core import expr as ex
 from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core.logical import RowRange, concat_tables
@@ -70,7 +82,6 @@ EXEC_PARTIAL_GATHER = "partial-gather"
 EXEC_CLIENT_GATHER = "client-gather"
 
 PRUNE_STRATEGIES = ("auto", "pushdown", "client", "none")
-_CMPS = ("<", "<=", ">", ">=", "==", "!=")
 _AGG_FNS = ("sum", "count", "min", "max", "mean")
 
 
@@ -96,7 +107,7 @@ class Scan:
     """
 
     dataset: str | None = None
-    filters: tuple = ()                     # ((col, cmp, value), ...)
+    predicate: Any = None                   # expr.Expr | None (filter tree)
     projection: tuple[str, ...] | None = None
     aggregates: tuple = ()                  # ((fn, col), ...)
     median_col: str | None = None
@@ -109,11 +120,33 @@ class Scan:
 
     # ------------------------------------------------------------ fluent
     def filter(self, col: str, cmp: str, value) -> "Scan":
-        """AND another predicate into the scan's filter conjunction."""
-        if cmp not in _CMPS:
-            raise ValueError(f"bad comparator {cmp!r}; known: {_CMPS}")
+        """AND a comparison into the scan's predicate tree."""
+        return self.filter_expr(ex.Cmp(col, cmp, value))
+
+    def filter_expr(self, e) -> "Scan":
+        """AND an arbitrary predicate expression into the scan: an
+        ``expr`` tree (``And``/``Or``/``Not``/``Cmp``/``In``/
+        ``Between``/``StrPrefix``), its serialized dict, or a
+        ``(col, cmp, value)`` triple."""
         return dataclasses.replace(
-            self, filters=self.filters + ((col, cmp, value),))
+            self, predicate=ex.conj(self.predicate, ex.ensure(e)))
+
+    def or_(self, *alternatives) -> "Scan":
+        """AND an OR-group of alternatives into the scan::
+
+            scan.or_(("run", "<", 10), ("run", ">", 90))
+
+        Each alternative is an expression or a (col, cmp, value)
+        triple.  The whole group prunes an object only when EVERY
+        alternative's interval proof empties it."""
+        if len(alternatives) < 2:
+            raise ValueError("or_ needs at least two alternatives")
+        return self.filter_expr(
+            ex.Or(tuple(ex.ensure(a) for a in alternatives)))
+
+    def isin(self, col: str, values) -> "Scan":
+        """AND an IN-list membership predicate into the scan."""
+        return self.filter_expr(ex.In(col, tuple(values)))
 
     def project(self, *cols: str) -> "Scan":
         if len(cols) == 1 and isinstance(cols[0], (list, tuple)):
@@ -166,11 +199,15 @@ class Scan:
 
     # ------------------------------------------------------------ compile
     def pipeline(self) -> list[oc.ObjOp]:
-        """The logical objclass pipeline this scan describes (the row
-        range, if any, becomes per-object ``select`` ops at compile)."""
+        """The logical objclass pipeline this scan describes: a row
+        range ships as a ``row_slice`` op (GLOBAL rows, resolved per
+        object ON the OSD from its extent xattr) and the whole filter
+        tree ships serialized inside ONE ``filter`` op's params."""
         ops: list[oc.ObjOp] = []
-        for col, cmp, value in self.filters:
-            ops.append(oc.op("filter", col=col, cmp=cmp, value=value))
+        if self.row_range is not None:
+            ops.append(oc.op("row_slice", rows=tuple(self.row_range)))
+        if self.predicate is not None:
+            ops.append(oc.op("filter", expr=self.predicate.to_json()))
         if self.projection:
             ops.append(oc.op("project", cols=list(self.projection)))
         if self.median_col is not None:
@@ -226,9 +263,10 @@ class PhysicalPlan:
     ops: tuple[oc.ObjOp, ...]        # the logical pipeline
     exec_ops: tuple[oc.ObjOp, ...]   # what actually ships (holistic tails
     #                                  ship their projected-gather form)
-    pipelines: tuple | None = None   # per-object pipelines (row ranges /
-    #                                  loader runs); None = shared exec_ops
-    predicates: tuple = ()           # pushed to OSDs when prune=="pushdown"
+    pipelines: tuple | None = None   # per-object pipelines (loader
+    #                                  runs); None = shared exec_ops
+    predicates: Any = None           # expr.Expr tree pushed to the OSDs
+    #                                  when prune == "pushdown"
     pruned: tuple[str, ...] = ()     # client-side pruned at compile time
     shards: tuple = ()               # ((osd_id, (name idx, ...)), ...)
     pushdown: bool = False           # pipeline ops run storage-side?
@@ -275,8 +313,7 @@ class ScanEngine:
 
     # ------------------------------------------------------------ compile
     def compile(self, omap, scan: Scan) -> PhysicalPlan:
-        rows = RowRange(*scan.row_range) if scan.row_range else None
-        return self._compile(omap, scan.pipeline(), rows=rows,
+        return self._compile(omap, scan.pipeline(),
                              allow_approx=scan.approx,
                              prune=scan.prune_strategy)
 
@@ -290,16 +327,25 @@ class ScanEngine:
 
     def compile_read(self, omap, rows: RowRange,
                      columns: Sequence[str] | None = None) -> PhysicalPlan:
-        ops = [oc.op("project", cols=list(columns))] \
-            if columns is not None else []
-        return self._compile(omap, ops, rows=rows, access="fetch")
+        ops = [oc.op("row_slice", rows=(rows.start, rows.stop))]
+        if columns is not None:
+            ops.append(oc.op("project", cols=list(columns)))
+        return self._compile(omap, ops, access="fetch")
 
-    def _compile(self, omap, ops, *, rows=None, allow_approx=False,
+    def _compile(self, omap, ops, *, allow_approx=False,
                  prune="auto", baseline=False, access=None) -> PhysicalPlan:
         if prune not in PRUNE_STRATEGIES:
             raise ValueError(f"bad prune strategy {prune!r}; "
                              f"known: {PRUNE_STRATEGIES}")
         ops = list(ops)
+        rows = None
+        for o in ops:
+            if o.name == "row_slice":
+                g0, g1 = o.params["rows"]
+                # clamp BOTH ends: a range wholly past the dataset is
+                # an empty scan (no candidates), not a compile error
+                stop = max(0, min(int(g1), omap.dataset.n_rows))
+                rows = RowRange(min(max(0, int(g0)), stop), stop)
         rewritten = False
         if ops and ops[-1].name == "median" and allow_approx \
                 and not baseline:
@@ -315,12 +361,32 @@ class ScanEngine:
         elif tail is not None and not tail.table_out:
             if tail.combine is None:
                 exec_cls = EXEC_HOLISTIC_GATHER
-            elif rows is None and oc.pipeline_mergeable(ops):
+            elif oc.pipeline_mergeable(ops):
                 exec_cls = EXEC_OSD_COMBINE
-            else:  # partial tail the OSD cannot fold (or per-object
-                exec_cls = EXEC_PARTIAL_GATHER  # select pipelines)
+            else:  # partial tail the OSD cannot fold
+                exec_cls = EXEC_PARTIAL_GATHER
         else:
             exec_cls = EXEC_SERVER_CONCAT
+
+        # request targeting: a row range restricts the scan to the
+        # objects its CURRENT omap says intersect; the row_slice op
+        # itself still rides to the OSDs, each of which re-resolves its
+        # objects' sub-ranges from their own extent xattrs at execute
+        # time (a re-partitioned object serves its current rows)
+        if rows is not None:
+            subs = omap.lookup(rows)
+            names = [e.name for e, _ in subs]
+        else:
+            names = [e.name for e in omap]
+
+        if baseline and rows is not None:
+            # the client baseline gathers whole candidate objects in row
+            # order, so the global slice becomes one plain select over
+            # their concatenated rows
+            base = subs[0][0].row_start if subs else 0
+            ops = [oc.op("select", rows=(rows.start - base,
+                                         rows.stop - base))
+                   if o.name == "row_slice" else o for o in ops]
 
         if exec_cls == EXEC_HOLISTIC_GATHER:
             # ship the projected-gather form; the holistic tail itself
@@ -330,30 +396,19 @@ class ScanEngine:
         else:
             exec_ops = tuple(ops)
 
-        pipelines = None
-        if rows is not None:
-            subs = omap.lookup(rows)
-            names = [e.name for e, _ in subs]
-            pipelines = [
-                [oc.op("select", rows=(loc.start, loc.stop))]
-                + list(exec_ops)
-                for _, loc in subs]
-        else:
-            names = [e.name for e in omap]
-
         # partial-gather's positional response cannot carry OSD prune
         # info.  "auto" falls back to the client-side planner; an
         # EXPLICIT "pushdown" request must not be silently served with
         # the weaker (TOCTOU-prone) strategy — refuse instead.
         if exec_cls == EXEC_PARTIAL_GATHER and prune == "pushdown" \
-                and predicates:
+                and predicates is not None:
             raise ValueError(
                 "prune='pushdown' cannot serve a partial-gather plan "
                 "(per-object positional responses carry no OSD prune "
-                "info); drop the row range or use prune='auto'/'client'")
+                "info); use prune='auto'/'client'")
 
         pruned: tuple[str, ...] = ()
-        if baseline or not predicates or prune == "none":
+        if baseline or predicates is None or prune == "none":
             prune_s = "none"
         elif prune == "client" or exec_cls == EXEC_PARTIAL_GATHER:
             # client-side prune, restricted to THIS scan's candidate
@@ -361,11 +416,8 @@ class ScanEngine:
             # maps for the rest of the dataset)
             plan0 = self.vol.plan(omap, ops, names=names)
             kept = {n for n, _ in plan0.sub_requests}
-            keep = [n in kept for n in names]
-            if pipelines is not None:
-                pipelines = [p for p, k in zip(pipelines, keep) if k]
-            pruned = tuple(n for n, k in zip(names, keep) if not k)
-            names = [n for n, k in zip(names, keep) if k]
+            pruned = tuple(n for n in names if n not in kept)
+            names = [n for n in names if n in kept]
             prune_s = "client"
         else:
             prune_s = "pushdown"
@@ -387,9 +439,8 @@ class ScanEngine:
             names=tuple(names),
             ops=tuple(ops),
             exec_ops=exec_ops,
-            pipelines=tuple(tuple(p) for p in pipelines)
-            if pipelines is not None else None,
-            predicates=predicates if prune_s == "pushdown" else (),
+            pipelines=None,
+            predicates=predicates if prune_s == "pushdown" else None,
             pruned=pruned,
             shards=tuple(sorted(
                 (osd, tuple(idxs)) for osd, idxs in by_osd.items())),
@@ -447,7 +498,7 @@ class ScanEngine:
             result = oc.combine_partials(ops, partials)
             result_rows = 1
         elif plan.exec_cls == EXEC_PARTIAL_GATHER:
-            raw = run("batch", names, pipes, (), shards)
+            raw = run("batch", names, pipes, None, shards)
             result = oc.combine_partials(ops, raw)
             result_rows = 1
         elif plan.exec_cls == EXEC_HOLISTIC_GATHER:
@@ -475,7 +526,7 @@ class ScanEngine:
                     [p for p in parts if p is not None])
                 result_rows = oc.table_n_rows(result)
         elif plan.exec_cls == EXEC_TABLE_GATHER:
-            result = run("batch", names, pipes, (), shards)
+            result = run("batch", names, pipes, None, shards)
         elif plan.exec_cls == EXEC_CLIENT_GATHER:
             result = self._client_eval(names, ops)
             result_rows = _result_rows(ops, result)
@@ -535,12 +586,12 @@ class ScanEngine:
         if mode == "combine":
             pruned: list[str] = []
             return store.exec_combine_iter(
-                names, pipelines, prune=tuple(predicates) or None,
+                names, pipelines, prune=predicates,
                 pruned_out=pruned), pruned
         if mode == "concat":
             pruned = []
             return store.exec_concat_iter(
-                names, pipelines, prune=tuple(predicates) or None,
+                names, pipelines, prune=predicates,
                 pruned_out=pruned), pruned
         return store.exec_batch(names, pipelines)
 

@@ -116,19 +116,19 @@ class SkyhookWorker:
         self.worker_id = worker_id
 
     def run(self, names: list[str], ops, mode: str = "batch",
-            predicates: tuple = ()) -> Any:
+            predicates=None) -> Any:
         """Forward the shard as batched per-OSD objclass requests (one
         round trip per OSD this shard touches, not one per object).
         ``mode`` follows the engine's runner protocol: "combine" folds
         partials server-side, "concat" returns one framed table per
-        OSD, "batch" returns per-object results.  ``predicates`` ride
-        down for OSD-side pruning."""
-        prune = tuple(predicates) or None
+        OSD, "batch" returns per-object results.  ``predicates`` is the
+        plan's filter-expression tree (or None), riding down serialized
+        for OSD-side pruning."""
         if mode == "combine":
-            got = self.store.exec_combine(names, ops, prune=prune)
+            got = self.store.exec_combine(names, ops, prune=predicates)
             return got if isinstance(got, tuple) else (got, [])
         if mode == "concat":
-            return self.store.exec_concat(names, ops, prune=prune)
+            return self.store.exec_concat(names, ops, prune=predicates)
         return self.store.exec_batch(names, ops)
 
 
@@ -202,7 +202,7 @@ class SkyhookDriver:
         )
 
     def _runner(self, mode: str, names: list[str], pipelines,
-                predicates: tuple, plan_shards: tuple = ()) -> Any:
+                predicates=None, plan_shards: tuple = ()) -> Any:
         """The engine's runner, scheduled over workers: the plan's
         per-OSD shards (each OSD's objects stay in ONE worker's batch,
         so the whole query still costs <= K batched requests for K OSDs

@@ -70,9 +70,11 @@ from typing import Any, Callable, Iterable, Iterator, Sequence
 
 import numpy as np
 
+from repro.core import expr as ex
 from repro.core.objclass import (
-    ObjOp, concat_encode, get_impl as _impl, merge_partials,
-    pipeline_mergeable, run_pipeline, table_n_rows, zone_map_prunes)
+    ObjOp, concat_encode, get_impl as _impl, has_row_slice,
+    merge_partials, normalize_exprs, pipeline_mergeable,
+    resolve_row_slice, run_pipeline, table_n_rows, zone_map_prunes)
 from repro.core.placement import ClusterMap, pg_delta
 
 # fixed cost modeled for one client<->OSD round trip (headers, framing,
@@ -134,6 +136,48 @@ class OSDDown(RuntimeError):
 
 class ObjectNotFound(KeyError):
     pass
+
+
+class PartialWriteError(ValueError):
+    """A windowed ``put_batch`` producer mismatch (ended early, or
+    yielded extra items) detected only AFTER earlier sub-writes already
+    persisted with stamped versions.  ``persisted`` lists those
+    ``(name, version)`` pairs — everything else in the batch is NOT
+    durable — so the caller can reconcile (delete, adopt, or retry the
+    remainder) instead of guessing what landed."""
+
+    def __init__(self, msg: str, persisted=()):
+        super().__init__(msg)
+        self.persisted: tuple[tuple[str, int], ...] = tuple(persisted)
+
+
+class _WriteLedger:
+    """Client-side retained-blob accounting for ONE ``put_batch`` call:
+    a materialized sub-write blob is pinned (in-batch failover may need
+    to resend it) until the write AND its replica chain land, then
+    released — so a windowed stream retains O(window) bytes, not
+    O(batch).  ``peak_bytes`` is the bound the regression tests gate."""
+
+    def __init__(self, n: int):
+        self.blobs: list[bytes | None] = [None] * n
+        self.sizes: list[int] = [0] * n
+        self.peak_bytes = 0
+        self._bytes = 0
+        self._lock = threading.Lock()
+
+    def pin(self, i: int, blob: bytes) -> None:
+        self.blobs[i] = blob
+        self.sizes[i] = len(blob)
+        with self._lock:
+            self._bytes += len(blob)
+            self.peak_bytes = max(self.peak_bytes, self._bytes)
+
+    def release(self, i: int) -> None:
+        if self.blobs[i] is None:
+            return
+        self.blobs[i] = None
+        with self._lock:
+            self._bytes -= self.sizes[i]
 
 
 class OSD:
@@ -209,15 +253,40 @@ class OSD:
         """Run an objclass pipeline against a local object (SkyhookDM
         extension / custom read method)."""
         blob = self.get(name)
+        ops = self._resolved(name, normalize_exprs(ops), clamp=True)
         return run_pipeline(blob, ops), len(blob)
+
+    def _extent(self, name: str) -> tuple[int, int] | None:
+        """The object's CURRENT row extent from its own ``rows`` xattr
+        (written by the VOL write path) — what a pushed-down
+        ``row_slice`` resolves against."""
+        with self.lock:
+            x = self.xattrs.get(name)
+        r = (x or {}).get("rows")
+        return (int(r[0]), int(r[1])) if r else None
+
+    def _resolved(self, name: str, ops: list[ObjOp],
+                  clamp: bool = False) -> list[ObjOp] | None:
+        """Resolve any ``row_slice`` op (GLOBAL dataset rows) against
+        the object's CURRENT extent xattr.  None (only when ``clamp``
+        is False) means the slice is provably disjoint from the extent:
+        the object serves no rows — a prune-equivalent skip."""
+        if not has_row_slice(ops):
+            return ops
+        ext = self._extent(name)
+        if ext is None:
+            raise ValueError(
+                f"{name}: row_slice needs the object's extent ('rows' "
+                "xattr, written by the VOL write path) to resolve")
+        return resolve_row_slice(ops, ext, clamp=clamp)
 
     def _prunes_locally(self, name: str, prune) -> bool:
         """Pushed-down prune: does this object's CURRENT local zone map
-        prove the filter conjunction matches none of its rows?  Runs
+        prove the filter expression matches none of its rows?  Runs
         against the OSD's own xattrs, so the decision can never be
         stale — there is no client cache (and no plan→execute TOCTOU
         window) in the loop."""
-        if not prune:
+        if prune is None:
             return False
         with self.lock:
             x = self.xattrs.get(name)
@@ -234,13 +303,18 @@ class OSD:
         buys.  Per-item failures come back as ``ObjectNotFound`` values
         (not raises) so the rest of the batch still completes.
 
-        ``prune`` is an optional tuple of (col, cmp, value) filter
-        predicates pushed down with the request: before scanning an
-        object the OSD consults its local zone-map xattr and skips
-        objects the conjunction provably cannot match — the pruned
-        names ride back in the response (they are a semantic skip, not
-        an absence, so the client must not fail them over).  Only the
-        combine/concat forms accept it (plain responses are positional).
+        ``prune`` is an optional filter-expression tree (the serialized
+        wire dict of ``expr.Expr``, or the legacy tuple of
+        (col, cmp, value) triples) pushed down with the request: before
+        scanning an object the OSD consults its local zone-map xattr
+        and skips objects the expression provably cannot match — the
+        pruned names ride back in the response (they are a semantic
+        skip, not an absence, so the client must not fail them over).
+        Only the combine/concat forms accept it (plain responses are
+        positional).  A ``row_slice`` op in a pipeline is resolved here
+        against each object's own extent xattr; an object whose extent
+        is disjoint from the slice is skipped the same prune-equivalent
+        way (combine/concat) or serves zero rows (plain batch).
 
         With ``combine=True`` the items must share one decomposable
         pipeline whose tail has an associative ``merge``: the OSD folds
@@ -261,8 +335,16 @@ class OSD:
             raise ValueError("combine and concat are exclusive")
         if self.latency_s:
             time.sleep(self.latency_s)
+        prune = ex.ensure_pred(prune)  # parse the wire form ONCE
+        # ...and likewise each pipeline's serialized filter trees (a
+        # shared pipeline object is normalized once for the whole batch)
+        norm: dict[int, list[ObjOp]] = {}
+        items = [(name,
+                  norm[id(ops)] if id(ops) in norm
+                  else norm.setdefault(id(ops), normalize_exprs(ops)))
+                 for name, ops in items]
         if not combine and not concat:
-            if prune:
+            if prune is not None:
                 raise ValueError("prune needs combine or concat "
                                  "(plain batch responses are positional)")
             out: list[Any] = []
@@ -272,7 +354,9 @@ class OSD:
                 if blob is None:
                     out.append(ObjectNotFound(name))
                 else:
-                    out.append((run_pipeline(blob, ops), len(blob)))
+                    out.append((run_pipeline(
+                        blob, self._resolved(name, ops, clamp=True)),
+                        len(blob)))
             return out
 
         pruned: list[str] = []
@@ -288,10 +372,14 @@ class OSD:
                     continue
                 with self.lock:
                     blob = self.data.get(name)
-                if blob is None:
-                    missing.append(name)
+                if blob is None:  # absent HERE: registers as missing
+                    missing.append(name)  # (replica failover), even if
+                    continue  # a row slice might also have skipped it
+                resolved = self._resolved(name, ops)
+                if resolved is None:  # row slice disjoint: no rows here
+                    pruned.append(name)
                     continue
-                out = run_pipeline(blob, ops, encode=False)
+                out = run_pipeline(blob, resolved, encode=False)
                 if not isinstance(out, dict) or (
                         ops and not _impl(ops[-1].name).table_out):
                     raise ValueError("concat needs table-out pipelines")
@@ -311,10 +399,14 @@ class OSD:
                 continue
             with self.lock:
                 blob = self.data.get(name)
-            if blob is None:
+            if blob is None:  # absent HERE: missing (replica failover)
                 missing.append(name)
                 continue
-            partials.append(run_pipeline(blob, ops))
+            resolved = self._resolved(name, ops)
+            if resolved is None:  # row slice disjoint: no rows here
+                pruned.append(name)
+                continue
+            partials.append(run_pipeline(blob, resolved))
             scanned += len(blob)
         merged = merge_partials(ops, partials) if partials else None
         return (merged, len(partials), scanned, tuple(missing),
@@ -385,6 +477,11 @@ class ObjectStore:
         # starve exec_batch dispatch on the main pool
         self._hedge_pool = ThreadPoolExecutor(
             max_workers=4, thread_name_prefix="store-hedge")
+        # observability for the write ledger: the peak retained-blob
+        # bytes of the most recent put_batch on THIS store (windowed
+        # streams stay O(window); per-call, so concurrent writers
+        # should read it between their own calls)
+        self.last_put_ledger_peak_bytes = 0
 
     def close(self) -> None:
         self._pool.shutdown(wait=False)
@@ -616,12 +713,18 @@ class ObjectStore:
         also be a ``(blob, xattr)`` pair, letting one generator produce
         payload and metadata together (``xattrs`` entries are the
         fallback).  Sub-writes whose stream died mid-flight fail over
-        through the buffered retry rounds — their blobs are already
-        materialized.  Length validation is necessarily lazy here: a
-        producer that ends early (or yields extra items) raises
-        ValueError only once the mismatch is SEEN — after the already-
-        produced sub-writes persisted with stamped versions — unlike
-        the buffered path, which validates before writing anything.
+        through the buffered retry rounds — their blobs are still
+        pinned in the write ledger.  The ledger releases each blob the
+        moment its write AND replica chain land (no retry can resend
+        it), so a long stream retains O(window) bytes, not O(batch) —
+        ``last_put_ledger_peak_bytes`` records the peak.  Length
+        validation is necessarily lazy here: a producer that ends early
+        (or yields extra items) raises :class:`PartialWriteError` only
+        once the mismatch is SEEN — after the already-produced
+        sub-writes persisted with stamped versions; the exception's
+        ``persisted`` lists those (name, version) pairs so the caller
+        can reconcile — unlike the buffered path, which validates
+        before writing anything.
 
         Every object's xattr is stamped with a fresh monotonic
         ``version`` tag; the per-object versions are returned (in input
@@ -637,13 +740,18 @@ class ObjectStore:
                                  f"{len(xattrs)} xattrs")
         else:
             xattrs = [None] * len(names)
-        if windowed:  # filled as the producer yields each item
-            blobs_l: list[bytes | None] = [None] * len(names)
-        else:
-            blobs_l = [b for b in blobs]
-            if len(blobs_l) != len(names):
+        # the write ledger pins each materialized blob (in-batch
+        # failover may resend it) until its write AND replica chain
+        # land, then releases it — a windowed stream retains O(window)
+        ledger = _WriteLedger(len(names))
+        blobs_l = ledger.blobs
+        if not windowed:
+            got = [b for b in blobs]
+            if len(got) != len(names):
                 raise ValueError(f"{len(names)} names / "
-                                 f"{len(blobs_l)} blobs")
+                                 f"{len(got)} blobs")
+            for i, b in enumerate(got):
+                ledger.pin(i, bytes(b))
         if not names:
             return []
         versions = [self._next_version() for _ in names]
@@ -670,6 +778,11 @@ class ObjectStore:
                                        self._acting(names[i]), entry)
             except OSDDown:  # peering/recovery restores it later
                 return 0, 0
+            finally:
+                # the write and its whole replica chain have landed:
+                # no retry can ever resend this blob — release it (the
+                # windowed stream's O(window) memory bound)
+                ledger.release(i)
 
         def submit_replicas(i: int, entry: str) -> None:
             rep_out.append(self._pool.submit(replicate, i, entry)
@@ -709,10 +822,16 @@ class ObjectStore:
             return [(i, None) for i in idxs]
 
         if windowed:
-            pending = self._stream_put(
-                names, blobs, xattrs, versions, blobs_l, stamped,
-                tried, last_err, submit_replicas,
-                window_bytes=window_bytes, window_objects=window_objects)
+            try:
+                pending = self._stream_put(
+                    names, blobs, xattrs, versions, ledger, stamped,
+                    tried, last_err, submit_replicas,
+                    window_bytes=window_bytes,
+                    window_objects=window_objects)
+            except PartialWriteError:
+                drain_replicas()  # landed sub-writes finish replicating
+                self.last_put_ledger_peak_bytes = ledger.peak_bytes
+                raise
         else:
             pending = list(range(len(names)))
 
@@ -728,12 +847,13 @@ class ObjectStore:
                         last_err[i] = r
                         pending.append(i)
                         continue
-                    self.fabric.client_tx += len(blobs_l[i])
+                    self.fabric.client_tx += ledger.sizes[i]
             drain_replicas()
         drain_replicas()
+        self.last_put_ledger_peak_bytes = ledger.peak_bytes
         return versions
 
-    def _stream_put(self, names, blob_iter, xattrs, versions, blobs_l,
+    def _stream_put(self, names, blob_iter, xattrs, versions, ledger,
                     stamped, tried, last_err, submit_replicas, *,
                     window_bytes, window_objects) -> list[int]:
         """The windowed half of ``put_batch``: consume the (possibly
@@ -742,7 +862,12 @@ class ObjectStore:
         fills, and return the item indices that need buffered failover
         (their entry OSD died mid-stream).  Feeder queues are bounded,
         so a stalled stream back-pressures the encoder instead of
-        buffering the whole batch."""
+        buffering the whole batch; the write ledger releases each blob
+        once it fully lands, so retained bytes stay O(window).  A
+        producer length mismatch finalizes the started streams first,
+        then raises :class:`PartialWriteError` naming every sub-write
+        that already persisted (with its stamped version)."""
+        blobs_l = ledger.blobs
         streams: dict[str, tuple[_queue.Queue, Any]] = {}
 
         def stream_group(osd_id: str, q: _queue.Queue) -> list:
@@ -795,6 +920,7 @@ class ObjectStore:
             win_nbytes = win_nobjs = 0
 
         overlap = 0.0
+        mismatch: str | None = None
         it = iter(blob_iter)
         try:
             for i in range(len(names)):
@@ -802,28 +928,32 @@ class ObjectStore:
                 try:
                     item = next(it)
                 except StopIteration:
-                    raise ValueError(f"{len(names)} names but the blob "
-                                     f"producer ended at {i}") from None
+                    # the unflushed window is dropped (never streamed);
+                    # flushed sub-writes persist and are reported below
+                    mismatch = (f"{len(names)} names but the blob "
+                                f"producer ended at {i}")
+                    break
                 if streams:  # encode time hidden behind an active stream
                     overlap += time.perf_counter() - t0
                 blob, x = item if isinstance(item, tuple) \
                     else (item, xattrs[i])
-                blobs_l[i] = bytes(blob)
                 stamped[i] = {**(x or {}), "version": versions[i]}
+                ledger.pin(i, bytes(blob))
                 win.setdefault(self._acting(names[i])[0], []).append(i)
                 win_nbytes += len(blob)
                 win_nobjs += 1
                 if (window_bytes and win_nbytes >= window_bytes) or \
                         (window_objects and win_nobjs >= window_objects):
                     flush()
-            flush()
-            try:  # mirror the buffered path's length validation: an
-                next(it)  # overlong producer is a caller bug, not data
-            except StopIteration:  # to drop silently
-                pass
             else:
-                raise ValueError(f"blob producer yielded more than "
-                                 f"{len(names)} items")
+                flush()
+                try:  # mirror the buffered path's length validation: an
+                    next(it)  # overlong producer is a caller bug, not
+                except StopIteration:  # data to drop silently
+                    pass
+                else:
+                    mismatch = (f"blob producer yielded more than "
+                                f"{len(names)} items")
         finally:
             # sentinel every started stream even when the producer blew
             # up mid-encode — a stream left unterminated would park a
@@ -832,6 +962,7 @@ class ObjectStore:
                 q.put(None)
 
         failed: list[int] = []
+        landed: list[int] = []
         for osd_id, (q, fut) in streams.items():
             for i, r in fut.result():
                 tried[i].add(osd_id)
@@ -839,8 +970,16 @@ class ObjectStore:
                     last_err[i] = r
                     failed.append(i)
                 else:
-                    self.fabric.client_tx += len(blobs_l[i])
+                    self.fabric.client_tx += ledger.sizes[i]
+                    landed.append(i)
         self.fabric.overlap_s += overlap
+        if mismatch is not None:
+            landed.sort()
+            raise PartialWriteError(
+                f"{mismatch}; {len(landed)} sub-writes of the batch "
+                "already persisted with stamped versions (listed in "
+                ".persisted) — nothing else in the batch is durable",
+                persisted=((names[i], versions[i]) for i in landed))
         return failed
 
     def get(self, name: str) -> bytes:
@@ -1003,12 +1142,14 @@ class ObjectStore:
         object; finish with ``objclass.combine_partials`` (merged
         partials are shape-identical to raw ones).
 
-        ``prune`` pushes a tuple of (col, cmp, value) filter predicates
-        down with each request: the OSD skips objects whose CURRENT
-        local zone map proves the conjunction matches nothing, and the
-        call returns ``(partials, pruned_names)`` instead of the bare
-        partial list.  Pruned objects are a semantic skip — they are
-        NOT retried on replicas.
+        ``prune`` pushes a filter-expression tree (an ``expr.Expr`` —
+        OR-groups, IN-lists, ranges, prefixes — its wire dict, or the
+        legacy tuple of (col, cmp, value) triples) down with each
+        request, serialized by ``_prune_wire``: the OSD skips objects
+        whose CURRENT local zone map proves the expression matches
+        nothing, and the call returns ``(partials, pruned_names)``
+        instead of the bare partial list.  Pruned objects are a
+        semantic skip — they are NOT retried on replicas.
         """
         gen, pruned_out = self._exec_combine_impl(names, ops, prune)
         partials = list(gen)
@@ -1039,13 +1180,14 @@ class ObjectStore:
         if not pipeline_mergeable(ops):
             raise ValueError("exec_combine needs a decomposable pipeline "
                              "whose tail has an associative merge")
+        wire = _prune_wire(prune)
 
         def run_group(osd_id: str, idxs: list[int]) -> Any:
             try:
                 osd = self._osd(osd_id)
                 return osd.exec_cls_batch(
                     [(names[i], ops) for i in idxs], combine=True,
-                    prune=prune)
+                    prune=wire)
             except OSDDown as e:
                 return e
 
@@ -1131,12 +1273,14 @@ class ObjectStore:
         else:
             pipelines = [list(ops)] * len(names)
 
+        wire = _prune_wire(prune)
+
         def run_group(osd_id: str, idxs: list[int]) -> Any:
             try:
                 osd = self._osd(osd_id)
                 return osd.exec_cls_batch(
                     [(names[i], pipelines[i]) for i in idxs],
-                    concat=True, prune=prune)
+                    concat=True, prune=wire)
             except OSDDown as e:
                 return e
 
@@ -1281,6 +1425,14 @@ class ObjectStore:
                           for o in self.cluster.osds},
             "n_objects": len(self.list_objects()),
         }
+
+
+def _prune_wire(prune):
+    """Client half of the predicate transport: normalize an Expr (or
+    legacy triples) to the serialized tree dict that rides inside the
+    batched request — the OSD parses it back with ``expr.from_json``."""
+    pred = ex.ensure_pred(prune)
+    return None if pred is None else pred.to_json()
 
 
 def _result_nbytes(result: Any) -> int:

@@ -22,11 +22,16 @@ table response per OSD, decoded frame-by-frame as they land), or
 scale with the number of OSDs, not the number of objects, on every
 path, and wall clock scales with the slowest OSD, not the sum.
 
-Pruning is pushed down by default: the filter predicates ride inside
-the batched objclass request and each OSD skips objects its own
-CURRENT zone-map xattrs rule out — zero client zone-map requests and
-no plan→execute TOCTOU window.  The classic client-side prune
-(``plan``) remains for the ``prune="client"`` strategy: it consults an
+Pruning is pushed down by default: the filter expression TREE
+(``core.expr`` — OR-groups, IN-lists, ranges, prefixes, negations)
+rides serialized inside the batched objclass request and each OSD
+skips objects its own CURRENT zone-map xattrs provably rule out (one
+interval-arithmetic rule, shared with the client planner) — zero
+client zone-map requests and no plan→execute TOCTOU window.  Row
+ranges ship the same way: a ``row_slice`` op carries GLOBAL rows that
+each OSD resolves against its objects' own extent xattrs.  The classic
+client-side prune (``plan``) remains for the ``prune="client"``
+strategy: it consults an
 epoch-keyed zone-map cache (invalidated wholesale on cluster-epoch
 bumps, per object on local rewrites, warmed in one metadata request
 per OSD) and revalidates every prune-positive object against the
@@ -290,7 +295,10 @@ class GlobalVOL:
         """CLIENT-SIDE prune planning (the ``prune="client"`` strategy;
         the default pushed-down prune needs no client plan at all —
         see ``core.scan``): prune objects whose cached zone maps cannot
-        match the filter conjunction.  ``names`` restricts planning to
+        match the filter expression tree (the SAME
+        ``objclass.zone_map_prunes`` interval rule the OSDs apply, so
+        the two strategies agree bit-exactly on identical metadata).
+        ``names`` restricts planning to
         a candidate subset (e.g. a row-ranged scan's objects) so the
         warm/revalidation never touches the rest of the dataset.
 

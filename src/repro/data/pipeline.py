@@ -158,9 +158,13 @@ class ObjectDataLoader:
         if self.packed:
             return [[oc.op("select_packed", rows=(lo, hi), col="tokens")]
                     for _, _, lo, hi in runs]
-        return [[oc.op("select", rows=(lo, hi)),
+        # row_slice carries GLOBAL dataset rows; each OSD resolves its
+        # object's sub-range from its own extent xattr at execute time
+        # (same pushed-down row-range plane as Scan.rows)
+        return [[oc.op("row_slice", rows=(e.row_start + lo,
+                                          e.row_start + hi)),
                  oc.op("project", cols=["tokens"])]
-                for _, _, lo, hi in runs]
+                for e, _, lo, hi in runs]
 
     def _assemble(self, runs: list[tuple],
                   results: list) -> dict[str, np.ndarray]:
@@ -188,8 +192,7 @@ class ObjectDataLoader:
         decoded) — the train input path pays fabric ops per OSD, not per
         run."""
         runs = self._runs_for(rows)
-        results = self._exec_runs([e.name for e, _, _, _ in runs],
-                                  self._run_pipelines(runs))
+        results = self._exec_runs(runs, self._run_pipelines(runs))
         return self._assemble(runs, results)
 
     def _fetch_window(self, start_step: int):
@@ -230,17 +233,21 @@ class ObjectDataLoader:
                     runs, results[lo:lo + len(runs)])
                 emitted += 1
 
-    def _exec_runs(self, names: list[str], pipelines: list[list]):
+    def _exec_runs(self, runs: list[tuple], pipelines: list[list]):
         """Per-run results (decoded tables, or packed word partials),
-        aligned with ``names``."""
+        aligned with ``runs``."""
+        names = [e.name for e, _, _, _ in runs]
         if self.hedge_timeout_s is not None:
             # hedged read of the raw objects, then local pipelines: used
             # when an OSD is straggling (exec would block on the slow
-            # primary).
+            # primary).  The loader resolves row_slice itself — it
+            # knows each run's extent from the omap it planned with.
             return [oc.run_pipeline(
-                self.vol.store.get_hedged(n, self.hedge_timeout_s), p,
+                self.vol.store.get_hedged(e.name, self.hedge_timeout_s),
+                oc.resolve_row_slice(p, (e.row_start, e.row_stop),
+                                     clamp=True),
                 encode=False)
-                for n, p in zip(names, pipelines)]
+                for (e, _, _, _), p in zip(runs, pipelines)]
         return self.vol.engine.fetch_objects(names, pipelines,
                                              packed=self.packed)
 

@@ -8,6 +8,7 @@ import pytest
 
 from repro.core import (Column, GlobalVOL, LogicalDataset, PartitionPolicy,
                         Query, RowRange, Scan, SkyhookDriver, make_store)
+from repro.core import expr as ex
 from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core import scan as sc
@@ -83,15 +84,21 @@ def test_builder_rows_range_scan():
 
 
 def test_builder_rows_compose_with_tails():
-    """A row range composes with every tail class: per-object select
-    pipelines carry the EXECUTED form of the tail (a holistic tail
-    ships its projected-gather rewrite, not the median op itself)."""
+    """A row range composes with every tail class.  The range ships as
+    a shared ``row_slice`` op (resolved per object ON the OSD from its
+    extent xattr), so a row-ranged aggregate rides the per-OSD combine
+    plane — with pushed-down pruning — instead of per-object gathers."""
     store, vol, omap, table = make_world()
     s = vol.scan("t").rows(100, 2500).filter("y", "<", 500).agg("sum", "x")
-    assert s.explain().exec_cls == sc.EXEC_PARTIAL_GATHER
-    r, _ = s.execute()
+    plan = s.explain()
+    assert plan.exec_cls == sc.EXEC_OSD_COMBINE
+    assert plan.prune == "pushdown"
+    assert plan.pipelines is None          # ONE shared pipeline
+    assert plan.ops[0].name == "row_slice"
+    r, stats = s.execute()
     mask = table["y"][100:2500] < 500
     assert r == pytest.approx(table["x"][100:2500][mask].sum(), rel=1e-12)
+    assert stats["xattr_ops"] == 0         # no client zone-map traffic
     m, _ = vol.scan("t").rows(0, 1000).median("x").execute()
     assert m == pytest.approx(float(np.median(table["x"][:1000])),
                               abs=1e-12)
@@ -100,15 +107,12 @@ def test_builder_rows_compose_with_tails():
     assert ma["count(x)"] == 1000.0
     assert ma["sum(x)"] == pytest.approx(table["x"][:1000].sum(),
                                          rel=1e-12)
-    # an EXPLICIT pushdown request a partial-gather plan cannot honor
-    # must refuse, not silently downgrade to the TOCTOU-prone strategy
-    with pytest.raises(ValueError):
-        s.prune("pushdown").explain()
-    # the auto fallback's client prune stays within the row range: a
+    # the client strategy still restricts itself to the row range: a
     # scan of the first object's rows never plans the rest
     first = omap.extents[0]
     plan = (vol.scan("t").rows(first.row_start, first.row_stop)
-            .filter("y", "<", 500).agg("sum", "x").explain())
+            .filter("y", "<", 500).agg("sum", "x").prune("client")
+            .explain())
     assert plan.prune == "client"
     assert set(plan.names) | set(plan.pruned) == {first.name}
 
@@ -146,7 +150,7 @@ def test_explain_exposes_physical_plan():
     plan = vol.scan("t").filter("y", "<", 500).agg("sum", "x").explain()
     assert plan.exec_cls == sc.EXEC_OSD_COMBINE
     assert plan.prune == "pushdown"
-    assert plan.predicates == (("y", "<", 500),)
+    assert plan.predicates == ex.Cmp("y", "<", 500)
     assert len(plan.names) == omap.n_objects
     assert {o for o, _ in plan.shards} <= set(store.cluster.up_osds)
     assert sum(len(i) for _, i in plan.shards) == omap.n_objects
@@ -158,9 +162,13 @@ def test_query_shim_compiles_to_scan():
               aggregate=("mean", "x"))
     ops = q.pipeline()
     assert [o.name for o in ops] == ["filter", "project", "agg"]
-    # N filters: explicit field, or a sequence in the legacy slot
+    # N filters: explicit field, or a sequence in the legacy slot —
+    # both compile to ONE filter op carrying the conjunction tree
     q2 = Query("t", filters=(("y", ">", 1), ("y", "<", 9)))
-    assert [o.name for o in q2.pipeline()] == ["filter", "filter"]
+    (f2,) = q2.pipeline()
+    assert f2.name == "filter"
+    assert ex.from_json(f2.params["expr"]) == ex.And(
+        (ex.Cmp("y", ">", 1), ex.Cmp("y", "<", 9)))
     q3 = Query("t", filter=(("y", ">", 1), ("y", "<", 9)))
     assert q3.pipeline() == q2.pipeline()
     # N aggregates compile to one mergeable multi_agg tail

@@ -13,7 +13,7 @@ from repro.core import (Column, GlobalVOL, LogicalDataset, PartitionPolicy,
                         RowRange, make_store)
 from repro.core import format as fmt
 from repro.core import objclass as oc
-from repro.core.store import OSDDown
+from repro.core.store import OSDDown, PartialWriteError
 
 
 def make_world(n=4000, n_osds=5, replicas=3, seed=0, **store_kw):
@@ -571,3 +571,122 @@ def test_hedged_read_during_windowed_put_batch():
 def test_exec_many_is_retired():
     store, _, _, _ = make_world()
     assert not hasattr(store, "exec_many")
+
+
+# ------------------------------------------------- bounded write ledger
+def test_windowed_put_ledger_peak_stays_window_sized():
+    """The bounded streaming write ledger: each sub-write's blob is
+    released the moment it AND its replica chain land, so a long
+    windowed stream retains O(window) bytes — not the whole batch the
+    buffered path pins — with accounting and stored bytes unchanged."""
+    n, blob_kib = 256, 32
+    names = [f"led/{i:04d}" for i in range(n)]
+    blobs = [(b"%04d" % i) * (blob_kib << 8) for i in range(n)]
+    total = sum(len(b) for b in blobs)
+    window = 64 << 10
+
+    streamed = make_store(2, replicas=2, client_bw=500 << 20)
+    streamed.put_batch(names, iter(blobs), window_bytes=window)
+    peak = streamed.last_put_ledger_peak_bytes
+    # bound: the current window + the bounded feeder queues (8 groups
+    # per OSD stream) + in-flight writes/replicas — generous slack, but
+    # far below the whole batch
+    assert 0 < peak <= 24 * window, (peak, total)
+    assert peak < total // 4
+
+    buffered = make_store(2, replicas=2, client_bw=500 << 20)
+    buffered.put_batch(names, blobs)
+    assert buffered.last_put_ledger_peak_bytes == total  # pins it all
+
+    s1, s2 = streamed.fabric.snapshot(), buffered.fabric.snapshot()
+    for key in ("client_tx", "replica_bytes", "entry_egress_bytes",
+                "ops"):
+        assert s1[key] == s2[key], key
+    for nm, b in zip(names, blobs):
+        assert streamed.get(nm) == buffered.get(nm) == b
+
+
+def test_ckpt_streaming_save_ledger_bounded():
+    """ckpt.save's whole-checkpoint stream keeps O(window) client
+    memory: the serialized state is released window by window as the
+    replica chains land, and the checkpoint still restores bit-exact."""
+    from repro.checkpoint import ckpt
+    from repro.core import PartitionPolicy
+    store = make_store(3, replicas=2, client_bw=500 << 20)
+    state = {"w": np.arange(4 << 20, dtype=np.float32)}  # 16 MiB
+    window = 128 << 10
+    ckpt.save(store, state, 0,
+              policy=PartitionPolicy(target_object_bytes=64 << 10,
+                                     max_object_bytes=128 << 10),
+              window_bytes=window)
+    peak = store.last_put_ledger_peak_bytes
+    # the retained bound is O(streams x queue depth x window) — 3 OSD
+    # streams x 8 queued groups + in-flight — NEVER O(checkpoint)
+    assert 0 < peak <= 32 * window, peak
+    assert peak < state["w"].nbytes // 4
+    back, _ = ckpt.restore(store, {"w": np.zeros(4 << 20, np.float32)},
+                           step=0)
+    assert np.array_equal(back["w"], state["w"])
+
+
+def test_windowed_ledger_keeps_blobs_for_failover():
+    """Releasing must never outrun failover: blobs whose stream died
+    before they landed are still pinned and retried on a replica —
+    every byte lands despite the mid-stream entry death."""
+    store, vol, omap, table = make_world(n_osds=4, replicas=3)
+    names = [f"fo/{i:03d}" for i in range(32)]
+    blobs = [bytes([i % 251]) * (8 << 10) for i in range(32)]
+    victim = store.cluster.primary(names[0])
+
+    def produce():
+        for i, b in enumerate(blobs):
+            if i == 12:  # entry OSD dies mid-stream
+                store.fail_osd(victim)
+            yield b
+
+    versions = store.put_batch(names, produce(), window_objects=2)
+    assert len(versions) == len(names)
+    for nm, b in zip(names, blobs):
+        assert store.get(nm) == b  # landed (failover used pinned blobs)
+
+
+# ------------------------------------------- partial-persist reporting
+def test_short_producer_reports_persisted_names_and_versions():
+    """A producer that ends early raises only after earlier windows
+    persisted: the exception must NAME those sub-writes and their
+    stamped versions so the caller can reconcile instead of guessing."""
+    store = make_store(3, replicas=2)
+    names = [f"pw/{i}" for i in range(10)]
+    blobs = [(b"%d" % i) * 100 for i in range(10)]
+
+    def short():
+        yield from blobs[:5]
+
+    with pytest.raises(PartialWriteError) as ei:
+        store.put_batch(names, short(), window_objects=2)
+    err = ei.value
+    assert isinstance(err, ValueError)  # old except-clauses still catch
+    # items 0..3 flushed in two windows; item 4 was materialized but its
+    # window never flushed — NOT persisted, NOT listed
+    assert [n for n, _ in err.persisted] == names[:4]
+    for nm, version in err.persisted:
+        assert store.xattr(nm)["version"] == version  # durable + stamped
+    assert not store.exists(names[4])
+    assert not store.exists(names[7])
+
+
+def test_long_producer_reports_whole_batch_persisted():
+    store = make_store(3, replicas=2)
+    names = [f"pl/{i}" for i in range(9)]
+    blobs = [(b"%d" % i) * 64 for i in range(9)]
+
+    def overlong():
+        yield from blobs
+        yield b"one-too-many"
+
+    with pytest.raises(PartialWriteError) as ei:
+        store.put_batch(names, overlong(), window_objects=3)
+    assert [n for n, _ in ei.value.persisted] == names  # ALL landed
+    for nm, b in zip(names, blobs):
+        assert store.get(nm) == b
+    assert "persisted" in str(ei.value)

@@ -2,24 +2,47 @@
 balancing, elasticity, and failure management of distributed storage').
 
 Measures: re-replication traffic and time after an OSD loss; elastic
-scale-out movement fraction vs the HRW minimal-movement bound; and
-training-checkpoint restore under failures.
+scale-out movement fraction vs the HRW minimal-movement bound; and the
+self-healing plane — scrub throughput against stamped digests, heal
+under live scans (foreground latency bound), and 100% detection of an
+injected fault campaign (bit rot + torn write + slow OSD + transient
+failures) with zero wrong bytes returned to clients.
+
+Writes ``BENCH_recovery.json`` at the repo root.  ``--smoke`` (or
+``BENCH_SMOKE=1``) runs a smaller shape and asserts only the
+correctness gates — cheap enough for per-PR CI:
+
+  * injected fault campaign: every live scan bit-exact (wrong_bytes=0)
+  * scrub detects 100% of injected corruptions and heals them through
+    the replication chain; a second scrub finds nothing
+  * digest-verified recover: zero loss under rep-1 failures
+  * foreground scans keep answering while scrub/heal runs
 """
 
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+import sys
+import threading
 import time
 
 import numpy as np
 
-from repro.core.logical import Column, LogicalDataset
+from repro.core.faults import FaultInjector
+from repro.core.logical import Column, LogicalDataset, RowRange
 from repro.core.partition import PartitionPolicy
-from repro.core.store import make_store
+from repro.core.store import RetryPolicy, make_store
 from repro.core.vol import GlobalVOL
+from repro.core import objclass as oc
 from repro.distributed import elastic
 
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_recovery.json"
 
-def main() -> None:
+
+def bench_osd_loss() -> dict:
     ds = LogicalDataset("r", (Column("x", "uint8", (1024,)),),
                         64_000, 2048)
     store = make_store(8, replicas=2)
@@ -36,7 +59,7 @@ def main() -> None:
     before = store.fabric.recovery_bytes
     t0 = time.perf_counter()
     store.fail_osd(victim)
-    rec = store.recover()
+    rec = store.recover()  # digest-verified: raises DataLossError on loss
     dt = time.perf_counter() - t0
     moved = store.fabric.recovery_bytes - before
     print(f"osd loss: re-replicated {moved / 2**20:.1f} MB "
@@ -47,12 +70,157 @@ def main() -> None:
     before = store.fabric.recovery_bytes
     out = elastic.apply_storage_resize(store, add=("osd.new",))
     frac = out["plan"]["movement_fraction"]
-    moved = store.fabric.recovery_bytes - before
+    emoved = store.fabric.recovery_bytes - before
     print(f"scale-out +1 OSD: movement_fraction={frac:.3f} "
-          f"(ideal ~{1 / 8:.3f}), traffic {moved / 2**20:.1f} MB")
+          f"(ideal ~{1 / 8:.3f}), traffic {emoved / 2**20:.1f} MB")
     assert frac < 0.40
+    return {"rereplicated_bytes": moved, "recover_wall_s": dt,
+            "objects_lost": rec["objects_lost"],
+            "scaleout_movement_fraction": frac,
+            "scaleout_traffic_bytes": emoved}
+
+
+def bench_selfheal(n_rows: int) -> dict:
+    """The fault campaign the acceptance criteria gate: bit flips on
+    random replicas + one torn write + one slow OSD + transient
+    failures, under a live scan workload."""
+    rng = np.random.default_rng(7)
+    ds = LogicalDataset(
+        "sh", (Column("x", "float64"), Column("y", "int32")), n_rows, 256)
+    store = make_store(8, replicas=3,
+                       retry=RetryPolicy(attempts=4, base_s=1e-4))
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=24 << 10,
+                                          max_object_bytes=4 << 20))
+    table = {"x": rng.normal(size=n_rows),
+             "y": rng.integers(0, 1000, n_rows).astype(np.int32)}
+    vol.write(omap, table)
+    names = omap.object_names()
+
+    def scan_once() -> int:
+        """One round of the live workload; returns wrong bytes found."""
+        wrong = 0
+        r, _ = vol.query(omap, [oc.op("agg", col="y", fn="count")])
+        wrong += r != float(n_rows)
+        s, _ = vol.query(omap, [
+            oc.op("filter", col="y", cmp="<", value=500),
+            oc.op("agg", col="x", fn="sum")])
+        expect = table["x"][table["y"] < 500].sum()
+        wrong += abs(s - expect) > 1e-9 * max(1.0, abs(expect))
+        lo = int(rng.integers(0, n_rows - 1000))
+        out = vol.read(omap, RowRange(lo, lo + 1000))
+        wrong += int((out["y"] != table["y"][lo:lo + 1000]).sum())
+        wrong += int((out["x"] != table["x"][lo:lo + 1000]).sum())
+        return int(wrong)
+
+    t0 = time.perf_counter()
+    scan_once()
+    baseline_scan_s = time.perf_counter() - t0
+
+    # ---- inject the campaign
+    fi = FaultInjector(store)
+    flip_victims = rng.choice(len(names), size=4, replace=False)
+    for i in flip_victims:
+        acting = store.cluster.locate(names[i])
+        fi.flip_bits(names[i],
+                     osd_id=acting[int(rng.integers(len(acting)))],
+                     n_bits=int(rng.integers(1, 8)))
+    torn = names[int(rng.choice(
+        [i for i in range(len(names)) if i not in flip_victims]))]
+    fi.tear_write(torn)
+    fi.slow(store.cluster.up_osds[0], 5e-4)
+    for osd_id in store.cluster.up_osds[1:3]:
+        fi.transient_failures(osd_id, 3)
+
+    t0 = time.perf_counter()
+    wrong_bytes = scan_once()  # live scans under the campaign
+    faulted_scan_s = time.perf_counter() - t0
+    retries = store.fabric.retries
+
+    # ---- scrub + heal while foreground scans keep running
+    fi.clear()  # latency/transient knobs off; the damage stays
+    fg_lat: list[float] = []
+    stop = threading.Event()
+
+    def foreground():
+        while not stop.is_set():
+            t = time.perf_counter()
+            wrong = scan_once()
+            fg_lat.append(time.perf_counter() - t)
+            assert wrong == 0, "wrong bytes during heal"
+
+    fg = threading.Thread(target=foreground)
+    fg.start()
+    t0 = time.perf_counter()
+    scrub_stats = store.scrub()
+    scrub_wall_s = time.perf_counter() - t0
+    stop.set()
+    fg.join()
+
+    detected = store.fabric.corruptions_detected
+    injected = fi.corruptions_injected
+    second = store.scrub()
+    scrub_mb_s = (store.fabric.scrub_bytes / 2**20) / max(scrub_wall_s,
+                                                          1e-9)
+    fg_worst = max(fg_lat) if fg_lat else faulted_scan_s
+
+    # ---- the gates (asserted in smoke AND full runs)
+    assert wrong_bytes == 0, f"{wrong_bytes} wrong bytes under faults"
+    assert detected == injected, (detected, injected)
+    assert scrub_stats["lost"] == (), scrub_stats["lost"]
+    assert second["corrupt_copies"] == 0 and second["healed_copies"] == 0
+    assert store.fabric.heals >= scrub_stats["healed_copies"] >= 1
+    # heal never starves the foreground: scans keep completing (bit-
+    # exact, asserted above) and the worst foreground latency stays
+    # within a generous bound of the unfaulted baseline (wall clock is
+    # machine-noisy; the bound is a wedge detector, not a perf claim)
+    lat_bound_s = max(50 * baseline_scan_s, 1.0)
+    assert fg_worst < lat_bound_s, (fg_worst, lat_bound_s)
+
+    print(f"self-heal ({n_rows} rows, {len(names)} objects, rep=3): "
+          f"campaign={injected} corruptions + torn + slow + transients")
+    print(f"  live scans under faults: wrong_bytes=0, "
+          f"retries={retries}, "
+          f"latency x{faulted_scan_s / max(baseline_scan_s, 1e-9):.2f}")
+    print(f"  scrub: {scrub_mb_s:.0f} MB/s verify, detected "
+          f"{detected}/{injected}, healed "
+          f"{scrub_stats['healed_copies']} copies through the chain; "
+          f"second scrub clean")
+    print(f"  foreground under heal: worst {fg_worst * 1e3:.0f} ms "
+          f"(bound {lat_bound_s * 1e3:.0f} ms), "
+          f"{len(fg_lat)} rounds completed")
+    return {
+        "n_rows": n_rows, "n_objects": len(names),
+        "corruptions_injected": injected,
+        "corruptions_detected": detected,
+        "wrong_bytes": wrong_bytes,
+        "retries": retries,
+        "healed_copies": scrub_stats["healed_copies"],
+        "scrub_bytes": store.fabric.scrub_bytes,
+        "scrub_mb_per_s": scrub_mb_s,
+        "second_scrub_corrupt": second["corrupt_copies"],
+        "baseline_scan_s": baseline_scan_s,
+        "faulted_scan_s": faulted_scan_s,
+        "fg_worst_latency_s": fg_worst,
+        "fg_latency_bound_s": lat_bound_s,
+        "fg_rounds_under_heal": len(fg_lat),
+    }
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv or os.environ.get("BENCH_SMOKE") == "1"
+    report = {"osd_loss": bench_osd_loss(),
+              "selfheal": bench_selfheal(20_000 if smoke else 100_000)}
+    if smoke:
+        print("recovery --smoke: gates hold (zero loss under rep-1 "
+              "failure, near-minimal resize movement, zero wrong bytes "
+              "under the fault campaign, 100% corruption detection, "
+              "idempotent scrub, live scans under heal)")
+    else:
+        OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+        print(f"BENCH_recovery -> {OUT_PATH}")
     print("claims: zero loss under rep-1 failures; near-minimal movement "
-          "on resize -> OK")
+          "on resize; self-healing under gray failures -> OK")
 
 
 if __name__ == "__main__":

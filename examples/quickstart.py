@@ -6,7 +6,9 @@
    (filters AND together, aggregates compose, pruning happens ON the
    OSDs, table results come back as one framed response per OSD)
 4. stream a windowed ingest: encode overlaps the NIC, replicas chain
-5. survive an OSD failure
+5. survive failures: fail-stop OSD loss, injected bit rot (digest
+   verify + scrub/heal), torn writes, and transient gray failures
+   (bounded-backoff retries; loud DataLossError when data is truly gone)
 6. train a tiny LM whose data path IS that object store (the loader's
    windowed fetch assembles early batches while slow OSDs still serve)
 
@@ -15,8 +17,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 import numpy as np
 
-from repro.core import (Column, GlobalVOL, LogicalDataset, PartitionPolicy,
-                        RowRange, SkyhookDriver, make_store)
+from repro.core import (Column, FaultInjector, GlobalVOL, LogicalDataset,
+                        PartitionPolicy, RowRange, SkyhookDriver,
+                        make_store)
 
 # -- 1. an 8-OSD cluster, 3-way replication ------------------------------
 store = make_store(8, replicas=3)
@@ -109,7 +112,11 @@ print(f"streamed ingest: {f.ops} put requests (one per OSD) in "
       f"{f.entry_egress_bytes >> 20}MB of {f.replica_bytes >> 20}MB "
       f"total replica traffic")
 
-# -- 5. kill an OSD mid-flight --------------------------------------------
+# -- 5. surviving failures -------------------------------------------------
+# 5a. fail-stop: kill an OSD, peering re-replicates from digest-
+# verified survivors.  recover() is LOUD about real data loss: it
+# raises DataLossError naming the objects (allow_loss=True opts back
+# into the stats-only behavior for benchmarks).
 victim = store.cluster.primary(omap.object_names()[0])
 store.fail_osd(victim)
 rec = store.recover()
@@ -117,6 +124,44 @@ rows = vol.read(omap, RowRange(0, 5))
 print(f"killed {victim}: recovered {rec['objects_moved']} replicas, "
       f"lost {rec['objects_lost']}; reads fine: temp[:5]="
       f"{np.round(rows['temp'], 2)}")
+
+# 5b. gray failures: every write stamped a content digest into the
+# object's xattrs (put, batched windows, every replica-chain hop), so
+# every copy is independently verifiable.  Inject bit rot on a primary
+# copy: the read digest-checks it, quarantines the bad copy on its
+# OSD, and fails over to a verified replica — bit-exact, zero wrong
+# bytes to the client.
+hit = omap.extents[1]
+target = hit.name
+fi = FaultInjector(store)
+fi.flip_bits(target, osd_id=store.cluster.locate(target)[0], n_bits=3)
+_ = vol.read(omap, hit.rows)  # served from a verified replica
+print(f"bit rot on {target}'s primary: read stayed bit-exact, "
+      f"{store.fabric.corruptions_detected} corruption detected + "
+      f"quarantined")
+
+# scrub() is the maintenance half: walk every OSD, verify each copy
+# against its digest, quarantine divergent/torn copies, heal from the
+# highest-version verified source through the replication chain.  A
+# second scrub finds nothing (idempotent).
+fi.tear_write(omap.object_names()[2])  # blob landed, xattrs lost
+sc = store.scrub()
+print(f"scrub: {sc['objects_scrubbed']} objects verified "
+      f"({store.fabric.scrub_bytes >> 20} MB), {sc['corrupt_copies']} "
+      f"corrupt/torn copies found, {sc['healed_copies']} healed through "
+      f"the chain; second scrub finds "
+      f"{store.scrub()['corrupt_copies']}")
+
+# 5c. retry/deadline knobs: transient faults (an OSD failing N requests
+# then recovering) are retried with bounded exponential backoff under a
+# per-request deadline — RetryPolicy(attempts, base_s, cap_s,
+# deadline_s) on make_store(retry=...).  Exhaustion fails over to the
+# next replica; only when EVERY replica is lost or corrupt does the
+# client see a DataLossError naming the objects.
+fi.transient_failures(store.cluster.up_osds[0], 2)
+n_all, _ = vol.scan("sensors").agg("count", "temp").execute()
+print(f"transient faults: scan retried ({store.fabric.retries} retries) "
+      f"and still counted {n_all:.0f} rows")
 
 # -- 6. train a tiny LM straight off the store -----------------------------
 import jax

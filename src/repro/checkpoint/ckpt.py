@@ -10,7 +10,10 @@ a manifest-last protocol:
   ckpt/<tag>/step-<n>/.manifest             (commit record, written last)
 
 A checkpoint without a readable manifest is invisible to ``restore`` —
-a crash mid-save can never be restored from.  OSD failures are tolerated
+a crash mid-save can never be restored from, and a
+``PartialWriteError``'s ``persisted`` listing is sufficient to
+reconcile (``reconcile_partial_save`` deletes the orphaned sub-writes
+so the retry lands a bit-exact checkpoint).  OSD failures are tolerated
 up to replicas-1 per object; ``ObjectStore.recover`` heals the rest.
 
 ``CheckpointManager`` adds async double-buffered saves (serialization +
@@ -30,7 +33,8 @@ import numpy as np
 
 from repro.core.logical import Column, LogicalDataset
 from repro.core.partition import PartitionPolicy, plan_partition
-from repro.core.store import ObjectNotFound, ObjectStore
+from repro.core.store import (ObjectNotFound, ObjectStore,
+                              PartialWriteError)
 
 _DEFAULT_POLICY = PartitionPolicy(target_object_bytes=8 << 20,
                                   max_object_bytes=32 << 20)
@@ -108,6 +112,26 @@ def save(store: ObjectStore, state: Any, step: int, *, tag: str = "train",
     store.put(f"ckpt/{tag}/step-{step}/.manifest",
               json.dumps(manifest).encode())
     return manifest
+
+
+def reconcile_partial_save(store: ObjectStore,
+                           err: PartialWriteError) -> list[str]:
+    """Crash-consistency reconcile for a ``save`` that died mid-stream
+    (e.g. its producer was killed, or the entry OSD went down past the
+    failover budget): the raised :class:`PartialWriteError` lists
+    exactly which sub-writes persisted (``(name, version)`` pairs), and
+    since the manifest is written LAST the torn checkpoint is already
+    invisible to ``restore`` — so reconciliation is just deleting those
+    orphaned data objects and retrying the save from scratch.  Returns
+    the names deleted.  Idempotent: already-gone objects are skipped."""
+    deleted = []
+    for name, _version in err.persisted:
+        try:
+            store.delete(name)
+        except (ObjectNotFound, KeyError):
+            continue
+        deleted.append(name)
+    return deleted
 
 
 def latest_step(store: ObjectStore, *, tag: str = "train") -> int | None:

@@ -3,7 +3,10 @@ storage-side computation (SkyhookDM / HDF5-VOL, in JAX-native form).
 
 Layering (bottom up):
   placement  — CRUSH-like PG/HRW placement from a compact cluster map
-  store      — RADOS-like replicated object store + objclass execution
+  store      — RADOS-like replicated object store + objclass execution,
+               digest scrub/heal and the deadline/backoff request layer
+  faults     — fault-injection harness (bit rot, torn writes, slow or
+               transiently failing OSDs) for the self-healing plane
   format     — physical block format, codecs, layout transformation
   logical    — access-library-facing datasets (rows, columns, units)
   partition  — logical units -> objects (grouping/splitting/sizing)
@@ -24,7 +27,9 @@ from repro.core.partition import (  # noqa: F401
     ObjectMap, PartitionPolicy, plan_partition)
 from repro.core.placement import ClusterMap  # noqa: F401
 from repro.core.store import (  # noqa: F401
-    ObjectStore, PartialWriteError, make_store)
+    CorruptObject, DataLossError, ObjectStore, PartialWriteError,
+    RetryPolicy, TransientOSDError, make_store)
+from repro.core.faults import FaultInjector  # noqa: F401
 from repro.core.scan import PhysicalPlan, Scan, ScanEngine  # noqa: F401
 from repro.core.vol import GlobalVOL, LocalVOL  # noqa: F401
 from repro.core.skyhook import Query, SkyhookDriver  # noqa: F401

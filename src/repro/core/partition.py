@@ -58,10 +58,18 @@ class ObjectExtent:
 
 @dataclasses.dataclass(frozen=True)
 class ObjectMap:
-    """Row-boundary index: object i covers [starts[i], starts[i+1])."""
+    """Row-boundary index: object i covers [starts[i], starts[i+1]).
+
+    ``version`` is the store version of the ``<dataset>/.objmap`` object
+    this map was read from (-1 = not yet persisted / unknown).  Compiled
+    plans stamp it so execute-time can detect that the map moved under
+    them (re-partition) and re-derive their target objects; it is
+    provenance, not content — excluded from equality and serialization.
+    """
 
     dataset: LogicalDataset
     extents: tuple[ObjectExtent, ...]
+    version: int = dataclasses.field(default=-1, compare=False)
 
     def __post_init__(self):
         prev = 0

@@ -73,6 +73,7 @@ from repro.core import expr as ex
 from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core.logical import RowRange, concat_tables
+from repro.core.partition import objmap_key
 
 EXEC_OSD_COMBINE = "osd-combine"
 EXEC_SERVER_CONCAT = "server-concat"
@@ -235,7 +236,8 @@ class Scan:
         engine, omap = self._bound(omap)
         before = self._vol.store.fabric.snapshot()
         return engine.execute(engine.compile(omap, self),
-                              runner=self._runner, before=before)
+                              runner=self._runner, before=before,
+                              omap=omap)
 
 
 def scan(dataset: str) -> Scan:
@@ -274,6 +276,10 @@ class PhysicalPlan:
     assemble: str = "table"          # "table" | "parts" (loader)
     access: str | None = None        # LocalVOL access-stats kind
     n_objects: int = 0               # dataset size before pruning
+    omap_version: int = -1           # store version of the ObjectMap the
+    #                                  plan compiled against (-1 unknown):
+    #                                  row-sliced plans re-derive ``names``
+    #                                  at execute time when the map moved
 
 
 # --------------------------------------------------------------------------
@@ -450,6 +456,7 @@ class ScanEngine:
             approx_rewrite=rewritten,
             access=access,
             n_objects=omap.n_objects,
+            omap_version=getattr(omap, "version", -1),
         )
 
     def compile_gather(self, names: Sequence[str],
@@ -467,18 +474,55 @@ class ScanEngine:
             assemble="parts", pushdown=True, n_objects=len(names))
 
     # ------------------------------------------------------------ execute
+    def _refresh(self, plan: PhysicalPlan, omap) -> PhysicalPlan:
+        """Row-slice targeting refresh (ROADMAP standing item): a
+        compiled plan's ``names`` were derived from the ObjectMap it
+        compiled against.  The pushed-down ``row_slice`` already keeps
+        re-partitioned objects serving their CURRENT rows, but an
+        object whose extent GREW into the range after a re-partition
+        was never targeted at compile time and would silently be
+        skipped.  So before executing a row-sliced plan, compare its
+        stamped map version against the current one — the caller's
+        ``omap`` hint when it has one (free), else ONE xattr probe of
+        ``<dataset>/.objmap`` — and recompile the plan from the fresh
+        map when the version moved."""
+        if plan.omap_version < 0 or not plan.dataset \
+                or plan.exec_cls == EXEC_CLIENT_GATHER \
+                or not any(o.name == "row_slice" for o in plan.ops):
+            return plan
+        hint_v = getattr(omap, "version", -1) if omap is not None else -1
+        if hint_v == plan.omap_version:
+            return plan  # executing against the map it compiled from
+        if hint_v >= 0:
+            current_v, fresh = hint_v, omap
+        else:
+            key = objmap_key(plan.dataset)
+            current_v = int(self.vol.store.xattr(key)
+                            .get("version", -1))
+            fresh = None
+        if current_v == plan.omap_version:
+            return plan
+        if fresh is None:
+            fresh = self.vol.open(plan.dataset)
+        return self._compile(fresh, list(plan.ops),
+                             prune=plan.prune, access=plan.access)
+
     def execute(self, plan: PhysicalPlan, runner=None,
-                before: dict | None = None) -> tuple[Any, dict]:
+                before: dict | None = None, omap=None) -> tuple[Any, dict]:
         """Run one compiled plan; returns ``(result, stats)`` with the
         unified stats emission every caller shares.  ``before`` lets the
         caller open the fabric-accounting window ahead of ``compile`` so
         the reported cost includes compile-time traffic (the client
         strategy's zone-map warm/revalidation, the approx rewrite's
-        column-bounds fetch) — every query front end passes it."""
+        column-bounds fetch) — every query front end passes it.
+        ``omap`` is a currency hint for the row-slice targeting refresh:
+        callers that just compiled against a map they hold pass it so a
+        matching version skips the refresh probe entirely."""
         store = self.vol.store
         run = runner or self._direct
         if before is None:
             before = store.fabric.snapshot()
+        plan = self._refresh(plan, omap)
         names = list(plan.names)
         ops = list(plan.ops)
         pipes = [list(p) for p in plan.pipelines] \

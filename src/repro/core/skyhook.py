@@ -168,7 +168,7 @@ class SkyhookDriver:
         before = self.store.fabric.snapshot()  # include compile traffic
         plan = self.vol.engine.compile(omap, s)
         result, vstats = self.vol.engine.execute(
-            plan, runner=self._runner, before=before)
+            plan, runner=self._runner, before=before, omap=omap)
         return result, self._stats(vstats, t0)
 
     # ------------------------------------------------------------ baseline

@@ -57,6 +57,32 @@ from a surviving copy, on the new cluster map.  Reads and objclass execs
 transparently fail over to the next replica in the acting set; in a
 batch, failed objects are re-grouped onto their next untried replica and
 retried as new (batched) requests.
+
+Self-healing plane (gray failures, not just fail-stop):
+
+  * every write path (``put``, ``put_batch`` windows, each replication
+    hop) stamps a content ``digest`` (``format.content_digest`` over the
+    encoded blob) into the object's xattrs, so EVERY copy is
+    independently verifiable;
+  * every read verifies the served copy against its own digest; a
+    divergent copy is quarantined on its OSD (``OSD.quarantine``) and
+    surfaced as :class:`CorruptObject`, which the batched planes treat
+    exactly like a missing replica — per-object failover to the next
+    copy in the acting set (``Fabric.corruptions_detected`` counts the
+    catches);
+  * ``scrub()`` is the background maintenance pass: a per-OSD walker
+    verifies every local copy, quarantines divergent/torn ones, and
+    heals from the highest-version digest-verified copy through the
+    replication chain; ``recover()`` is digest-verified too — it
+    refuses a corrupt source, falls down the surviving copies, and
+    raises :class:`DataLossError` (naming the objects) instead of
+    silently under-reporting total loss;
+  * transient request faults (:class:`TransientOSDError`, injected by
+    ``core.faults.FaultInjector``) are retried inside the shared
+    batched-failover skeleton with bounded exponential backoff under a
+    per-request deadline (:class:`RetryPolicy`;
+    ``Fabric.retries`` counts them); an exhausted budget escalates to
+    replica failover, keeping the retryable/terminal distinction sharp.
 """
 
 from __future__ import annotations
@@ -71,6 +97,7 @@ from typing import Any, Callable, Iterable, Iterator, Sequence
 import numpy as np
 
 from repro.core import expr as ex
+from repro.core.format import content_digest
 from repro.core.objclass import (
     ObjOp, concat_encode, get_impl as _impl, has_row_slice,
     merge_partials, normalize_exprs, pipeline_mergeable,
@@ -116,6 +143,11 @@ class Fabric:
     #                             result frames delivered while streaming
     overlap_s: float = 0.0      # encode time hidden behind an active
     #                             NIC stream (windowed ingest)
+    scrub_bytes: int = 0        # bytes digest-verified by scrub walks
+    corruptions_detected: int = 0  # divergent/torn copies caught (reads,
+    #                                scrub, recover source vetting)
+    heals: int = 0              # replica copies restored (scrub/recover)
+    retries: int = 0            # transient-fault request retries
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -128,6 +160,8 @@ class Fabric:
         self.overhead_bytes = self.xattr_ops = self.rx_frames = 0
         self.stream_windows = 0
         self.overlap_s = 0.0
+        self.scrub_bytes = self.corruptions_detected = 0
+        self.heals = self.retries = 0
 
 
 class OSDDown(RuntimeError):
@@ -136,6 +170,66 @@ class OSDDown(RuntimeError):
 
 class ObjectNotFound(KeyError):
     pass
+
+
+class TransientOSDError(RuntimeError):
+    """A request-scoped gray failure: the OSD is up and its data is
+    intact, but THIS request failed (dropped frame, brief overload).
+    Retryable by definition — the batched planes retry it with bounded
+    exponential backoff (``RetryPolicy``) before escalating to replica
+    failover, unlike :class:`OSDDown` (terminal for that OSD)."""
+
+
+class CorruptObject(Exception):
+    """A stored copy failed digest verification (or lost its xattr in a
+    torn write under a pipeline that needs it).  The divergent copy is
+    already quarantined on its OSD when this surfaces; the client planes
+    treat it like a missing replica and fail over to the next copy in
+    the acting set."""
+
+
+class DataLossError(RuntimeError):
+    """Every replica of the named objects is lost or corrupt — there is
+    no copy left to serve or heal from.  ``objects`` lists them.  Raised
+    loudly by ``recover()`` (unless ``allow_loss=True``) and by the
+    read/exec planes when failover exhausts an acting set on corrupt
+    copies, instead of burying the loss in a stats dict."""
+
+    def __init__(self, objects: Sequence[str], msg: str | None = None):
+        self.objects: tuple[str, ...] = tuple(objects)
+        super().__init__(
+            msg or ("all replicas lost or corrupt for "
+                    f"{len(self.objects)} object(s): "
+                    f"{list(self.objects[:8])}"
+                    f"{'...' if len(self.objects) > 8 else ''}"))
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Transient-fault retry budget for one client request (a per-OSD
+    group call in the batched planes, or one hop of a per-object path):
+    up to ``attempts`` tries with exponential backoff ``base_s * 2**k``
+    capped at ``cap_s``, never sleeping past the per-request
+    ``deadline_s`` (None = no deadline).  Exhaustion is terminal for
+    THAT replica — the item fails over down its acting set like any
+    other per-object miss."""
+
+    attempts: int = 4
+    base_s: float = 0.002
+    cap_s: float = 0.1
+    deadline_s: float | None = None
+
+    def backoff_s(self, attempt: int) -> float:
+        return min(self.cap_s, self.base_s * (2 ** attempt))
+
+    def give_up(self, attempt: int, t0: float) -> bool:
+        """No budget left: attempts spent, or the next backoff sleep
+        would cross the request deadline."""
+        if attempt + 1 >= self.attempts:
+            return True
+        return self.deadline_s is not None and (
+            time.perf_counter() - t0 + self.backoff_s(attempt)
+            > self.deadline_s)
 
 
 class PartialWriteError(ValueError):
@@ -197,11 +291,48 @@ class OSD:
         self.latency_s: float = 0.0
         self.disk_bw = disk_bw
         self.lock = threading.Lock()
+        # request-entry fault hook (core.faults.FaultInjector): fires
+        # once per client request served by this OSD, may sleep (slow
+        # OSD) or raise TransientOSDError (fail-N-then-succeed)
+        self.faults = None
+        # divergent copies pulled out of service by digest verification
+        # (reads or scrub): name -> (blob, xattr); kept for post-mortems,
+        # never served again
+        self.quarantine: dict[str, tuple[bytes, dict]] = {}
+
+    def _touch(self) -> None:
+        """One served client request: pay the configured latency and
+        give the fault injector its shot (slow answer / transient
+        failure) BEFORE any data is read or written."""
+        if self.faults is not None:
+            self.faults.on_request(self.osd_id)
+        if self.latency_s:
+            time.sleep(self.latency_s)
+
+    def _quarantine_copy(self, name: str) -> None:
+        with self.lock:
+            blob = self.data.pop(name, None)
+            xattr = self.xattrs.pop(name, None)
+            if blob is not None:
+                self.quarantine[name] = (blob, xattr or {})
+
+    def _verify_copy(self, name: str, blob: bytes) -> CorruptObject | None:
+        """Digest-check one local copy before serving it.  A copy whose
+        xattr carries no ``digest`` (legacy/native write) is
+        unverifiable and served as-is; a mismatch quarantines the copy
+        and returns the :class:`CorruptObject` for the caller to
+        surface (per-object failover)."""
+        with self.lock:
+            want = (self.xattrs.get(name) or {}).get("digest")
+        if want is None or content_digest(blob) == int(want):
+            return None
+        self._quarantine_copy(name)
+        return CorruptObject(f"{name} on {self.osd_id}: stored bytes "
+                             "diverge from stamped digest")
 
     # -- local primitives (called by ObjectStore only) --
     def put(self, name: str, blob: bytes, xattr: dict | None = None) -> None:
-        if self.latency_s:
-            time.sleep(self.latency_s)
+        self._touch()
         with self.lock:
             if self.disk_bw:
                 time.sleep(len(blob) / self.disk_bw)  # serial disk
@@ -227,8 +358,7 @@ class OSD:
         index right after its disk write — the store hangs the
         per-object replica fan-out off it, so replication starts per
         object instead of waiting for the whole batch."""
-        if self.latency_s:
-            time.sleep(self.latency_s)
+        self._touch()
         for k, (name, blob, xattr) in enumerate(items):
             if stream is not None:
                 stream(len(blob))
@@ -242,12 +372,15 @@ class OSD:
                 landed(k)
 
     def get(self, name: str) -> bytes:
-        if self.latency_s:
-            time.sleep(self.latency_s)
+        self._touch()
         with self.lock:
             if name not in self.data:
                 raise ObjectNotFound(name)
-            return self.data[name]
+            blob = self.data[name]
+        bad = self._verify_copy(name, blob)
+        if bad is not None:
+            raise bad
+        return blob
 
     def exec_cls(self, name: str, ops: list[ObjOp]) -> Any:
         """Run an objclass pipeline against a local object (SkyhookDM
@@ -279,6 +412,37 @@ class OSD:
                 f"{name}: row_slice needs the object's extent ('rows' "
                 "xattr, written by the VOL write path) to resolve")
         return resolve_row_slice(ops, ext, clamp=clamp)
+
+    def _resolved_batch(self, name: str, ops: list[ObjOp],
+                        clamp: bool = False) -> list[ObjOp] | None:
+        """``_resolved`` for the batched planes: a copy whose xattr is
+        gone entirely (a TORN write — blob landed, metadata did not)
+        cannot resolve a row slice and is quarantined as divergent
+        instead of poisoning the whole batch; the single-object path
+        keeps the loud ValueError (a bare blob there is caller
+        misuse)."""
+        try:
+            return self._resolved(name, ops, clamp=clamp)
+        except ValueError:
+            with self.lock:
+                torn = self.xattrs.get(name) is None
+            if not torn:
+                raise
+            self._quarantine_copy(name)
+            raise CorruptObject(
+                f"{name} on {self.osd_id}: torn write (blob landed, "
+                "xattr missing) cannot serve a row slice") from None
+
+    def _serve_copy(self, name: str) -> bytes | Exception | None:
+        """Fetch one local copy for a batched request: the blob when it
+        exists and digest-verifies, the :class:`CorruptObject` when it
+        diverges (the copy is quarantined), None when absent here."""
+        with self.lock:
+            blob = self.data.get(name)
+        if blob is None:
+            return None
+        bad = self._verify_copy(name, blob)
+        return bad if bad is not None else blob
 
     def _prunes_locally(self, name: str, prune) -> bool:
         """Pushed-down prune: does this object's CURRENT local zone map
@@ -316,25 +480,32 @@ class OSD:
         is disjoint from the slice is skipped the same prune-equivalent
         way (combine/concat) or serves zero rows (plain batch).
 
+        Every served copy is verified against its stamped content
+        digest first; a divergent (or torn, under a row slice) copy is
+        quarantined and reported in the response's ``corrupt_names`` —
+        the client retries those objects on their next replica exactly
+        like missing ones, and counts them in
+        ``Fabric.corruptions_detected``.
+
         With ``combine=True`` the items must share one decomposable
         pipeline whose tail has an associative ``merge``: the OSD folds
         its local partials into ONE and returns a
         ``(partial|None, n_found, scanned_bytes, missing_names,
-        pruned_names)`` tuple — a single partial leaves the OSD per
-        request, not one per object (the server-side half of the
-        two-level combine).
+        pruned_names, corrupt_names)`` tuple — a single partial leaves
+        the OSD per request, not one per object (the server-side half
+        of the two-level combine).
 
         With ``concat=True`` every item's pipeline must be table-out:
         the OSD concatenates the per-object result tables (item order)
         and encodes them as ONE framed block, returning
         ``(blob|None, served_indices, row_counts, scanned_bytes,
-        missing_names, pruned_names)`` — the table-out half of the same
-        symmetry, bounding per-OSD response framing at one frame.
+        missing_names, pruned_names, corrupt_names)`` — the table-out
+        half of the same symmetry, bounding per-OSD response framing at
+        one frame.
         """
         if combine and concat:
             raise ValueError("combine and concat are exclusive")
-        if self.latency_s:
-            time.sleep(self.latency_s)
+        self._touch()
         prune = ex.ensure_pred(prune)  # parse the wire form ONCE
         # ...and likewise each pipeline's serialized filter trees (a
         # shared pipeline object is normalized once for the whole batch)
@@ -349,18 +520,24 @@ class OSD:
                                  "(plain batch responses are positional)")
             out: list[Any] = []
             for name, ops in items:
-                with self.lock:
-                    blob = self.data.get(name)
+                blob = self._serve_copy(name)
                 if blob is None:
                     out.append(ObjectNotFound(name))
+                elif isinstance(blob, Exception):
+                    out.append(blob)  # divergent copy: per-item failover
                 else:
-                    out.append((run_pipeline(
-                        blob, self._resolved(name, ops, clamp=True)),
-                        len(blob)))
+                    try:
+                        out.append((run_pipeline(
+                            blob,
+                            self._resolved_batch(name, ops, clamp=True)),
+                            len(blob)))
+                    except CorruptObject as e:  # torn under a row slice
+                        out.append(e)
             return out
 
         pruned: list[str] = []
         missing: list[str] = []
+        corrupt: list[str] = []
         scanned = 0
         if concat:
             tables: list[dict] = []
@@ -370,12 +547,18 @@ class OSD:
                 if self._prunes_locally(name, prune):
                     pruned.append(name)
                     continue
-                with self.lock:
-                    blob = self.data.get(name)
+                blob = self._serve_copy(name)
                 if blob is None:  # absent HERE: registers as missing
                     missing.append(name)  # (replica failover), even if
                     continue  # a row slice might also have skipped it
-                resolved = self._resolved(name, ops)
+                if isinstance(blob, Exception):
+                    corrupt.append(name)  # quarantined: replica failover
+                    continue
+                try:
+                    resolved = self._resolved_batch(name, ops)
+                except CorruptObject:
+                    corrupt.append(name)
+                    continue
                 if resolved is None:  # row slice disjoint: no rows here
                     pruned.append(name)
                     continue
@@ -389,7 +572,7 @@ class OSD:
                 counts.append(table_n_rows(out))
             frame = concat_encode(tables) if tables else None
             return (frame, tuple(served), tuple(counts), scanned,
-                    tuple(missing), tuple(pruned))
+                    tuple(missing), tuple(pruned), tuple(corrupt))
 
         ops = items[0][1]
         partials: list[Any] = []
@@ -397,12 +580,18 @@ class OSD:
             if self._prunes_locally(name, prune):
                 pruned.append(name)
                 continue
-            with self.lock:
-                blob = self.data.get(name)
+            blob = self._serve_copy(name)
             if blob is None:  # absent HERE: missing (replica failover)
                 missing.append(name)
                 continue
-            resolved = self._resolved(name, ops)
+            if isinstance(blob, Exception):
+                corrupt.append(name)  # quarantined: replica failover
+                continue
+            try:
+                resolved = self._resolved_batch(name, ops)
+            except CorruptObject:
+                corrupt.append(name)
+                continue
             if resolved is None:  # row slice disjoint: no rows here
                 pruned.append(name)
                 continue
@@ -410,14 +599,13 @@ class OSD:
             scanned += len(blob)
         merged = merge_partials(ops, partials) if partials else None
         return (merged, len(partials), scanned, tuple(missing),
-                tuple(pruned))
+                tuple(pruned), tuple(corrupt))
 
     def list_xattrs(self, names: Sequence[str]) -> dict[str, dict]:
         """One batched metadata request: the xattrs of every local object
         among ``names`` (absent names are simply omitted).  Request
         latency is paid once for the whole listing."""
-        if self.latency_s:
-            time.sleep(self.latency_s)
+        self._touch()
         out: dict[str, dict] = {}
         for name in names:
             with self.lock:
@@ -447,7 +635,8 @@ class ObjectStore:
     def __init__(self, cluster: ClusterMap, *,
                  client_bw: float | None = None,
                  disk_bw: float | None = None,
-                 replication: str = "chain"):
+                 replication: str = "chain",
+                 retry: RetryPolicy | None = None):
         if replication not in ("chain", "fanout"):
             raise ValueError(f"bad replication topology {replication!r}; "
                              "known: ('chain', 'fanout')")
@@ -455,6 +644,13 @@ class ObjectStore:
         self.client_bw = client_bw
         self.disk_bw = disk_bw
         self.replication = replication
+        # transient-fault budget for every client request (see
+        # RetryPolicy); injectable per store so tests/benchmarks can
+        # tighten the deadline or disable backoff
+        self.retry = retry or RetryPolicy()
+        # the attached FaultInjector (core.faults), if any — kept here
+        # so fail_osd/add_osds re-wire replacement OSD objects to it
+        self.faults = None
         self.osds: dict[str, OSD] = {o: OSD(o, disk_bw)
                                      for o in cluster.osds}
         self.fabric = Fabric()
@@ -548,15 +744,30 @@ class ObjectStore:
             if rep == entry:
                 continue
             try:
-                self._osd(rep).put(name, blob, xattr)
-            except OSDDown:  # skipped hop: peering/recovery heals it
-                continue
+                self._hop_put(rep, name, blob, xattr)
+            except (OSDDown, TransientOSDError):
+                continue  # skipped hop: peering/recovery heals it
             moved += len(blob)
             if self.replication == "fanout" or sender == entry:
                 entry_moved += len(blob)
             if self.replication == "chain":
                 sender = rep  # the new tail forwards the next hop
         return moved, entry_moved
+
+    def _hop_put(self, osd_id: str, name: str, blob: bytes,
+                 xattr: dict | None) -> None:
+        """One OSD->OSD replication/heal hop, retrying transient faults
+        in place (the hop runs on a replication worker, so the backoff
+        sleep never blocks the client; fabric counters are untouched
+        here).  Exhausted budgets re-raise and the hop is skipped like
+        a down OSD — peering/scrub heals the copy later."""
+        for attempt in range(max(1, self.retry.attempts)):
+            try:
+                return self._osd(osd_id).put(name, blob, xattr)
+            except TransientOSDError:
+                if attempt + 1 >= max(1, self.retry.attempts):
+                    raise
+                time.sleep(self.retry.backoff_s(attempt))
 
     # ------------------------------------------------------------ helpers
     def _acting(self, name: str) -> tuple[str, ...]:
@@ -594,20 +805,63 @@ class ObjectStore:
                     skipped.append(i)
                     continue
                 err = last_err[i] if last_err is not None else None
+                if isinstance(err, CorruptObject):
+                    # not mere absence: the last surviving copy failed
+                    # digest verification — the object is GONE, loudly
+                    raise DataLossError(
+                        [names[i]],
+                        f"{names[i]}: every replica lost or corrupt "
+                        f"(last: {err})")
                 raise err or ObjectNotFound(names[i])
             groups.setdefault(target, []).append(i)
         # one order for dispatch AND result pairing — keep them the same
         return sorted(groups.items())
 
+    def _retrying(self, run_group):
+        """Wrap a per-OSD group call with the store's transient-fault
+        policy: a :class:`TransientOSDError` escaping the group (the
+        OSD dropped THIS request, it is not down) sleeps a bounded
+        exponential backoff and re-issues, until the attempt budget or
+        the per-request deadline runs out — then the error is returned
+        as the group result (terminal for that replica; the items fail
+        over down their acting sets like any whole-request failure).
+        Returns ``(result, n_retries)`` so the CALLER thread can
+        account ``Fabric.retries`` (wrapped calls may run on pool
+        workers, which never touch fabric counters)."""
+        policy = self.retry
+
+        def run(osd_id, idxs):
+            t0 = time.perf_counter()
+            retries = 0
+            while True:
+                try:
+                    return run_group(osd_id, idxs), retries
+                except TransientOSDError as e:
+                    if policy.give_up(retries, t0):
+                        return e, retries
+                    time.sleep(policy.backoff_s(retries))
+                    retries += 1
+        return run
+
     def _dispatch_groups(self, ordered, run_group) -> list:
         """Fan the per-OSD group requests out on the persistent pool —
         but only when requests actually block on simulated I/O; compute-
-        bound groups run inline (threads just add GIL contention)."""
+        bound groups run inline (threads just add GIL contention).
+        Transient faults retry inside each group call (``_retrying``);
+        the retry count accrues to ``Fabric.retries`` here, on the
+        caller's thread."""
+        run = self._retrying(run_group)
         if len(ordered) == 1 or not self.io_simulated():
-            return [run_group(osd_id, idxs) for osd_id, idxs in ordered]
-        futs = [self._pool.submit(run_group, osd_id, idxs)
-                for osd_id, idxs in ordered]
-        return [f.result() for f in futs]
+            outs = [run(osd_id, idxs) for osd_id, idxs in ordered]
+        else:
+            futs = [self._pool.submit(run, osd_id, idxs)
+                    for osd_id, idxs in ordered]
+            outs = [f.result() for f in futs]
+        results = []
+        for got, retries in outs:
+            self.fabric.retries += retries
+            results.append(got)
+        return results
 
     def _scatter_iter(self, names: list[str], run_group, handle,
                       stream: bool = False,
@@ -633,20 +887,22 @@ class ObjectStore:
         tried: list[set[str]] = [set() for _ in names]
         last_err: list[Exception | None] = [None] * len(names)
         pending = list(range(len(names)))
+        run = self._retrying(run_group)  # transient backoff per group
         while pending:
             ordered = self._next_targets(pending, names, tried, last_err)
             pending = []
             if len(ordered) == 1 or not self.io_simulated():
-                completions = ((pair, run_group(*pair))
+                completions = ((pair, run(*pair))
                                for pair in ordered)
             else:
-                futs = {self._pool.submit(run_group, o, idxs): (o, idxs)
+                futs = {self._pool.submit(run, o, idxs): (o, idxs)
                         for o, idxs in ordered}
                 completions = ((futs[f], f.result())
                                for f in (as_completed(futs)
                                          if completion_order else futs))
-            for (osd_id, idxs), got in completions:
+            for (osd_id, idxs), (got, retries) in completions:
                 self._account_request()  # one round trip per OSD group
+                self.fabric.retries += retries
                 for i in idxs:
                     tried[i].add(osd_id)
                 if isinstance(got, Exception):
@@ -667,9 +923,13 @@ class ObjectStore:
         pays one transfer; replication is server-side (``_replicate``:
         chain-pipelined by default, matching Ceph's primary-copy
         forwarding).  The object's xattr is stamped with a fresh
-        monotonic ``version``, which is returned."""
+        monotonic ``version``, which is returned.  The xattr also gets
+        a content ``digest`` of the blob, so every replica (the chain
+        forwards blob AND xattr together) is independently verifiable
+        by reads, ``scrub()`` and ``recover()``."""
         version = self._next_version()
-        stamped = {**(xattr or {}), "version": version}
+        stamped = {**(xattr or {}), "version": version,
+                   "digest": content_digest(blob)}
         acting = self._acting(name)
         self.fabric.client_tx += len(blob)
         self._account_request()
@@ -758,8 +1018,9 @@ class ObjectStore:
         if windowed:
             stamped: list[dict | None] = [None] * len(names)
         else:
-            stamped = [{**(x or {}), "version": v}
-                       for x, v in zip(xattrs, versions)]
+            stamped = [{**(x or {}), "version": v,
+                        "digest": content_digest(b)}
+                       for x, v, b in zip(xattrs, versions, blobs_l)]
 
         tried: list[set[str]] = [set() for _ in names]
         last_err: list[Exception | None] = [None] * len(names)
@@ -839,8 +1100,16 @@ class ObjectStore:
             ordered = self._next_targets(pending, names, tried, last_err)
             outs = self._dispatch_groups(ordered, write_group)
             pending = []
-            for (osd_id, _), pairs in zip(ordered, outs):
+            for (osd_id, idxs), pairs in zip(ordered, outs):
                 self._account_request()  # one round trip per OSD group
+                if isinstance(pairs, Exception):
+                    # transient budget exhausted before ANY sub-write
+                    # landed: the whole group fails over
+                    for i in idxs:
+                        tried[i].add(osd_id)
+                        last_err[i] = pairs
+                        pending.append(i)
+                    continue
                 for i, r in pairs:
                     tried[i].add(osd_id)
                     if isinstance(r, Exception):
@@ -892,7 +1161,7 @@ class ObjectStore:
                 entry.put_batch(feed(), stream=self._client_xfer,
                                 landed=landed)
                 return [(i, None) for i in consumed]
-            except OSDDown as e:
+            except (OSDDown, TransientOSDError) as e:
                 # keep draining so the (still-producing) client never
                 # blocks on a dead stream's bounded queue; every
                 # unlanded sub-write fails over
@@ -937,8 +1206,10 @@ class ObjectStore:
                     overlap += time.perf_counter() - t0
                 blob, x = item if isinstance(item, tuple) \
                     else (item, xattrs[i])
-                stamped[i] = {**(x or {}), "version": versions[i]}
-                ledger.pin(i, bytes(blob))
+                blob = bytes(blob)
+                stamped[i] = {**(x or {}), "version": versions[i],
+                              "digest": content_digest(blob)}
+                ledger.pin(i, blob)
                 win.setdefault(self._acting(names[i])[0], []).append(i)
                 win_nbytes += len(blob)
                 win_nobjs += 1
@@ -982,19 +1253,58 @@ class ObjectStore:
                 persisted=((names[i], versions[i]) for i in landed))
         return failed
 
+    def _osd_call(self, fn, *args):
+        """One request on a per-object path, with the same transient
+        retry budget as the batched planes.  Runs on the caller's
+        thread, so retries accrue to ``Fabric.retries`` directly; an
+        exhausted budget re-raises (terminal for that replica — the
+        caller's failover loop moves on)."""
+        t0 = time.perf_counter()
+        attempt = 0
+        while True:
+            try:
+                return fn(*args)
+            except TransientOSDError:
+                if self.retry.give_up(attempt, t0):
+                    raise
+                time.sleep(self.retry.backoff_s(attempt))
+                self.fabric.retries += 1
+                attempt += 1
+
     def get(self, name: str) -> bytes:
-        """Read from the primary, failing over down the acting set."""
+        """Read from the primary, failing over down the acting set.
+        The served copy is digest-verified on its OSD; a divergent copy
+        is quarantined there and the read fails over like a miss."""
+        return self.get_with_version(name)[0]
+
+    def get_with_version(self, name: str) -> tuple[bytes, int]:
+        """``get`` that also returns the copy's stamped xattr
+        ``version`` tag from the SAME round trip (-1 when the copy has
+        no version xattr) — how a client learns an object's version
+        without a separate ``xattr_ops`` lookup."""
         err: Exception | None = None
         for osd_id in self._acting(name):
             try:
-                blob = self._osd(osd_id).get(name)
+                osd = self._osd(osd_id)
+                blob = self._osd_call(osd.get, name)
+                with osd.lock:
+                    version = int((osd.xattrs.get(name) or {})
+                                  .get("version", -1))
                 self.fabric.client_rx += len(blob)
                 self.fabric.rx_frames += 1
                 self._account_request()
                 self._client_xfer(len(blob))
-                return blob
-            except (OSDDown, ObjectNotFound) as e:  # failover
+                return blob, version
+            except CorruptObject as e:  # quarantined on its OSD
+                self.fabric.corruptions_detected += 1
+                self._account_request()  # the request DID round-trip
                 err = e
+            except (OSDDown, ObjectNotFound, TransientOSDError) as e:
+                err = e
+        if isinstance(err, CorruptObject):
+            raise DataLossError(
+                [name], f"{name}: every replica lost or corrupt "
+                        f"(last: {err})")
         raise err if err else ObjectNotFound(name)
 
     def get_hedged(self, name: str, timeout_s: float) -> bytes:
@@ -1018,7 +1328,11 @@ class ObjectStore:
                     blob = self._osd(osd_id).get(name)
                     self._account_request()  # extra round trip
                     break
-                except (OSDDown, ObjectNotFound):
+                except CorruptObject:
+                    self.fabric.corruptions_detected += 1
+                    self._account_request()
+                    continue
+                except (OSDDown, ObjectNotFound, TransientOSDError):
                     continue
             if blob is None:
                 # no replica could serve: the slow primary is still the
@@ -1037,7 +1351,8 @@ class ObjectStore:
         err: Exception | None = None
         for osd_id in self._acting(name):
             try:
-                result, scanned = self._osd(osd_id).exec_cls(name, ops)
+                osd = self._osd(osd_id)
+                result, scanned = self._osd_call(osd.exec_cls, name, ops)
                 rx = _result_nbytes(result)
                 self.fabric.local_bytes += scanned
                 self.fabric.client_rx += rx
@@ -1045,8 +1360,16 @@ class ObjectStore:
                 self._account_request()
                 self._client_xfer(rx)
                 return result
-            except (OSDDown, ObjectNotFound) as e:
+            except CorruptObject as e:  # quarantined: fail over
+                self.fabric.corruptions_detected += 1
+                self._account_request()
                 err = e
+            except (OSDDown, ObjectNotFound, TransientOSDError) as e:
+                err = e
+        if isinstance(err, CorruptObject):
+            raise DataLossError(
+                [name], f"{name}: every replica lost or corrupt "
+                        f"(last: {err})")
         raise err if err else ObjectNotFound(name)
 
     def exec_batch(self, names: Iterable[str],
@@ -1109,6 +1432,8 @@ class ObjectStore:
             emitted = []
             for i, r in zip(idxs, got):
                 if isinstance(r, Exception):  # per-item miss on this OSD
+                    if isinstance(r, CorruptObject):
+                        self.fabric.corruptions_detected += 1
                     last_err[i] = r
                     retry.append(i)
                     continue
@@ -1192,8 +1517,9 @@ class ObjectStore:
                 return e
 
         def handle(idxs, got, last_err):
-            merged, _, scanned, missing, pruned = got
+            merged, _, scanned, missing, pruned, corrupt = got
             self.fabric.local_bytes += scanned
+            self.fabric.corruptions_detected += len(corrupt)
             emitted = []
             if merged is not None:
                 rx = _result_nbytes(merged)
@@ -1202,10 +1528,11 @@ class ObjectStore:
                 self._client_xfer(rx)
                 emitted.append(merged)
             out_pruned.extend(pruned)
-            miss = set(missing)
-            retry = [i for i in idxs if names[i] in miss]
+            miss, bad = set(missing), set(corrupt)
+            retry = [i for i in idxs if names[i] in miss | bad]
             for i in retry:
-                last_err[i] = ObjectNotFound(names[i])
+                last_err[i] = CorruptObject(names[i]) \
+                    if names[i] in bad else ObjectNotFound(names[i])
             return retry, emitted
 
         # dispatch order even when streaming: merged partials are a few
@@ -1285,8 +1612,9 @@ class ObjectStore:
                 return e
 
         def handle(idxs, got, last_err):
-            blob, served, counts, scanned, missing, pruned = got
+            blob, served, counts, scanned, missing, pruned, corrupt = got
             self.fabric.local_bytes += scanned
+            self.fabric.corruptions_detected += len(corrupt)
             emitted = []
             if blob is not None:
                 self.fabric.client_rx += len(blob)
@@ -1295,10 +1623,11 @@ class ObjectStore:
                 emitted.append(
                     (tuple(idxs[k] for k in served), blob, counts))
             out_pruned.extend(pruned)
-            miss = set(missing)
-            retry = [i for i in idxs if names[i] in miss]
+            miss, bad = set(missing), set(corrupt)
+            retry = [i for i in idxs if names[i] in miss | bad]
             for i in retry:
-                last_err[i] = ObjectNotFound(names[i])
+                last_err[i] = CorruptObject(names[i]) \
+                    if names[i] in bad else ObjectNotFound(names[i])
             return retry, emitted
 
         gen = self._scatter_iter(names, run_group, handle, stream=stream)
@@ -1382,39 +1711,166 @@ class ObjectStore:
         old = self.cluster
         self.cluster = old.mark_down(osd_id)
         self.osds[osd_id] = OSD(osd_id, self.disk_bw)  # data destroyed
+        if self.faults is not None:  # keep the injector wired to the
+            self.faults.attach_osd(self.osds[osd_id])  # replacement OSD
 
     def add_osds(self, ids: Iterable[str]) -> None:
         ids = list(ids)
         self.cluster = self.cluster.add_osds(ids)
         for i in ids:
             self.osds[i] = OSD(i, self.disk_bw)
+            if self.faults is not None:
+                self.faults.attach_osd(self.osds[i])
 
-    def recover(self, old_map: ClusterMap | None = None) -> dict:
-        """Peering: for every object, ensure each OSD in the (new) acting
-        set holds a copy, sourcing from any surviving replica.  Returns
-        recovery stats.  Runs after fail_osd/add_osds."""
-        moved = missing = 0
-        for name in self.list_objects():
+    # ------------------------------------------------------------ scrub/heal
+    def _verified_copies(self, name: str) -> tuple[list, list, list]:
+        """Classify every up-OSD copy of one object WITHOUT serving it:
+        ``(verified, divergent, undigested)``.  ``verified`` holds
+        ``(version, osd_id, blob, xattr)`` tuples whose stored bytes
+        match their stamped digest; ``divergent`` holds copies that
+        fail their own digest OR lost their xattr (torn write) while a
+        digested copy exists elsewhere; ``undigested`` holds copies
+        with no digest to check (legacy/native writes) — unverifiable,
+        not provably corrupt."""
+        verified, divergent, bare = [], [], []
+        for osd_id in self.cluster.up_osds:
+            osd = self.osds[osd_id]
+            with osd.lock:
+                blob = osd.data.get(name)
+                xattr = dict(osd.xattrs.get(name) or {})
+            if blob is None:
+                continue
+            digest = xattr.get("digest")
+            if digest is None:
+                bare.append((osd_id, blob, xattr))
+            elif content_digest(blob) == int(digest):
+                verified.append((int(xattr.get("version", -1)),
+                                 osd_id, blob, xattr))
+            else:
+                divergent.append((osd_id, blob, xattr))
+        if verified or any(x for _, _, x in bare):
+            # torn copies (blob, no xattr at all) are divergent once any
+            # OTHER copy proves the object should carry metadata
+            torn = [(o, b, x) for o, b, x in bare if not x]
+            bare = [(o, b, x) for o, b, x in bare if x]
+            divergent.extend(torn)
+        verified.sort(key=lambda t: -t[0])  # newest version first
+        return verified, divergent, bare
+
+    def scrub(self, heal: bool = True) -> dict:
+        """Background integrity pass (the maintenance half of the
+        self-healing plane): walk every up OSD, digest-verify each
+        local copy, quarantine divergent/torn ones, and — with
+        ``heal=True`` — restore every acting-set copy from the
+        highest-version verified source through the replication chain
+        (``_replicate``; bytes accrue to ``Fabric.recovery_bytes``,
+        copies to ``Fabric.heals``).
+
+        Idempotent: a second scrub right after a healing one finds
+        nothing (all copies verified, quarantine is out of service).
+        Returns stats: bytes verified, corruptions found, copies
+        healed, plus the names it could not help — ``lost`` (had a
+        digest somewhere but NO verified copy survives) and
+        ``undigested`` (legacy objects with no digest to check; never
+        touched).  Scrub is a maintenance client: its verify reads are
+        OSD-local (counted in ``Fabric.scrub_bytes``, not client
+        traffic), and only heal traffic crosses the OSD fabric."""
+        inventory: set[str] = set(self.list_objects())
+        for osd_id in self.cluster.up_osds:
+            inventory |= set(self.osds[osd_id].quarantine)
+        found = healed = 0
+        lost: list[str] = []
+        undigested: list[str] = []
+        for name in sorted(inventory):
+            verified, divergent, bare = self._verified_copies(name)
+            for _, _, blob, _ in verified:
+                self.fabric.scrub_bytes += len(blob)
+            for osd_id, blob, _ in divergent:
+                self.fabric.scrub_bytes += len(blob)
+                self.osds[osd_id]._quarantine_copy(name)
+                self.fabric.corruptions_detected += 1
+                found += 1
+            if not verified:
+                if divergent or any(
+                        name in self.osds[o].quarantine
+                        for o in self.cluster.up_osds):
+                    lost.append(name)  # digested object, no good copy
+                elif bare:
+                    undigested.append(name)  # legacy: nothing to check
+                continue
+            if not heal:
+                continue
+            _, src, blob, xattr = verified[0]
+            holders = {osd_id for _, osd_id, _, _ in verified}
+            targets = [o for o in self._acting(name)
+                       if o not in holders]
+            if not targets:
+                continue
+            moved, _ = self._replicate(name, blob, xattr,
+                                       [src] + targets, entry=src)
+            copies = moved // len(blob) if blob else len(targets)
+            self.fabric.recovery_bytes += moved
+            self.fabric.heals += copies
+            healed += copies
+        return {"objects_scrubbed": len(inventory),
+                "corrupt_copies": found, "healed_copies": healed,
+                "lost": tuple(lost), "undigested": tuple(undigested),
+                "epoch": self.cluster.epoch}
+
+    def recover(self, old_map: ClusterMap | None = None, *,
+                expected: Iterable[str] | None = None,
+                allow_loss: bool = False) -> dict:
+        """Peering: for every object, ensure each OSD in the (new)
+        acting set holds a copy, sourcing from a DIGEST-VERIFIED
+        surviving replica — a corrupt copy is never propagated; it is
+        quarantined and the source search falls down the remaining
+        copies (undigested legacy copies are used only when no digested
+        copy exists).  Runs after fail_osd/add_osds.
+
+        An object with no usable copy left is DATA LOSS and raises
+        :class:`DataLossError` naming the objects — pass
+        ``allow_loss=True`` to get the legacy stats-only behavior
+        (the lost names still ride in the returned dict).  ``expected``
+        extends the inventory with names the caller knows should exist
+        (e.g. from an ObjectMap), so even objects whose every replica
+        vanished — invisible to ``list_objects`` — are detected."""
+        inventory = set(self.list_objects())
+        for osd_id in self.cluster.up_osds:
+            inventory |= set(self.osds[osd_id].quarantine)
+        if expected is not None:
+            inventory |= set(expected)
+        moved = 0
+        lost: list[str] = []
+        for name in sorted(inventory):
             acting = self._acting(name)
-            src_blob = None
-            src_xattr: dict = {}
-            for osd_id in self.cluster.up_osds:
-                osd = self.osds[osd_id]
-                if name in osd.data:
-                    src_blob = osd.data[name]
-                    src_xattr = osd.xattrs.get(name, {})
-                    break
-            if src_blob is None:
-                missing += 1  # all replicas lost (over-failure)
+            verified, divergent, bare = self._verified_copies(name)
+            for osd_id, _, _ in divergent:  # refuse corrupt sources
+                self.osds[osd_id]._quarantine_copy(name)
+                self.fabric.corruptions_detected += 1
+            if verified:
+                _, _, src_blob, src_xattr = verified[0]
+            elif bare:  # unverifiable legacy copy beats nothing
+                _, src_blob, src_xattr = bare[0]
+            else:
+                lost.append(name)  # all replicas lost (over-failure)
                 continue
             for osd_id in acting:
                 osd = self._osd(osd_id)
                 if name not in osd.data:
-                    osd.put(name, src_blob, src_xattr)
+                    try:
+                        self._hop_put(osd_id, name, src_blob, src_xattr)
+                    except (OSDDown, TransientOSDError):
+                        continue  # next peering pass heals it
                     self.fabric.recovery_bytes += len(src_blob)
+                    self.fabric.heals += 1
                     moved += 1
-        return {"objects_moved": moved, "objects_lost": missing,
-                "epoch": self.cluster.epoch}
+        if lost and not allow_loss:
+            raise DataLossError(
+                lost, f"recover(): {len(lost)} object(s) have no "
+                      f"surviving verified replica: {lost[:8]}"
+                      f"{'...' if len(lost) > 8 else ''}")
+        return {"objects_moved": moved, "objects_lost": len(lost),
+                "lost": tuple(lost), "epoch": self.cluster.epoch}
 
     # ------------------------------------------------------------ stats
     def stats(self) -> dict:
@@ -1446,8 +1902,9 @@ def _result_nbytes(result: Any) -> int:
 def make_store(n_osds: int, *, replicas: int = 3, n_pgs: int = 128,
                prefix: str = "osd", client_bw: float | None = None,
                disk_bw: float | None = None,
-               replication: str = "chain") -> ObjectStore:
+               replication: str = "chain",
+               retry: RetryPolicy | None = None) -> ObjectStore:
     cm = ClusterMap(tuple(f"{prefix}.{i}" for i in range(n_osds)),
                     n_pgs=n_pgs, replicas=min(replicas, n_osds))
     return ObjectStore(cm, client_bw=client_bw, disk_bw=disk_bw,
-                       replication=replication)
+                       replication=replication, retry=retry)

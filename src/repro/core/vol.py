@@ -183,11 +183,16 @@ class GlobalVOL:
                policy: PartitionPolicy = PartitionPolicy()) -> ObjectMap:
         """Plan the dataset->object mapping and persist it to the store."""
         omap = plan_partition(ds, policy)
-        self.store.put(objmap_key(ds.name), omap.to_bytes())
-        return omap
+        v = self.store.put(objmap_key(ds.name), omap.to_bytes())
+        return dataclasses.replace(omap, version=v)
 
     def open(self, dataset_name: str) -> ObjectMap:
-        return ObjectMap.from_bytes(self.store.get(objmap_key(dataset_name)))
+        """Bootstrap a dataset's ObjectMap from the store alone.  The
+        map carries the ``.objmap`` object's store version so compiled
+        plans can later detect a re-partition (row-slice targeting
+        refresh) without re-reading the map."""
+        blob, v = self.store.get_with_version(objmap_key(dataset_name))
+        return dataclasses.replace(ObjectMap.from_bytes(blob), version=v)
 
     # ------------------------------------------------------------ write
     def write(self, omap: ObjectMap, table: Mapping[str, np.ndarray],
@@ -286,7 +291,7 @@ class GlobalVOL:
         so only requested rows/columns move, and each OSD concatenates
         its result tables into ONE framed response (``exec_concat``)."""
         plan = self.engine.compile_read(omap, rows, columns)
-        table, _ = self.engine.execute(plan)
+        table, _ = self.engine.execute(plan, omap=omap)
         return table
 
     # ------------------------------------------------------------ query
@@ -360,7 +365,7 @@ class GlobalVOL:
         before = self.store.fabric.snapshot()
         plan = self.engine.compile_ops(
             omap, ops, allow_approx=allow_approx, prune=prune)
-        return self.engine.execute(plan, before=before)
+        return self.engine.execute(plan, before=before, omap=omap)
 
     # ------------------------------------------------------------ helpers
     def _column_bounds(self, omap: ObjectMap, col: str) -> tuple[float, float]:

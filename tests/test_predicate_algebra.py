@@ -269,7 +269,11 @@ def test_rows_aggregate_rides_combine_plane_zero_metadata():
     r, stats = fresh.engine.execute(plan)
     mask = table["y"][100:2500] < 500
     assert r == pytest.approx(table["x"][100:2500][mask].sum(), rel=1e-12)
-    assert store.fabric.xattr_ops == 0
+    # still zero ZONE-MAP traffic; the single op is the row-slice
+    # targeting refresh probing the .objmap version (a standalone
+    # execute has no caller-held ObjectMap to vouch for currency —
+    # every vol/scan/driver front end passes one and stays at zero)
+    assert store.fabric.xattr_ops == 1
 
 
 def test_row_sliced_scan_fails_over_to_replica():

@@ -1,0 +1,346 @@
+"""Hot-data serve plane under many-client fan-in (ROADMAP item 1).
+
+The paper's case for in-storage computation is that offloaded
+access-library operations ride the storage cluster's own load
+balancing and elasticity — but without server-local result caching,
+offload cost scales with CLIENTS instead of with data once thousands
+of them hit the same hot objects.  This benchmark drives a zipf-skewed
+client population over hot/cold datasets through the full serve plane
+(per-OSD result caches + ScanSession single-flight/coalescing) and
+measures what the plane buys:
+
+  * hot-scan speedup vs an identical uncached cluster (same data, same
+    clients, same seed), p50/p99 per-scan latency, hit rate, fabric ops
+  * single-flight collapse: N identical concurrent scans cost exactly
+    the fabric ops of ONE scan, result fanned out bit-identically
+  * coherence: every result bit-exact vs an uncached reference, and a
+    concurrent version-bumping writer never yields a stale/mixed byte
+
+Writes ``BENCH_serve.json`` at the repo root.  ``--smoke`` (or
+``BENCH_SMOKE=1``) runs a smaller shape and asserts the same gates —
+cheap enough for per-PR CI:
+
+  * cache_hits > 0 and single-flight dedup observed
+  * p99 (and wall clock, >= 2x full / 1.5x smoke) under the no-cache
+    baseline
+  * every scan result bit-exact vs the uncached reference, including
+    under the concurrent writer
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.core.logical import Column, LogicalDataset
+from repro.core.partition import PartitionPolicy
+from repro.core.session import ScanSession
+from repro.core.store import make_store
+from repro.core.vol import GlobalVOL
+
+OUT_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_serve.json"
+
+SCAN_BW = 40e6          # modeled per-OSD decode bandwidth (bytes/s)
+CACHE_BYTES = 8 << 20   # per-OSD result cache (small: cold churn evicts)
+
+
+# --------------------------------------------------------------- world
+def build_world(*, cache_bytes: int, scan_bw: float | None,
+                n_hot: int, n_cold: int):
+    """Two datasets on one 4-OSD cluster: a small hot table the skewed
+    clients hammer and a larger cold one that churns the cache."""
+    store = make_store(4, replicas=2, scan_bw=scan_bw,
+                       cache_bytes=cache_bytes)
+    vol = GlobalVOL(store)
+    rng = np.random.default_rng(11)
+    tables = {}
+    for name, n in (("hot", n_hot), ("cold", n_cold)):
+        tbl = {"run": np.arange(n, dtype=np.int64),
+               "e_pt": rng.normal(size=n),
+               "eta": rng.uniform(-3, 3, n),
+               "phi": rng.uniform(-3.2, 3.2, n)}
+        ds = LogicalDataset(
+            name, (Column("run", "int64"), Column("e_pt", "float64"),
+                   Column("eta", "float64"), Column("phi", "float64")),
+            n, 512)
+        omap = vol.create(ds, PartitionPolicy(
+            target_object_bytes=128 << 10, max_object_bytes=4 << 20))
+        vol.write(omap, tbl)
+        tables[name] = tbl
+    return store, vol, tables
+
+
+def make_templates(n_hot: int, n_cold: int) -> list[tuple]:
+    """Scan templates ``(dataset, lo, hi, cols | ("agg", fn, col))``,
+    hottest first (the zipf weights follow list order)."""
+    cols = ("e_pt", "eta", "phi")
+    out: list[tuple] = []
+    for k in range(20):  # hot: overlapping narrow run windows
+        lo = (k * 997) % (n_hot - 4000)
+        out.append(("hot", lo, lo + 4000,
+                    tuple(cols[i] for i in ((k % 3,), (0, 1), (1, 2),
+                                            (0, 1, 2))[k % 4])))
+    out.append(("hot", 0, n_hot, ("agg", "sum", "e_pt")))
+    out.append(("hot", 0, n_hot, ("agg", "count", "run")))
+    for k in range(8):  # cold tail: wide scans that churn the cache
+        lo = (k * 4999) % (n_cold - 12000)
+        out.append(("cold", lo, lo + 12000, (cols[k % 3], "run")))
+    return out
+
+
+def template_scan(vol, tpl):
+    ds, lo, hi, spec = tpl
+    s = vol.scan(ds).filter("run", ">=", lo).filter("run", "<", hi)
+    if spec[0] == "agg":
+        return s.agg(spec[1], spec[2])
+    return s.project(*spec)
+
+
+def results_equal(a, b) -> bool:
+    if isinstance(a, dict) != isinstance(b, dict):
+        return False
+    if isinstance(a, dict):
+        return set(a) == set(b) and all(
+            np.array_equal(a[c], b[c]) for c in a)
+    return np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+# ------------------------------------------------------------ workload
+def run_workload(store, vol, templates, expected, *, n_threads: int,
+                 scans_per_thread: int, seed: int) -> dict:
+    """The zipf-skewed client population: every thread draws templates
+    from the same skewed distribution and bit-checks every result
+    against the uncached reference."""
+    session = ScanSession(vol)
+    weights = 1.0 / np.arange(1, len(templates) + 1) ** 1.2
+    weights /= weights.sum()
+    lat: list[list[float]] = [[] for _ in range(n_threads)]
+    errors: list[BaseException] = []
+    bar = threading.Barrier(n_threads)
+
+    def client(t: int) -> None:
+        rng = np.random.default_rng(seed + t)
+        picks = rng.choice(len(templates), size=scans_per_thread,
+                           p=weights)
+        bar.wait()
+        for k in picks:
+            t0 = time.perf_counter()
+            try:
+                res, _ = session.execute(
+                    template_scan(vol, templates[k]))
+            except BaseException as e:  # noqa: BLE001 — reported below
+                errors.append(e)
+                return
+            lat[t].append(time.perf_counter() - t0)
+            if not results_equal(res, expected[k]):
+                errors.append(AssertionError(
+                    f"result mismatch on template {k}: {templates[k]}"))
+                return
+
+    before = store.fabric.snapshot()
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_threads)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    after = store.fabric.snapshot()
+    all_lat = np.array([x for l in lat for x in l])
+    hits = after["cache_hits"] - before["cache_hits"]
+    misses = after["cache_misses"] - before["cache_misses"]
+    return {
+        "scans": int(all_lat.size),
+        "wall_s": wall,
+        "p50_ms": float(np.percentile(all_lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(all_lat, 99) * 1e3),
+        "fabric_ops": after["ops"] - before["ops"],
+        "local_bytes": after["local_bytes"] - before["local_bytes"],
+        "cache_hits": hits,
+        "cache_misses": misses,
+        "hit_rate": hits / max(hits + misses, 1),
+        "cache_evictions": (after["cache_evictions"]
+                            - before["cache_evictions"]),
+        "queue_wait_s": after["queue_wait_s"] - before["queue_wait_s"],
+        "session": dict(session.stats),
+    }
+
+
+def bench_hot_scans(*, smoke: bool) -> dict:
+    n_hot, n_cold = 65_536, 131_072
+    n_threads = 8 if smoke else 16
+    per_thread = 30 if smoke else 125
+    templates = make_templates(n_hot, n_cold)
+
+    # uncached reference: no modeled decode time, no cache — ground
+    # truth for BOTH runs (per-OSD fold order is deterministic, so
+    # reference results are bit-identical to a live uncached cluster's)
+    _, ref_vol, _ = build_world(cache_bytes=0, scan_bw=None,
+                                n_hot=n_hot, n_cold=n_cold)
+    expected = [template_scan(ref_vol, t).execute()[0]
+                for t in templates]
+
+    print(f"hot-scan fan-in: {n_threads} clients x {per_thread} scans, "
+          f"{len(templates)} templates (zipf), scan_bw="
+          f"{SCAN_BW / 1e6:.0f} MB/s")
+    out = {}
+    for label, cache in (("uncached", 0), ("cached", CACHE_BYTES)):
+        store, vol, _ = build_world(cache_bytes=cache, scan_bw=SCAN_BW,
+                                    n_hot=n_hot, n_cold=n_cold)
+        out[label] = run_workload(
+            store, vol, templates, expected, n_threads=n_threads,
+            scans_per_thread=per_thread, seed=23)
+        r = out[label]
+        print(f"  {label:9s}: wall {r['wall_s']:.2f}s  "
+              f"p50 {r['p50_ms']:.1f}ms  p99 {r['p99_ms']:.1f}ms  "
+              f"hit_rate {r['hit_rate']:.2f}  ops {r['fabric_ops']}")
+    speedup = out["uncached"]["wall_s"] / out["cached"]["wall_s"]
+    p99_ratio = out["uncached"]["p99_ms"] / out["cached"]["p99_ms"]
+    out["speedup"] = speedup
+    out["p99_speedup"] = p99_ratio
+    print(f"  speedup: {speedup:.1f}x wall, {p99_ratio:.1f}x p99")
+
+    # ---- gates
+    assert out["cached"]["cache_hits"] > 0
+    assert out["cached"]["p99_ms"] < out["uncached"]["p99_ms"], \
+        "cached p99 not under the no-cache baseline"
+    assert speedup >= (1.5 if smoke else 2.0), f"speedup {speedup:.2f}x"
+    return out
+
+
+# -------------------------------------------------------- single-flight
+def bench_single_flight(*, smoke: bool) -> dict:
+    store, vol, _ = build_world(cache_bytes=CACHE_BYTES,
+                                scan_bw=SCAN_BW, n_hot=65_536,
+                                n_cold=131_072)
+    scan = vol.scan("hot").filter("run", "<", 8000).project("e_pt")
+    solo = ScanSession(vol)
+    before = store.fabric.snapshot()
+    ref, _ = solo.execute(scan)
+    solo_ops = store.fabric.ops - before["ops"]
+
+    n_clients = 8 if smoke else 32
+    session = ScanSession(vol, window_s=0.05)
+    results: list = [None] * n_clients
+    bar = threading.Barrier(n_clients)
+
+    def client(i: int) -> None:
+        bar.wait()
+        results[i], _ = session.execute(scan)
+
+    before = store.fabric.snapshot()
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    group_ops = store.fabric.ops - before["ops"]
+
+    # ---- gates: one OSD round trip for the whole group, bit-identical
+    assert session.stats["executed"] == 1, session.stats
+    assert session.stats["deduped"] == n_clients - 1, session.stats
+    assert group_ops == solo_ops, (group_ops, solo_ops)
+    for r in results:
+        assert results_equal(r, ref)
+    print(f"single-flight: {n_clients} identical concurrent scans -> "
+          f"{group_ops} fabric ops (solo scan costs {solo_ops}); "
+          f"dedup {session.stats['deduped']}, all bit-identical")
+    return {"n_clients": n_clients, "solo_ops": solo_ops,
+            "group_ops": group_ops, "session": dict(session.stats)}
+
+
+# ------------------------------------------------------- write coherence
+def bench_write_coherence(*, smoke: bool) -> dict:
+    """A version-bumping writer alternates a single-object dataset
+    between two known tables while scanners hammer it through the
+    cache: every observed result must be EXACTLY one of the two
+    versions — a stale cache entry or a blob/xattr tear would show up
+    as a mixed or third result."""
+    store = make_store(2, replicas=2, cache_bytes=16 << 20,
+                       scan_bw=400e6)
+    vol = GlobalVOL(store)
+    n = 4096
+    ds = LogicalDataset("wc", (Column("v", "float64"),), n, n)
+    omap = vol.create(ds, PartitionPolicy(  # one unit -> one object
+        target_object_bytes=4 << 20, max_object_bytes=16 << 20))
+    a = {"v": np.arange(n, dtype=np.float64)}
+    b = {"v": np.arange(n, dtype=np.float64) * -3.0 + 7.0}
+    vol.write(omap, a)
+    allowed = (a["v"], b["v"])
+
+    run_s = 0.6 if smoke else 2.5
+    stop = threading.Event()
+    writes = [0]
+    wrong: list = []
+    scans = [0]
+
+    def writer() -> None:
+        k = 0
+        while not stop.is_set():
+            vol.write(omap, b if k % 2 == 0 else a)
+            writes[0] += 1
+            k += 1
+
+    def scanner() -> None:
+        while not stop.is_set():
+            r, _ = vol.scan("wc").project("v").execute()
+            scans[0] += 1
+            if not (np.array_equal(r["v"], allowed[0])
+                    or np.array_equal(r["v"], allowed[1])):
+                wrong.append(r["v"])
+                return
+
+    threads = [threading.Thread(target=writer)] + \
+        [threading.Thread(target=scanner) for _ in range(3)]
+    for th in threads:
+        th.start()
+    time.sleep(run_s)
+    stop.set()
+    for th in threads:
+        th.join()
+
+    assert not wrong, "stale/mixed bytes served across a version bump"
+    assert writes[0] > 2 and scans[0] > 2
+    print(f"write coherence: {scans[0]} scans raced {writes[0]} "
+          f"version-bumping writes, 0 stale results "
+          f"(cache hits {store.fabric.cache_hits}, "
+          f"misses {store.fabric.cache_misses})")
+    return {"writes": writes[0], "scans": scans[0], "wrong_results": 0,
+            "cache_hits": store.fabric.cache_hits,
+            "cache_misses": store.fabric.cache_misses}
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv or os.environ.get("BENCH_SMOKE") == "1"
+    report = {
+        "shape": {"smoke": smoke, "scan_bw": SCAN_BW,
+                  "cache_bytes": CACHE_BYTES},
+        "hot_scan": bench_hot_scans(smoke=smoke),
+        "single_flight": bench_single_flight(smoke=smoke),
+        "write_coherence": bench_write_coherence(smoke=smoke),
+    }
+    if smoke:
+        print("serve_plane --smoke: gates hold (hits > 0, p99 under "
+              "no-cache baseline, single-flight collapse to one round "
+              "trip, bit-exact results incl. under a concurrent "
+              "version-bumping writer)")
+    else:
+        OUT_PATH.write_text(json.dumps(report, indent=2) + "\n")
+        print(f"BENCH_serve -> {OUT_PATH}")
+    print("claims: hot-data serving cost scales with data, not with "
+          "clients (OSD result caches + single-flight) -> OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,9 @@ Layering (bottom up):
   objclass   — storage-side op registry (select/project/filter/agg/...)
   scan       — the ONE query surface: Scan builder -> PhysicalPlan ->
                ScanEngine (prune pushdown, per-OSD combine/concat)
+  cache      — byte-bounded LRU result cache (one per OSD, version-keyed)
+  session    — ScanSession: many-client admission front-end
+               (single-flight dedup + projection coalescing)
   vol        — GlobalVOL (client plugin) / LocalVOL (storage plugin)
   skyhook    — driver/worker scheduling over the scan engine
   pushdown_jax — the TPU data plane: compute-at-shard via shard_map
@@ -30,6 +33,8 @@ from repro.core.store import (  # noqa: F401
     CorruptObject, DataLossError, ObjectStore, PartialWriteError,
     RetryPolicy, TransientOSDError, make_store)
 from repro.core.faults import FaultInjector  # noqa: F401
+from repro.core.cache import ResultCache  # noqa: F401
 from repro.core.scan import PhysicalPlan, Scan, ScanEngine  # noqa: F401
+from repro.core.session import ScanSession  # noqa: F401
 from repro.core.vol import GlobalVOL, LocalVOL  # noqa: F401
 from repro.core.skyhook import Query, SkyhookDriver  # noqa: F401

@@ -15,6 +15,8 @@ accepted (we provide a P² quantile estimator as that approximation).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Any, Callable, Mapping
 
 import numpy as np
@@ -471,6 +473,32 @@ def required_columns(ops: list[ObjOp]) -> list[str] | None:
     return sorted(needed)
 
 
+def decode_pipeline(blob: bytes, ops: list[ObjOp]) -> dict:
+    """The decode half of :func:`run_pipeline`: the minimal column
+    table the pipeline needs, straight from the block.  Split out so
+    the OSD result cache can keep decoded column sets around and feed
+    them back through :func:`apply_pipeline` without touching the blob
+    again (the decode is the service cost the cache elides)."""
+    return fmt.decode_block(blob, columns=required_columns(ops))
+
+
+def apply_pipeline(table: dict, ops: list[ObjOp],
+                   encode: bool = True) -> Any:
+    """The post-decode half of :func:`run_pipeline`: run the op chain
+    over an already-decoded column table.  Every built-in op builds a
+    NEW dict (slices/masks/partials) and never mutates its input, so a
+    cached table can be replayed through any number of pipelines."""
+    out: Any = table
+    for o in ops:
+        impl = get_impl(o.name)
+        if not impl.table_in and not isinstance(out, dict):
+            raise TypeError(f"{o.name}: pipeline type mismatch")
+        out = impl.local(out, **o.params)
+        if not impl.table_out:
+            return out  # partial; must be the last op
+    return fmt.encode_block(out) if encode else out
+
+
 def run_pipeline(blob: bytes, ops: list[ObjOp], encode: bool = True) -> Any:
     """Execute a pipeline against one object's block, server-side.
 
@@ -493,16 +521,37 @@ def run_pipeline(blob: bytes, ops: list[ObjOp], encode: bool = True) -> Any:
         if len(ops) != 1:
             raise ValueError("select_packed must be the only op")
         return select_packed(blob, **ops[0].params)
-    table = fmt.decode_block(blob, columns=required_columns(ops))
-    out: Any = table
-    for o in ops:
-        impl = get_impl(o.name)
-        if not impl.table_in and not isinstance(out, dict):
-            raise TypeError(f"{o.name}: pipeline type mismatch")
-        out = impl.local(out, **o.params)
-        if not impl.table_out:
-            return out  # partial; must be the last op
-    return fmt.encode_block(out) if encode else out
+    return apply_pipeline(decode_pipeline(blob, ops), ops, encode=encode)
+
+
+def _canon(v: Any) -> Any:
+    """Canonical JSON-able form of one op-param value: Exprs flatten to
+    their wire dicts, numpy scalars/arrays to plain lists, tuples to
+    lists — so a pipeline built from wire dicts and its normalized
+    (parsed-Expr) twin digest identically."""
+    if isinstance(v, ex.Expr):
+        return v.to_json()
+    if isinstance(v, Mapping):
+        return {str(k): _canon(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_canon(x) for x in v]
+    if isinstance(v, np.generic):
+        return v.item()
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    return v
+
+
+def pipeline_digest(ops: list[ObjOp]) -> str:
+    """A stable content digest of one pipeline — the pipeline/columns
+    half of the OSD result-cache key ``(name, version, digest)``.  Two
+    pipelines digest equal iff their canonical serialized forms match,
+    so a shared-plan re-scan hits while any changed filter value,
+    projection, or row range misses."""
+    payload = [{"name": o.name, "params": _canon(o.params)} for o in ops]
+    return hashlib.sha1(
+        json.dumps(payload, sort_keys=True, separators=(",", ":"),
+                   default=repr).encode()).hexdigest()
 
 
 def concat_encode(tables: list[Mapping[str, np.ndarray]]) -> bytes:

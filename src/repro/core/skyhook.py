@@ -26,8 +26,9 @@ the engine, as the ``client-gather`` execution class.
 from __future__ import annotations
 
 import dataclasses
+import queue as _queue
 import time
-from concurrent.futures import ThreadPoolExecutor, as_completed
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any
 
 from repro.core import objclass as oc
@@ -130,6 +131,18 @@ class SkyhookWorker:
         if mode == "concat":
             return self.store.exec_concat(names, ops, prune=predicates)
         return self.store.exec_batch(names, ops)
+
+    def run_stream(self, names: list[str], ops, predicates=None,
+                   pruned_out: list | None = None):
+        """Frame-streaming concat shard: an iterator of per-OSD framed
+        responses, each yielded the MOMENT its OSD answers
+        (``exec_concat_iter``) instead of after the whole shard — so
+        the driver forwards frames at OSD granularity and one slow OSD
+        in a shard no longer gates that shard's fast frames.
+        ``pruned_out`` accumulates OSD-pruned names, complete once the
+        iterator is exhausted."""
+        return self.store.exec_concat_iter(names, ops, prune=predicates,
+                                           pruned_out=pruned_out)
 
 
 class SkyhookDriver:
@@ -243,36 +256,94 @@ class SkyhookDriver:
             return results
 
         # combine/concat follow the engine's LAZY runner protocol: the
-        # partial/frame half streams in worker-completion order (the
-        # engine decodes each shard's results while slower workers are
-        # still scanning); ``pruned`` fills during consumption and is
-        # complete once the stream is exhausted
+        # partial/frame half streams as results land (the engine
+        # decodes early results while slower OSDs are still scanning);
+        # ``pruned`` fills during consumption and is complete once the
+        # stream is exhausted
         pruned: list[str] = []
 
-        def emit(idxs, got):
-            items, pr = got
-            pruned.extend(pr)
-            if mode == "concat":
-                for local, blob, counts in items:
-                    yield (tuple(idxs[k] for k in local), blob, counts)
-            else:
-                yield from items
+        if mode == "concat":
+            return self._concat_stream(names, pipelines, shared,
+                                       predicates, shards, io,
+                                       pruned), pruned
 
+        # combine partials feed an order-sensitive float fold and keep
+        # submission order (deterministic); they are scalar-sized, so
+        # there is no decode to overlap anyway
         def stream():
             if io:
                 futs = [self._pool.submit(run_shard, p)
                         for p in zip(self.workers, shards)]
-                # concat frames are index-placed by the engine, so they
-                # may land in completion order (decode overlaps slower
-                # workers); combine partials feed an order-sensitive
-                # float fold and keep submission order (deterministic)
-                for f in (as_completed(futs) if mode == "concat"
-                          else futs):
-                    idxs, got = f.result()
-                    yield from emit(idxs, got)
+                for f in futs:
+                    idxs, (items, pr) = f.result()
+                    pruned.extend(pr)
+                    yield from items
             else:
                 for p in zip(self.workers, shards):
-                    idxs, got = run_shard(p)
-                    yield from emit(idxs, got)
+                    idxs, (items, pr) = run_shard(p)
+                    pruned.extend(pr)
+                    yield from items
 
         return stream(), pruned
+
+    def _concat_stream(self, names, pipelines, shared, predicates,
+                       shards, io, pruned):
+        """Worker-level frame streaming: every per-OSD framed response
+        forwards the moment it lands, translated to global positions —
+        frames interleave ACROSS workers in arrival order (matching the
+        store-direct ``exec_concat_iter`` overlap), not in
+        shard-completion order, so one slow OSD anywhere delays only
+        its own frame."""
+        work = []  # (worker, global idxs) pairs with actual items
+        for w, idxs in zip(self.workers, shards):
+            if idxs:
+                sub_pipes = pipelines if shared \
+                    else [pipelines[i] for i in idxs]
+                work.append((w, idxs, [names[i] for i in idxs],
+                             sub_pipes))
+
+        if not io:  # compute-bound: sequential, still frame-granular
+            def stream_seq():
+                for w, idxs, sub_names, sub_pipes in work:
+                    local_pruned: list[str] = []
+                    for local, blob, counts in w.run_stream(
+                            sub_names, sub_pipes, predicates,
+                            local_pruned):
+                        yield (tuple(idxs[k] for k in local), blob,
+                               counts)
+                    pruned.extend(local_pruned)
+            return stream_seq()
+
+        # one pump per worker shard feeds a shared arrival queue; the
+        # consumer (the engine, decoding frames) runs on the caller's
+        # thread and drains until every pump posts its done sentinel
+        q: _queue.Queue = _queue.Queue()
+
+        def pump(w, idxs, sub_names, sub_pipes):
+            local_pruned: list[str] = []
+            try:
+                for local, blob, counts in w.run_stream(
+                        sub_names, sub_pipes, predicates, local_pruned):
+                    q.put(("frame",
+                           (tuple(idxs[k] for k in local), blob,
+                            counts)))
+            except BaseException as e:
+                q.put(("error", e))
+                return
+            q.put(("done", local_pruned))
+
+        futs = [self._pool.submit(pump, *item) for item in work]
+
+        def stream_live():
+            live = len(futs)
+            while live:
+                kind, payload = q.get()
+                if kind == "error":
+                    raise payload
+                if kind == "done":
+                    pruned.extend(payload)
+                    live -= 1
+                    continue
+                yield payload
+
+        return stream_live()

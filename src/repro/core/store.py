@@ -97,10 +97,12 @@ from typing import Any, Callable, Iterable, Iterator, Sequence
 import numpy as np
 
 from repro.core import expr as ex
+from repro.core.cache import ResultCache, _MISS
 from repro.core.format import content_digest
 from repro.core.objclass import (
-    ObjOp, concat_encode, get_impl as _impl, has_row_slice,
-    merge_partials, normalize_exprs, pipeline_mergeable,
+    ObjOp, apply_pipeline, concat_encode, decode_pipeline,
+    get_impl as _impl, has_row_slice, merge_partials, normalize_exprs,
+    pipeline_digest, pipeline_mergeable, required_columns,
     resolve_row_slice, run_pipeline, table_n_rows, zone_map_prunes)
 from repro.core.placement import ClusterMap, pg_delta
 
@@ -112,6 +114,13 @@ PER_REQUEST_OVERHEAD_BYTES = 128
 # flush to their per-OSD streams every this-many encoded bytes, so the
 # encoder runs at most one window ahead of the NIC
 DEFAULT_WINDOW_BYTES = 8 << 20
+
+# bounds for ``put_batch(window_bytes="adaptive")``: the per-window
+# retarget W_next = W * encode_rate / NIC_rate is clamped to this range
+# so one mis-measured window can neither collapse streaming to per-blob
+# flushes nor balloon the ledger past a sane buffer
+ADAPTIVE_WINDOW_FLOOR = 256 << 10
+ADAPTIVE_WINDOW_CAP = 64 << 20
 
 
 @dataclasses.dataclass
@@ -148,6 +157,15 @@ class Fabric:
     #                                scrub, recover source vetting)
     heals: int = 0              # replica copies restored (scrub/recover)
     retries: int = 0            # transient-fault request retries
+    cache_hits: int = 0         # served from an OSD result cache
+    cache_misses: int = 0       # cache enabled but entry absent/stale
+    cache_evictions: int = 0    # LRU entries dropped for the byte bound
+    cache_bytes: int = 0        # bytes ADMITTED into OSD caches (a
+    #                             monotonic counter like every other
+    #                             field, not a residency gauge — see
+    #                             stats()["cache_resident_bytes"])
+    queue_wait_s: float = 0.0   # time requests blocked behind another
+    #                             scan in an OSD's modeled service queue
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -162,6 +180,18 @@ class Fabric:
         self.overlap_s = 0.0
         self.scrub_bytes = self.corruptions_detected = 0
         self.heals = self.retries = 0
+        self.cache_hits = self.cache_misses = self.cache_evictions = 0
+        self.cache_bytes = 0
+        self.queue_wait_s = 0.0
+
+
+def _serve_meters() -> dict:
+    """Per-request serve-plane meters: accumulated OSD-side while a
+    batched request runs (possibly on a pool worker), shipped back in
+    the response, and folded into the fabric by the CLIENT thread that
+    issued the call — pool workers never touch fabric counters."""
+    return {"cache_hits": 0, "cache_misses": 0, "cache_evictions": 0,
+            "cache_bytes": 0, "queue_wait_s": 0.0}
 
 
 class OSDDown(RuntimeError):
@@ -281,15 +311,23 @@ class OSD:
     read tests); ``disk_bw`` (bytes/s, None = instant) serializes write
     cost per OSD — parallel writers to different OSDs overlap, writers to
     the same OSD queue, which is what makes paper-Table-1-style scaling
-    measurable in-process.
+    measurable in-process.  ``scan_bw`` (bytes/s, None = instant) is the
+    serve-side twin: pipeline decode time serialized through one service
+    queue per OSD, so scan contention shows up in wall clock (and in
+    ``Fabric.queue_wait_s``) — cache hits skip the queue entirely.
+    ``cache_bytes`` bounds this OSD's :class:`ResultCache` (0 disables).
     """
 
-    def __init__(self, osd_id: str, disk_bw: float | None = None):
+    def __init__(self, osd_id: str, disk_bw: float | None = None, *,
+                 scan_bw: float | None = None, cache_bytes: int = 0):
         self.osd_id = osd_id
         self.data: dict[str, bytes] = {}
         self.xattrs: dict[str, dict] = {}
         self.latency_s: float = 0.0
         self.disk_bw = disk_bw
+        self.scan_bw = scan_bw
+        self.cache = ResultCache(cache_bytes)
+        self._service = threading.Lock()  # modeled scan service queue
         self.lock = threading.Lock()
         # request-entry fault hook (core.faults.FaultInjector): fires
         # once per client request served by this OSD, may sleep (slow
@@ -315,6 +353,8 @@ class OSD:
             xattr = self.xattrs.pop(name, None)
             if blob is not None:
                 self.quarantine[name] = (blob, xattr or {})
+        # a quarantined copy must never be served, cached forms included
+        self.cache.invalidate(name)
 
     def _verify_copy(self, name: str, blob: bytes) -> CorruptObject | None:
         """Digest-check one local copy before serving it.  A copy whose
@@ -339,6 +379,7 @@ class OSD:
             self.data[name] = bytes(blob)
             if xattr is not None:
                 self.xattrs[name] = dict(xattr)
+        self.cache.invalidate(name)  # rewrite: cached forms are stale
 
     def put_batch(self, items: Sequence[tuple[str, bytes, dict | None]],
                   stream: Callable[[int], None] | None = None,
@@ -368,6 +409,7 @@ class OSD:
                 self.data[name] = bytes(blob)
                 if xattr is not None:
                     self.xattrs[name] = dict(xattr)
+            self.cache.invalidate(name)  # rewrite: cached forms stale
             if landed is not None:
                 landed(k)
 
@@ -413,36 +455,126 @@ class OSD:
                 "xattr, written by the VOL write path) to resolve")
         return resolve_row_slice(ops, ext, clamp=clamp)
 
-    def _resolved_batch(self, name: str, ops: list[ObjOp],
-                        clamp: bool = False) -> list[ObjOp] | None:
-        """``_resolved`` for the batched planes: a copy whose xattr is
-        gone entirely (a TORN write — blob landed, metadata did not)
-        cannot resolve a row slice and is quarantined as divergent
-        instead of poisoning the whole batch; the single-object path
-        keeps the loud ValueError (a bare blob there is caller
-        misuse)."""
-        try:
-            return self._resolved(name, ops, clamp=clamp)
-        except ValueError:
-            with self.lock:
-                torn = self.xattrs.get(name) is None
-            if not torn:
-                raise
-            self._quarantine_copy(name)
-            raise CorruptObject(
-                f"{name} on {self.osd_id}: torn write (blob landed, "
-                "xattr missing) cannot serve a row slice") from None
-
-    def _serve_copy(self, name: str) -> bytes | Exception | None:
-        """Fetch one local copy for a batched request: the blob when it
-        exists and digest-verifies, the :class:`CorruptObject` when it
-        diverges (the copy is quarantined), None when absent here."""
+    def _snapshot_copy(
+            self, name: str) -> tuple[bytes | None, dict | None]:
+        """One local copy AND its xattr under a single lock acquisition
+        — the batched serve plane works from this snapshot so a
+        concurrent writer can never pair one version's blob with
+        another version's extent/digest mid-request."""
         with self.lock:
             blob = self.data.get(name)
+            x = self.xattrs.get(name)
+            return blob, (dict(x) if x is not None else None)
+
+    def _pay_service(self, nbytes: int, meters: dict) -> None:
+        """Pay the modeled decode service for one scanned blob: decode
+        time (``nbytes / scan_bw``) serialized through this OSD's one
+        service queue.  Time spent blocked behind other scans is the
+        request's queue wait; cache hits never call this — skipping the
+        queue is the latency win the serve plane buys."""
+        if not self.scan_bw or nbytes <= 0:
+            return
+        t0 = time.perf_counter()
+        with self._service:
+            meters["queue_wait_s"] += time.perf_counter() - t0
+            time.sleep(nbytes / self.scan_bw)
+
+    def _decoded_table(self, name: str, version, blob: bytes,
+                       resolved: list[ObjOp],
+                       meters: dict) -> tuple[dict, int]:
+        """The decoded column table a pipeline needs, through the
+        decode-level cache (shared across pipelines that read the same
+        columns).  Returns ``(table, scanned_bytes)`` — 0 scanned when
+        the decode was elided (no storage bytes were read)."""
+        key = None
+        if self.cache.capacity > 0 and version is not None:
+            cols = required_columns(resolved)
+            key = (name, int(version), "cols",
+                   tuple(cols) if cols is not None else None)
+            got = self.cache.get(key)
+            if got is not _MISS:
+                return got, 0
+        self._pay_service(len(blob), meters)
+        table = decode_pipeline(blob, resolved)
+        if key is not None:
+            ev, ins = self.cache.put(key, table, _result_nbytes(table))
+            meters["cache_evictions"] += ev
+            meters["cache_bytes"] += ins
+        return table, len(blob)
+
+    def _serve_item(self, name: str, ops: list[ObjOp], kind: str,
+                    dig: str | None, meters: dict, *,
+                    clamp: bool = False,
+                    encode: bool = True) -> tuple[str, Any, int]:
+        """Serve one item of a batched objclass request through the
+        result cache.  Returns ``(status, payload, scanned_bytes)``
+        with status one of ``"ok"`` (payload = pipeline result),
+        ``"missing"`` (absent here), ``"corrupt"`` (payload = the
+        :class:`CorruptObject`; the copy is quarantined), or ``"skip"``
+        (row slice provably disjoint — prune-equivalent).
+
+        ``kind`` namespaces the result-cache key per response mode
+        (plain/combine/concat clamp and encode differently, so one
+        pipeline digest can map to different payloads).  Cached entries
+        are keyed by the snapshot's monotonic version: any write, heal,
+        or compaction bumps it, so an entry can never be served across
+        a version bump — and every entry was derived from a
+        digest-verified blob at insert time."""
+        blob, xattr = self._snapshot_copy(name)
         if blob is None:
-            return None
-        bad = self._verify_copy(name, blob)
-        return bad if bad is not None else blob
+            return "missing", None, 0
+        version = (xattr or {}).get("version")
+        key = None
+        if (self.cache.capacity > 0 and version is not None
+                and dig is not None):
+            key = (name, int(version), kind, dig)
+            got = self.cache.get(key)
+            if got is not _MISS:
+                meters["cache_hits"] += 1
+                return "ok", got, 0
+        # miss: digest-verify THIS snapshot's blob, resolve any row
+        # slice against the SAME snapshot's extent, then decode
+        want = (xattr or {}).get("digest")
+        if want is not None and content_digest(blob) != int(want):
+            self._quarantine_copy(name)
+            return "corrupt", CorruptObject(
+                f"{name} on {self.osd_id}: stored bytes diverge from "
+                "stamped digest"), 0
+        if has_row_slice(ops):
+            r = (xattr or {}).get("rows")
+            if r is None:
+                if xattr is None:  # TORN write: blob landed, xattr not
+                    self._quarantine_copy(name)
+                    return "corrupt", CorruptObject(
+                        f"{name} on {self.osd_id}: torn write (blob "
+                        "landed, xattr missing) cannot serve a row "
+                        "slice"), 0
+                raise ValueError(  # bare extent-less xattr: caller misuse
+                    f"{name}: row_slice needs the object's extent "
+                    "('rows' xattr, written by the VOL write path) to "
+                    "resolve")
+            resolved = resolve_row_slice(
+                ops, (int(r[0]), int(r[1])), clamp=clamp)
+            if resolved is None:
+                return "skip", None, 0
+        else:
+            resolved = ops
+        if resolved and resolved[0].name == "select_packed":
+            # packed row-copy works on the raw blob — no decoded table
+            # to share, so it bypasses the decode-level cache
+            self._pay_service(len(blob), meters)
+            result = run_pipeline(blob, resolved, encode=encode)
+            scanned = len(blob)
+        else:
+            table, scanned = self._decoded_table(
+                name, version, blob, resolved, meters)
+            result = apply_pipeline(table, resolved, encode=encode)
+        if key is not None:
+            meters["cache_misses"] += 1
+            ev, ins = self.cache.put(key, result, _result_nbytes(result))
+            meters["cache_evictions"] += ev
+            meters["cache_bytes"] += ins
+        return "ok", result, scanned
 
     def _prunes_locally(self, name: str, prune) -> bool:
         """Pushed-down prune: does this object's CURRENT local zone map
@@ -502,6 +634,16 @@ class OSD:
         missing_names, pruned_names, corrupt_names)`` — the table-out
         half of the same symmetry, bounding per-OSD response framing at
         one frame.
+
+        Every response additionally carries a trailing serve-meters
+        dict (``_serve_meters()``): per-request cache hit/miss/eviction
+        and queue-wait deltas, folded into the fabric by the client
+        thread that issued the call.  Results are served through this
+        OSD's :class:`ResultCache` when it is enabled — a hit skips
+        digest re-verification, decode, AND the modeled service queue
+        (the entry was derived from a digest-verified blob at the same
+        monotonic version, so the bytes are provably identical), and
+        reports 0 scanned bytes because no storage bytes were read.
         """
         if combine and concat:
             raise ValueError("combine and concat are exclusive")
@@ -514,26 +656,34 @@ class OSD:
                   norm[id(ops)] if id(ops) in norm
                   else norm.setdefault(id(ops), normalize_exprs(ops)))
                  for name, ops in items]
+        meters = _serve_meters()
+        # one digest per distinct pipeline object (shared pipelines are
+        # common: combine/concat batches reuse ONE list for all items)
+        digs: dict[int, str] = {}
+
+        def dig_of(ops: list[ObjOp]) -> str | None:
+            if self.cache.capacity <= 0:
+                return None  # cache off: skip the hashing entirely
+            d = digs.get(id(ops))
+            if d is None:
+                d = digs.setdefault(id(ops), pipeline_digest(ops))
+            return d
+
         if not combine and not concat:
             if prune is not None:
                 raise ValueError("prune needs combine or concat "
                                  "(plain batch responses are positional)")
             out: list[Any] = []
             for name, ops in items:
-                blob = self._serve_copy(name)
-                if blob is None:
+                status, payload, scanned = self._serve_item(
+                    name, ops, "plain", dig_of(ops), meters, clamp=True)
+                if status == "missing":
                     out.append(ObjectNotFound(name))
-                elif isinstance(blob, Exception):
-                    out.append(blob)  # divergent copy: per-item failover
-                else:
-                    try:
-                        out.append((run_pipeline(
-                            blob,
-                            self._resolved_batch(name, ops, clamp=True)),
-                            len(blob)))
-                    except CorruptObject as e:  # torn under a row slice
-                        out.append(e)
-            return out
+                elif status == "corrupt":
+                    out.append(payload)  # quarantined: per-item failover
+                else:  # "skip" cannot happen under clamp=True
+                    out.append((payload, scanned))
+            return out, meters
 
         pruned: list[str] = []
         missing: list[str] = []
@@ -547,32 +697,29 @@ class OSD:
                 if self._prunes_locally(name, prune):
                     pruned.append(name)
                     continue
-                blob = self._serve_copy(name)
-                if blob is None:  # absent HERE: registers as missing
-                    missing.append(name)  # (replica failover), even if
-                    continue  # a row slice might also have skipped it
-                if isinstance(blob, Exception):
+                status, out, nb = self._serve_item(
+                    name, ops, "concat", dig_of(ops), meters,
+                    encode=False)
+                if status == "missing":  # absent HERE: registers as
+                    missing.append(name)  # missing (replica failover),
+                    continue  # even if a row slice might have skipped it
+                if status == "corrupt":
                     corrupt.append(name)  # quarantined: replica failover
                     continue
-                try:
-                    resolved = self._resolved_batch(name, ops)
-                except CorruptObject:
-                    corrupt.append(name)
-                    continue
-                if resolved is None:  # row slice disjoint: no rows here
+                if status == "skip":  # row slice disjoint: no rows here
                     pruned.append(name)
                     continue
-                out = run_pipeline(blob, resolved, encode=False)
                 if not isinstance(out, dict) or (
                         ops and not _impl(ops[-1].name).table_out):
                     raise ValueError("concat needs table-out pipelines")
-                scanned += len(blob)
+                scanned += nb
                 tables.append(out)
                 served.append(k)
                 counts.append(table_n_rows(out))
             frame = concat_encode(tables) if tables else None
             return (frame, tuple(served), tuple(counts), scanned,
-                    tuple(missing), tuple(pruned), tuple(corrupt))
+                    tuple(missing), tuple(pruned), tuple(corrupt),
+                    meters)
 
         ops = items[0][1]
         partials: list[Any] = []
@@ -580,26 +727,22 @@ class OSD:
             if self._prunes_locally(name, prune):
                 pruned.append(name)
                 continue
-            blob = self._serve_copy(name)
-            if blob is None:  # absent HERE: missing (replica failover)
+            status, partial, nb = self._serve_item(
+                name, ops, "combine", dig_of(ops), meters)
+            if status == "missing":  # absent HERE: replica failover
                 missing.append(name)
                 continue
-            if isinstance(blob, Exception):
+            if status == "corrupt":
                 corrupt.append(name)  # quarantined: replica failover
                 continue
-            try:
-                resolved = self._resolved_batch(name, ops)
-            except CorruptObject:
-                corrupt.append(name)
-                continue
-            if resolved is None:  # row slice disjoint: no rows here
+            if status == "skip":  # row slice disjoint: no rows here
                 pruned.append(name)
                 continue
-            partials.append(run_pipeline(blob, resolved))
-            scanned += len(blob)
+            partials.append(partial)
+            scanned += nb
         merged = merge_partials(ops, partials) if partials else None
         return (merged, len(partials), scanned, tuple(missing),
-                tuple(pruned), tuple(corrupt))
+                tuple(pruned), tuple(corrupt), meters)
 
     def list_xattrs(self, names: Sequence[str]) -> dict[str, dict]:
         """One batched metadata request: the xattrs of every local object
@@ -635,6 +778,8 @@ class ObjectStore:
     def __init__(self, cluster: ClusterMap, *,
                  client_bw: float | None = None,
                  disk_bw: float | None = None,
+                 scan_bw: float | None = None,
+                 cache_bytes: int = 0,
                  replication: str = "chain",
                  retry: RetryPolicy | None = None):
         if replication not in ("chain", "fanout"):
@@ -643,6 +788,11 @@ class ObjectStore:
         self.cluster = cluster
         self.client_bw = client_bw
         self.disk_bw = disk_bw
+        # serve-plane knobs (per OSD): modeled scan/decode bandwidth
+        # and the result-cache byte bound — 0 disables caching, which
+        # is the default so cold stores pay nothing
+        self.scan_bw = scan_bw
+        self.cache_bytes = int(cache_bytes or 0)
         self.replication = replication
         # transient-fault budget for every client request (see
         # RetryPolicy); injectable per store so tests/benchmarks can
@@ -651,8 +801,10 @@ class ObjectStore:
         # the attached FaultInjector (core.faults), if any — kept here
         # so fail_osd/add_osds re-wire replacement OSD objects to it
         self.faults = None
-        self.osds: dict[str, OSD] = {o: OSD(o, disk_bw)
-                                     for o in cluster.osds}
+        self.osds: dict[str, OSD] = {
+            o: OSD(o, disk_bw, scan_bw=scan_bw,
+                   cache_bytes=self.cache_bytes)
+            for o in cluster.osds}
         self.fabric = Fabric()
         self._lock = threading.Lock()
         self._nic = threading.Lock()
@@ -678,6 +830,9 @@ class ObjectStore:
         # streams stay O(window); per-call, so concurrent writers
         # should read it between their own calls)
         self.last_put_ledger_peak_bytes = 0
+        # the window-size trajectory of the most recent adaptive
+        # put_batch (one entry per retarget) — same per-call caveat
+        self.last_adaptive_windows: tuple[int, ...] = ()
 
     def close(self) -> None:
         self._pool.shutdown(wait=False)
@@ -699,11 +854,23 @@ class ObjectStore:
         self.fabric.ops += 1
         self.fabric.overhead_bytes += PER_REQUEST_OVERHEAD_BYTES
 
+    def _apply_meters(self, m: dict) -> None:
+        """Fold one batched response's serve meters into the fabric —
+        always on the client thread that issued the request (the OSD
+        serve path may have run on a pool worker, which never touches
+        fabric counters)."""
+        f = self.fabric
+        f.cache_hits += m["cache_hits"]
+        f.cache_misses += m["cache_misses"]
+        f.cache_evictions += m["cache_evictions"]
+        f.cache_bytes += m["cache_bytes"]
+        f.queue_wait_s += m["queue_wait_s"]
+
     def io_simulated(self) -> bool:
         """True when requests actually *wait* (NIC/disk bandwidth or OSD
         latency is modeled).  Only then is thread fan-out worth it —
         pure in-process compute runs faster sequentially (GIL)."""
-        return bool(self.client_bw or self.disk_bw
+        return bool(self.client_bw or self.disk_bw or self.scan_bw
                     or any(o.latency_s for o in self.osds.values()))
 
     def default_window_bytes(self) -> int | None:
@@ -944,7 +1111,7 @@ class ObjectStore:
     def put_batch(self, names: Iterable[str],
                   blobs: Iterable[bytes | tuple[bytes, dict | None]],
                   xattrs: Sequence[dict | None] | None = None, *,
-                  window_bytes: int | None = None,
+                  window_bytes: int | str | None = None,
                   window_objects: int | None = None) -> list[int]:
         """Batched replicated write: ONE client request per primary OSD.
 
@@ -985,6 +1152,18 @@ class ObjectStore:
         ``persisted`` lists those (name, version) pairs so the caller
         can reconcile — unlike the buffered path, which validates
         before writing anything.
+
+        ``window_bytes="adaptive"`` sizes the window from the observed
+        encode-rate/NIC-rate ratio: each flushed window's encode time
+        retargets the next as ``W_next = W * encode_rate / client_bw``
+        (clamped to ``ADAPTIVE_WINDOW_FLOOR``..``ADAPTIVE_WINDOW_CAP``)
+        so the encoder stays exactly one window ahead of the NIC — a
+        fast encoder gets big windows (less flush overhead), a slow one
+        small windows (the NIC never starves).  Starts at the static
+        8 MB ``DEFAULT_WINDOW_BYTES``, which is also the unconditional
+        fallback when ``client_bw`` is unset (no NIC rate to target).
+        The retarget trajectory is recorded in
+        ``last_adaptive_windows``.
 
         Every object's xattr is stamped with a fresh monotonic
         ``version`` tag; the per-object versions are returned (in input
@@ -1172,11 +1351,19 @@ class ObjectStore:
                         return out
                     out.extend((i, e) for i in grp)
 
+        # adaptive mode: start at the static default and retarget per
+        # flushed window from the measured encode rate (see put_batch)
+        adaptive = window_bytes == "adaptive"
+        if adaptive:
+            window_bytes = DEFAULT_WINDOW_BYTES
+        trajectory: list[int] = []
+
         win: dict[str, list[int]] = {}
         win_nbytes = win_nobjs = 0
+        enc_s = 0.0  # encode seconds spent on the CURRENT window
 
         def flush() -> None:
-            nonlocal win_nbytes, win_nobjs
+            nonlocal win_nbytes, win_nobjs, enc_s
             for osd_id, idxs in sorted(win.items()):
                 if osd_id not in streams:
                     q: _queue.Queue = _queue.Queue(maxsize=8)
@@ -1187,6 +1374,20 @@ class ObjectStore:
                 self.fabric.stream_windows += 1
             win.clear()
             win_nbytes = win_nobjs = 0
+            enc_s = 0.0
+
+        def retarget() -> None:
+            # keep the encoder exactly one window ahead: the next
+            # window should take as long to ENCODE as this one takes
+            # the NIC to DRAIN -> W_next = W * enc_rate / nic_rate
+            nonlocal window_bytes
+            if not (adaptive and self.client_bw and win_nbytes):
+                return
+            enc_rate = win_nbytes / max(enc_s, 1e-9)
+            window_bytes = int(min(ADAPTIVE_WINDOW_CAP, max(
+                ADAPTIVE_WINDOW_FLOOR,
+                win_nbytes * enc_rate / self.client_bw)))
+            trajectory.append(window_bytes)
 
         overlap = 0.0
         mismatch: str | None = None
@@ -1202,8 +1403,10 @@ class ObjectStore:
                     mismatch = (f"{len(names)} names but the blob "
                                 f"producer ended at {i}")
                     break
+                dt = time.perf_counter() - t0
                 if streams:  # encode time hidden behind an active stream
-                    overlap += time.perf_counter() - t0
+                    overlap += dt
+                enc_s += dt
                 blob, x = item if isinstance(item, tuple) \
                     else (item, xattrs[i])
                 blob = bytes(blob)
@@ -1215,6 +1418,7 @@ class ObjectStore:
                 win_nobjs += 1
                 if (window_bytes and win_nbytes >= window_bytes) or \
                         (window_objects and win_nobjs >= window_objects):
+                    retarget()
                     flush()
             else:
                 flush()
@@ -1244,6 +1448,8 @@ class ObjectStore:
                     self.fabric.client_tx += ledger.sizes[i]
                     landed.append(i)
         self.fabric.overlap_s += overlap
+        if adaptive:
+            self.last_adaptive_windows = tuple(trajectory)
         if mismatch is not None:
             landed.sort()
             raise PartialWriteError(
@@ -1427,6 +1633,8 @@ class ObjectStore:
                 return e
 
         def handle(idxs, got, last_err):
+            got, meters = got
+            self._apply_meters(meters)
             group_rx = 0
             retry = []
             emitted = []
@@ -1517,7 +1725,8 @@ class ObjectStore:
                 return e
 
         def handle(idxs, got, last_err):
-            merged, _, scanned, missing, pruned, corrupt = got
+            merged, _, scanned, missing, pruned, corrupt, meters = got
+            self._apply_meters(meters)
             self.fabric.local_bytes += scanned
             self.fabric.corruptions_detected += len(corrupt)
             emitted = []
@@ -1612,7 +1821,9 @@ class ObjectStore:
                 return e
 
         def handle(idxs, got, last_err):
-            blob, served, counts, scanned, missing, pruned, corrupt = got
+            (blob, served, counts, scanned, missing, pruned, corrupt,
+             meters) = got
+            self._apply_meters(meters)
             self.fabric.local_bytes += scanned
             self.fabric.corruptions_detected += len(corrupt)
             emitted = []
@@ -1639,6 +1850,7 @@ class ObjectStore:
             with osd.lock:
                 osd.data.pop(name, None)
                 osd.xattrs.pop(name, None)
+            osd.cache.invalidate(name)
 
     def exists(self, name: str) -> bool:
         for o in self.cluster.up_osds:
@@ -1710,7 +1922,9 @@ class ObjectStore:
         """Disk loss: data gone, OSD marked down, epoch bumped."""
         old = self.cluster
         self.cluster = old.mark_down(osd_id)
-        self.osds[osd_id] = OSD(osd_id, self.disk_bw)  # data destroyed
+        self.osds[osd_id] = OSD(  # data destroyed (cache with it)
+            osd_id, self.disk_bw, scan_bw=self.scan_bw,
+            cache_bytes=self.cache_bytes)
         if self.faults is not None:  # keep the injector wired to the
             self.faults.attach_osd(self.osds[osd_id])  # replacement OSD
 
@@ -1718,7 +1932,8 @@ class ObjectStore:
         ids = list(ids)
         self.cluster = self.cluster.add_osds(ids)
         for i in ids:
-            self.osds[i] = OSD(i, self.disk_bw)
+            self.osds[i] = OSD(i, self.disk_bw, scan_bw=self.scan_bw,
+                               cache_bytes=self.cache_bytes)
             if self.faults is not None:
                 self.faults.attach_osd(self.osds[i])
 
@@ -1880,6 +2095,9 @@ class ObjectStore:
             "osd_bytes": {o: self.osds[o].nbytes()
                           for o in self.cluster.osds},
             "n_objects": len(self.list_objects()),
+            "cache_resident_bytes": {
+                o: self.osds[o].cache.resident_bytes
+                for o in self.cluster.osds},
         }
 
 
@@ -1902,9 +2120,12 @@ def _result_nbytes(result: Any) -> int:
 def make_store(n_osds: int, *, replicas: int = 3, n_pgs: int = 128,
                prefix: str = "osd", client_bw: float | None = None,
                disk_bw: float | None = None,
+               scan_bw: float | None = None,
+               cache_bytes: int = 0,
                replication: str = "chain",
                retry: RetryPolicy | None = None) -> ObjectStore:
     cm = ClusterMap(tuple(f"{prefix}.{i}" for i in range(n_osds)),
                     n_pgs=n_pgs, replicas=min(replicas, n_osds))
     return ObjectStore(cm, client_bw=client_bw, disk_bw=disk_bw,
+                       scan_bw=scan_bw, cache_bytes=cache_bytes,
                        replication=replication, retry=retry)

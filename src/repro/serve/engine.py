@@ -6,6 +6,15 @@ then decode runs lockstep for all slots with per-slot stop handling.
 Session state (the KV cache) can be parked to / revived from the object
 store between turns (``park_session`` / ``resume_session``), which is the
 serving-side payoff of KV-pages-as-objects.
+
+Serving also reads *data*: per-request feature/context lookups are
+analytics scans against the same store that holds the KV pages.  At
+high request fan-in those scans are massively redundant (every request
+for a hot entity re-scans the same hot objects), so the engine can
+attach a :class:`~repro.core.session.ScanSession` front-end
+(``attach_analytics``) and route lookups through it
+(``analytics``) — identical concurrent scans single-flight into one
+OSD round trip and the OSD-side result caches absorb the repeats.
 """
 
 from __future__ import annotations
@@ -17,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.session import ScanSession
 from repro.core.store import ObjectStore
 from repro.serve import kvcache
 
@@ -42,8 +52,28 @@ class ServeEngine:
         self.max_seq = max_seq
         self.greedy = greedy
         self.store = store
+        # hot-data serve plane: the analytics front-end for per-request
+        # feature/context scans (attach_analytics)
+        self.analytics_session: ScanSession | None = None
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------ data
+    def attach_analytics(self, vol, *,
+                         window_s: float = 0.0) -> ScanSession:
+        """Attach the analytics front-end: per-request scans issued via
+        ``analytics`` dedup through one shared :class:`ScanSession`
+        (single-flight + column coalescing) over ``vol``."""
+        self.analytics_session = ScanSession(vol, window_s=window_s)
+        return self.analytics_session
+
+    def analytics(self, scan) -> tuple[Any, dict]:
+        """Run one per-request analytics scan through the serve plane.
+        Falls back to a direct execution when no session is attached
+        (cold engines stay usable, they just skip the dedup layer)."""
+        if self.analytics_session is None:
+            return scan.execute()
+        return self.analytics_session.execute(scan)
 
     # ------------------------------------------------------------ batch
     def generate(self, reqs: list[Request]) -> list[Completion]:

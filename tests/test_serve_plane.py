@@ -1,0 +1,300 @@
+"""Hot-data serve plane: OSD result caches (coherence, LRU bound,
+meters), ScanSession single-flight/coalescing, the modeled service
+queue, and adaptive put_batch windows.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (Column, FaultInjector, GlobalVOL, LogicalDataset,
+                        PartitionPolicy, ScanSession, make_store)
+from repro.core import objclass as oc
+from repro.core.cache import _MISS, ResultCache
+from repro.core.store import (ADAPTIVE_WINDOW_CAP, ADAPTIVE_WINDOW_FLOOR,
+                              DEFAULT_WINDOW_BYTES)
+
+
+def make_world(n=4000, n_osds=4, replicas=2, seed=0, obj_kb=8, **store_kw):
+    rng = np.random.default_rng(seed)
+    ds = LogicalDataset(
+        "t", (Column("x", "float64"), Column("y", "int32")), n, 64)
+    store = make_store(n_osds, replicas=replicas, **store_kw)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=obj_kb << 10,
+                                          max_object_bytes=obj_kb << 13))
+    table = {"x": rng.normal(size=n),
+             "y": rng.integers(0, 1000, n).astype(np.int32)}
+    vol.write(omap, table)
+    return store, vol, omap, table
+
+
+# ------------------------------------------------------------ LRU unit
+def test_result_cache_lru_byte_bound_and_name_index():
+    c = ResultCache(100)
+    assert c.put(("a", 1, "p"), "v1", 60) == (0, 60)
+    assert c.put(("b", 1, "p"), "v2", 30) == (0, 30)
+    assert c.get(("a", 1, "p")) == "v1"  # refresh a -> MRU
+    evicted, nb = c.put(("c", 1, "p"), "v3", 40)  # evicts LRU = b
+    assert (evicted, nb) == (1, 40)
+    assert c.get(("b", 1, "p")) is _MISS
+    assert c.get(("a", 1, "p")) == "v1"
+    assert c.resident_bytes <= 100
+    # over-capacity value refused, cache NOT flushed for it
+    assert c.put(("d", 1, "p"), "huge", 101) == (0, 0)
+    assert len(c) == 2
+    # name index: invalidate drops every entry for that object
+    c.put(("a", 2, "q"), "v4", 10)  # evicts c (LRU after a's refresh)
+    assert c.get(("c", 1, "p")) is _MISS
+    assert c.entries_for("a") == 2
+    assert c.invalidate("a") == 2
+    assert c.entries_for("a") == 0 and c.get(("a", 1, "p")) is _MISS
+    assert len(c) == 0 and c.resident_bytes == 0
+
+
+def test_result_cache_capacity_zero_disables():
+    c = ResultCache(0)
+    assert c.put(("a", 1, "p"), "v", 8) == (0, 0)
+    assert c.get(("a", 1, "p")) is _MISS and len(c) == 0
+
+
+# ----------------------------------------------------- serve-side cache
+def test_repeat_scan_hits_cache_and_skips_decode_bytes():
+    store, vol, omap, table = make_world(cache_bytes=8 << 20)
+    scan = vol.scan("t").filter("y", "<", 500).project("x")
+    cold, _ = scan.execute()
+    assert store.fabric.cache_misses > 0 and store.fabric.cache_hits == 0
+    scanned_cold = store.fabric.local_bytes
+    warm, _ = scan.execute()
+    assert np.array_equal(warm["x"], cold["x"])
+    assert store.fabric.cache_hits > 0
+    # hits skip the decode entirely: no new OSD-local bytes scanned
+    assert store.fabric.local_bytes == scanned_cold
+    assert store.fabric.cache_bytes > 0  # admitted payload was metered
+
+
+def test_cache_disabled_store_serves_identically_with_zero_counters():
+    plain = make_world(cache_bytes=0)
+    cached = make_world(cache_bytes=8 << 20)
+    for _ in range(2):  # repeat: second round hits on the cached store
+        for (store, vol, omap, table) in (plain, cached):
+            out, _ = vol.scan("t").filter("y", ">=", 100).project(
+                "x", "y").execute()
+            keep = table["y"] >= 100
+            assert np.array_equal(out["x"], table["x"][keep])
+            assert np.array_equal(out["y"], table["y"][keep])
+    assert plain[0].fabric.cache_hits == 0
+    assert plain[0].fabric.cache_misses == 0
+    assert plain[0].fabric.cache_bytes == 0
+    assert cached[0].fabric.cache_hits > 0
+
+
+def test_aggregate_and_concat_modes_cache_too():
+    store, vol, omap, table = make_world(cache_bytes=8 << 20)
+    for _ in range(2):
+        r, _ = vol.query(omap, [oc.op("agg", col="x", fn="sum")])
+        assert r == pytest.approx(table["x"].sum(), rel=1e-12)
+    assert store.fabric.cache_hits > 0
+    hits = store.fabric.cache_hits
+    for _ in range(2):
+        out, _ = vol.scan("t").project("y").execute()
+        assert np.array_equal(out["y"], table["y"])
+    assert store.fabric.cache_hits > hits
+
+
+# ------------------------------------------------------------ coherence
+def test_version_bump_never_serves_stale_bytes():
+    store, vol, omap, table = make_world(cache_bytes=8 << 20)
+    scan = vol.scan("t").project("x")
+    first, _ = scan.execute()
+    assert np.array_equal(first["x"], table["x"])
+    # rewrite the dataset in place: every object's version bumps and the
+    # write path drops its cache entries eagerly
+    table2 = {"x": table["x"] * -2.0 + 1.0, "y": table["y"]}
+    vol.write(omap, table2)
+    second, _ = scan.execute()
+    assert np.array_equal(second["x"], table2["x"])  # zero stale bytes
+    third, _ = scan.execute()  # and the NEW version is cached + correct
+    assert np.array_equal(third["x"], table2["x"])
+    assert store.fabric.cache_hits > 0
+
+
+def test_scrub_quarantine_invalidates_cached_entries():
+    store, vol, omap, table = make_world(cache_bytes=8 << 20)
+    vol.scan("t").project("x").execute()  # populate primary caches
+    fi = FaultInjector(store)
+    name = omap.object_names()[0]
+    hit = fi.flip_bits(name, osd_id=store.cluster.locate(name)[0],
+                       n_bits=3)
+    assert store.osds[hit].cache.entries_for(name) > 0  # stale entry...
+    store.scrub()
+    # ...dropped with the quarantined copy: the cache never outlives
+    # the digest-verified blob its entries were derived from
+    assert name in store.osds[hit].quarantine
+    assert store.osds[hit].cache.entries_for(name) == 0
+    out, _ = vol.scan("t").project("x").execute()
+    assert np.array_equal(out["x"], table["x"])
+
+
+def test_lru_byte_bound_holds_under_churn():
+    cap = 64 << 10  # far smaller than the dataset's decoded footprint
+    store, vol, omap, table = make_world(n=20_000, cache_bytes=cap)
+    for lo in range(0, 18_000, 1500):
+        vol.scan("t").filter("y", ">=", 0).rows(lo, lo + 2000).project(
+            "x", "y").execute()
+    assert store.fabric.cache_evictions > 0
+    for o, resident in store.stats()["cache_resident_bytes"].items():
+        assert resident <= cap, (o, resident)
+
+
+# ------------------------------------------------------- service queue
+def test_modeled_service_queue_meters_wait_under_contention():
+    store, vol, omap, table = make_world(cache_bytes=0, scan_bw=50e6)
+    scan = vol.scan("t").project("x")
+    bar = threading.Barrier(2)
+
+    def client():
+        bar.wait()
+        out, _ = scan.execute()
+        assert np.array_equal(out["x"], table["x"])
+
+    threads = [threading.Thread(target=client) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.fabric.queue_wait_s > 0  # second scan queued behind
+    # a cache hit skips the service queue: warm repeats add no wait
+    cached = make_world(cache_bytes=8 << 20, scan_bw=50e6)
+    cached[1].scan("t").project("x").execute()
+    waited = cached[0].fabric.queue_wait_s
+    cached[1].scan("t").project("x").execute()
+    assert cached[0].fabric.cache_hits > 0
+    assert cached[0].fabric.queue_wait_s == waited
+
+
+# ------------------------------------------------------- single-flight
+def test_single_flight_fans_one_execution_out_bit_identically():
+    store, vol, omap, table = make_world(cache_bytes=0)
+    session = ScanSession(vol, window_s=0.05)
+    n = 6
+    results = [None] * n
+    bar = threading.Barrier(n)
+
+    def client(i):
+        bar.wait()
+        results[i], _ = session.execute(
+            vol.scan("t").filter("y", "<", 700).project("x"))
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert session.stats["executed"] == 1
+    assert session.stats["deduped"] == n - 1
+    expect = table["x"][table["y"] < 700]
+    for r in results:
+        assert np.array_equal(r["x"], expect)
+        # fan-out is by reference: every waiter sees the SAME array
+        assert r["x"] is results[0]["x"]
+
+
+def test_column_coalescing_widens_one_flight_and_slices_back():
+    store, vol, omap, table = make_world(cache_bytes=0)
+    session = ScanSession(vol, window_s=0.05)
+    cols = ("x", "y", "x", "y")
+    results = [None] * len(cols)
+    bar = threading.Barrier(len(cols))
+
+    def client(i):
+        bar.wait()
+        results[i], _ = session.execute(
+            vol.scan("t").filter("y", ">=", 250).project(cols[i]))
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(len(cols))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert session.stats["executed"] == 1
+    assert session.stats["coalesced"] >= 1
+    keep = table["y"] >= 250
+    for i, c in enumerate(cols):
+        assert set(results[i]) == {c}  # exactly the requested columns
+        assert np.array_equal(results[i][c], table[c][keep])
+
+
+def test_session_sequential_scans_do_not_dedup():
+    store, vol, omap, table = make_world(cache_bytes=0)
+    session = ScanSession(vol)  # no admission window
+    for _ in range(3):
+        out, _ = session.execute(vol.scan("t").project("y"))
+        assert np.array_equal(out["y"], table["y"])
+    assert session.stats == {"admitted": 3, "executed": 3, "deduped": 0,
+                             "coalesced": 0, "solo": 0}
+
+
+def test_session_error_fans_out_to_every_waiter():
+    store, vol, omap, table = make_world(cache_bytes=0)
+    session = ScanSession(vol, window_s=0.05)
+    n = 4
+    errs = [None] * n
+    bar = threading.Barrier(n)
+
+    def client(i):
+        bar.wait()
+        try:
+            session.execute(vol.scan("t").filter("y", "<", 1).project(
+                "nope"))
+        except Exception as e:  # noqa: BLE001 — capturing for assert
+            errs[i] = e
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(e is not None for e in errs)
+    assert session.stats["executed"] == 1  # one failure, fanned out
+    # the session recovered: the flight was torn down, new scans lead
+    out, _ = session.execute(vol.scan("t").project("x"))
+    assert np.array_equal(out["x"], table["x"])
+
+
+# -------------------------------------------------- adaptive put windows
+def test_adaptive_windows_bit_exact_and_bounded():
+    rng = np.random.default_rng(3)
+    # > DEFAULT_WINDOW_BYTES of encoded rows so at least one ingest
+    # window fills and triggers a retarget
+    n = 1_200_000
+    ds = LogicalDataset(
+        "t", (Column("x", "float64"), Column("y", "int32")), n, 8192)
+    store = make_store(4, replicas=2, client_bw=200e6)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=256 << 10,
+                                          max_object_bytes=4 << 20))
+    table = {"x": rng.normal(size=n),
+             "y": rng.integers(0, 1000, n).astype(np.int32)}
+    vol.write(omap, table, window_bytes="adaptive")
+    traj = store.last_adaptive_windows
+    assert traj, "adaptive streaming recorded no retargeted windows"
+    assert all(ADAPTIVE_WINDOW_FLOOR <= w <= ADAPTIVE_WINDOW_CAP
+               for w in traj)
+    out, _ = vol.scan("t").project("x", "y").execute()
+    assert np.array_equal(out["x"], table["x"])
+    assert np.array_equal(out["y"], table["y"])
+
+
+def test_adaptive_falls_back_to_static_without_client_bw():
+    store, vol, omap, table = make_world(n=8000)  # client_bw unset
+    table2 = {"x": table["x"] + 1.0, "y": table["y"]}
+    vol.write(omap, table2, window_bytes="adaptive")
+    assert store.last_adaptive_windows == ()  # static 8 MB fallback
+    assert DEFAULT_WINDOW_BYTES == 8 << 20
+    out, _ = vol.scan("t").project("x").execute()
+    assert np.array_equal(out["x"], table2["x"])

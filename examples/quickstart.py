@@ -11,6 +11,10 @@
    (bounded-backoff retries; loud DataLossError when data is truly gone)
 6. train a tiny LM whose data path IS that object store (the loader's
    windowed fetch assembles early batches while slow OSDs still serve)
+7. (…and serve it hot: OSD result caches + single-flight sessions)
+8. slice an N-d array: numpy-style hyperslab selections resolved ON
+   the OSDs (chunked dataspaces, per-chunk zone-map pruning — wire
+   bytes track the selection, not the array)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -234,3 +238,35 @@ print(f"trained 20 steps off the object store "
       f"(loss {trainer.history[0]['loss']:.2f} -> "
       f"{trainer.history[-1]['loss']:.2f}); checkpoints are objects too: "
       f"{len(store.list_objects('ckpt/'))} stored")
+
+# -- 8. N-d arrays: hyperslab selection pushdown ---------------------------
+# scientific datasets are chunked N-d arrays, not tables.  A Dataspace
+# maps chunks onto objects; numpy-style selections compile to ONE
+# GLOBAL hyperslab op that every OSD resolves against its own 'chunks'
+# xattr (late binding — re-partition the array and compiled plans keep
+# serving correct cells), and a predicate prunes whole chunks from
+# per-chunk zone maps before any cell is decoded.
+from repro.core import Cmp, Dataspace
+
+cube = Dataspace(name="cube", shape=(64, 64, 32), dtype="float64",
+                 chunk=(16, 16, 8))
+field = rng.uniform(0.0, 1.0, cube.shape)
+field[:16, :16, :8] += 100.0                      # one hot corner
+cmap = vol.create_array(cube, PartitionPolicy(
+    target_object_bytes=256 << 10))
+vol.write_array(cmap, field)
+view = vol.array("cube")
+
+store.fabric.reset()
+sub = view[8:56:2, ::4, 5]                        # strided 2-d slice
+assert np.array_equal(sub, field[8:56:2, ::4, 5])
+print(f"hyperslab [8:56:2, ::4, 5]: {sub.size} cells in "
+      f"{store.fabric.rx_frames} framed responses, "
+      f"{store.fabric.client_rx} B on the wire "
+      f"(the full array is {field.nbytes} B)")
+
+store.fabric.reset()
+hot_cells = view.sel(np.s_[:, :, :], where=Cmp("data", ">", 50.0))
+print(f"where data>50: {store.fabric.chunks_pruned} cold chunks pruned "
+      f"ON the OSDs from per-chunk zone maps "
+      f"({store.fabric.xattr_ops} client zone-map round trips)")

@@ -24,10 +24,12 @@ Layering (bottom up):
 """
 
 from repro.core.expr import (  # noqa: F401
-    And, Between, Cmp, In, Not, Or, StrPrefix)
-from repro.core.logical import Column, LogicalDataset, RowRange  # noqa: F401
+    And, Between, Cmp, Const, In, Not, Or, StrPrefix, normalize)
+from repro.core.logical import (  # noqa: F401
+    Column, Dataspace, Hyperslab, LogicalDataset, RowRange)
 from repro.core.partition import (  # noqa: F401
-    ObjectMap, PartitionPolicy, plan_partition)
+    ArrayObjectMap, ObjectMap, PartitionPolicy, load_objmap,
+    plan_array_partition, plan_partition)
 from repro.core.placement import ClusterMap  # noqa: F401
 from repro.core.store import (  # noqa: F401
     CorruptObject, DataLossError, ObjectStore, PartialWriteError,
@@ -36,5 +38,5 @@ from repro.core.faults import FaultInjector  # noqa: F401
 from repro.core.cache import ResultCache  # noqa: F401
 from repro.core.scan import PhysicalPlan, Scan, ScanEngine  # noqa: F401
 from repro.core.session import ScanSession  # noqa: F401
-from repro.core.vol import GlobalVOL, LocalVOL  # noqa: F401
+from repro.core.vol import ArrayView, GlobalVOL, LocalVOL  # noqa: F401
 from repro.core.skyhook import Query, SkyhookDriver  # noqa: F401

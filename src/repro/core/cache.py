@@ -30,6 +30,28 @@ from typing import Any, Hashable
 _MISS = object()
 
 
+class Negative:
+    """A cached *negative* result: the object provably served NOTHING
+    for this key — missing from the store, disjoint from a resolved
+    row/hyperslab range, or zone-map pruned.  Cached under the same
+    ``(name, version, ...)`` keyed scheme as positive entries (so the
+    version-bump and eager-invalidation paths retire them identically),
+    it lets a repeat scan skip digest verification, op resolution, and
+    the service queue for objects that still have nothing to say.
+    ``reason`` is the disposition the original miss reported
+    ("missing" / "skipped" / "pruned") so the replay answers with the
+    same shape."""
+
+    __slots__ = ("reason",)
+    NBYTES = 64  # accounting charge per negative entry (tiny, not free)
+
+    def __init__(self, reason: str):
+        self.reason = reason
+
+    def __repr__(self):
+        return f"Negative({self.reason!r})"
+
+
 class ResultCache:
     """LRU mapping ``key -> value`` bounded by total payload bytes.
 
@@ -93,6 +115,10 @@ class ResultCache:
             keys.discard(key)
             if not keys:
                 del self._by_name[key[0]]
+
+    def put_negative(self, key: Hashable, reason: str) -> tuple[int, int]:
+        """Cache a nothing-to-serve disposition (see :class:`Negative`)."""
+        return self.put(key, Negative(reason), Negative.NBYTES)
 
     # ------------------------------------------------------------ drop
     def invalidate(self, name: str) -> int:

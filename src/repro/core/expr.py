@@ -133,6 +133,31 @@ class Expr:
 
 
 @dataclasses.dataclass(frozen=True)
+class Const(Expr):
+    """A constant predicate — the residue of constant folding.  True
+    matches every row (and never prunes); False matches none (and
+    soundly prunes ANY object, zone map or not)."""
+
+    value: bool
+
+    def mask(self, table):
+        n = 0
+        for v in table.values():
+            n = int(np.asarray(v).shape[0])
+            break
+        return np.full(n, bool(self.value), dtype=bool)
+
+    def prunes(self, zone_map):
+        return not self.value
+
+    def columns(self):
+        return frozenset()
+
+    def to_json(self):
+        return {"t": "const", "value": bool(self.value)}
+
+
+@dataclasses.dataclass(frozen=True)
 class Cmp(Expr):
     """``col <cmp> value`` — one :data:`CMP_TABLE` comparison."""
 
@@ -340,6 +365,7 @@ class Not(Expr):
 
 
 _FROM_JSON: dict[str, Callable[[dict], Expr]] = {
+    "const": lambda d: Const(bool(d["value"])),
     "cmp": lambda d: Cmp(d["col"], d["cmp"], d["value"]),
     "in": lambda d: In(d["col"], tuple(d["values"])),
     "between": lambda d: Between(d["col"], d["lo"], d["hi"]),
@@ -398,4 +424,171 @@ def conj_all(exprs: Iterable[Expr]) -> Expr | None:
     out: Expr | None = None
     for e in exprs:
         out = conj(out, e)
+    return out
+
+
+# --------------------------------------------------------------------------
+# normalization (prune-path rewriting)
+# --------------------------------------------------------------------------
+
+# each comparator's exact complement — the engine of De Morgan push-down
+_NEG_CMP = {"<": ">=", "<=": ">", ">": "<=", ">=": "<",
+            "==": "!=", "!=": "=="}
+
+# cmp -> (is_lower_bound, strict) for the interval-merging pass
+_BOUND = {">": (True, True), ">=": (True, False),
+          "<": (False, True), "<=": (False, False)}
+
+
+def normalize(e: Expr | None) -> Expr | None:
+    """Rewrite a tree into an equivalent, more prunable one:
+
+      * **De Morgan push-down** — ``Not`` sinks to the leaves, where it
+        dissolves into the complement comparator (``~(x < 5)`` becomes
+        ``x >= 5``); since ``Not`` never prunes but every comparator
+        does, a pushed-down tree prunes where the original could not;
+      * **constant folding** — empty ``In`` lists, inverted ``Between``
+        bounds, and dominated ``And``/``Or`` children collapse to
+        :class:`Const`;
+      * **same-column interval merging** — interval leaves on one
+        column inside a conjunction fuse into the tightest interval
+        (``x > 2 AND x > 5`` -> ``x > 5``; ``x > 5 AND x < 1`` ->
+        ``Const(False)``; closed bounds fuse into one ``Between``).
+
+    Caveats, by design: the rewrite assumes a total order on compared
+    values (predicates over NaN-holding float columns are not made
+    worse — merging skips non-finite constants — but NaN rows already
+    defeat zone pruning) and interval *contradiction* folding assumes
+    scalar per-row values (for multi-element rows the per-leaf
+    any-element reduction makes opposing bounds satisfiable, so the
+    scan layer only normalizes prune payloads over scalar zone
+    metadata, never evaluation filters)."""
+    if e is None:
+        return None
+    return _norm(e, neg=False)
+
+
+def _mergeable(v) -> bool:
+    if isinstance(v, bool):
+        return False  # bools order like ints but folding them is noise
+    if isinstance(v, (int, np.integer)):
+        return True
+    if isinstance(v, (float, np.floating)):
+        return bool(np.isfinite(v))
+    return isinstance(v, str)
+
+
+def _norm(e: Expr, neg: bool) -> Expr:
+    if isinstance(e, Const):
+        return Const(e.value != neg)
+    if isinstance(e, Cmp):
+        return Cmp(e.col, _NEG_CMP[e.cmp], e.value) if neg else e
+    if isinstance(e, Between):
+        try:
+            empty = e.lo > e.hi
+        except TypeError:
+            empty = False
+        if empty:
+            return Const(neg)
+        if neg:  # ~(lo <= x <= hi)  ==  x < lo OR x > hi
+            return Or((Cmp(e.col, "<", e.lo), Cmp(e.col, ">", e.hi)))
+        return e
+    if isinstance(e, In):
+        if not e.values:
+            return Const(neg)  # IN () matches nothing
+        return Not(e) if neg else e
+    if isinstance(e, Not):
+        return _norm(e.child, not neg)
+    if not isinstance(e, (And, Or)):       # StrPrefix, future leaves
+        return Not(e) if neg else e
+    is_and = isinstance(e, And) != neg     # De Morgan flips the node
+    flat: list[Expr] = []
+    for c in e.children:
+        k = _norm(c, neg)
+        if isinstance(k, And if is_and else Or):
+            flat.extend(k.children)
+        elif isinstance(k, Const):
+            if k.value != is_and:          # dominating constant
+                return Const(not is_and)
+        else:                              # identity constant: dropped
+            flat.append(k)
+    kids: list[Expr] = []
+    for k in flat:                         # dedup, order-preserving
+        if k not in kids:
+            kids.append(k)
+    if is_and:
+        kids = _merge_intervals(kids)
+        if kids is None:
+            return Const(False)
+    if not kids:
+        return Const(is_and)               # empty And ≡ True, Or ≡ False
+    if len(kids) == 1:
+        return kids[0]
+    return (And if is_and else Or)(tuple(kids))
+
+
+def _merge_intervals(kids: list[Expr]) -> list[Expr] | None:
+    """Fuse same-column interval leaves of a conjunction; None means a
+    provable contradiction (the conjunction is Const(False))."""
+    by_col: dict[str, list[Expr]] = {}
+    for k in kids:
+        if (isinstance(k, Cmp) and k.cmp in _BOUND
+                and _mergeable(k.value)) or \
+           (isinstance(k, Cmp) and k.cmp == "=="
+                and _mergeable(k.value)) or \
+           (isinstance(k, Between) and _mergeable(k.lo)
+                and _mergeable(k.hi)):
+            by_col.setdefault(k.col, []).append(k)
+    out: list[Expr] = []
+    done: set[int] = set()
+    for col, leaves in by_col.items():
+        if len(leaves) < 2:
+            continue  # nothing to fuse; leave the leaf in place
+        try:
+            fused = _fuse(col, leaves)
+        except TypeError:  # mixed value types: leave unmerged
+            continue
+        if fused is None:
+            return None
+        done.update(id(l) for l in leaves)
+        out.extend(fused)
+    return [k for k in kids if id(k) not in done] + out
+
+
+def _fuse(col: str, leaves: list[Expr]) -> list[Expr] | None:
+    lo = hi = None  # (value, strict)
+
+    def tighter_lo(a, b):
+        return b if a is None or b[0] > a[0] \
+            or (b[0] == a[0] and b[1] and not a[1]) else a
+
+    def tighter_hi(a, b):
+        return b if a is None or b[0] < a[0] \
+            or (b[0] == a[0] and b[1] and not a[1]) else a
+
+    for l in leaves:
+        if isinstance(l, Between):
+            lo = tighter_lo(lo, (l.lo, False))
+            hi = tighter_hi(hi, (l.hi, False))
+        elif l.cmp == "==":
+            lo = tighter_lo(lo, (l.value, False))
+            hi = tighter_hi(hi, (l.value, False))
+        else:
+            is_lo, strict = _BOUND[l.cmp]
+            if is_lo:
+                lo = tighter_lo(lo, (l.value, strict))
+            else:
+                hi = tighter_hi(hi, (l.value, strict))
+    if lo is not None and hi is not None:
+        if lo[0] > hi[0] or (lo[0] == hi[0] and (lo[1] or hi[1])):
+            return None  # empty interval: contradiction
+        if lo[0] == hi[0]:
+            return [Cmp(col, "==", lo[0])]
+        if not lo[1] and not hi[1]:
+            return [Between(col, lo[0], hi[0])]
+    out: list[Expr] = []
+    if lo is not None:
+        out.append(Cmp(col, ">" if lo[1] else ">=", lo[0]))
+    if hi is not None:
+        out.append(Cmp(col, "<" if hi[1] else "<=", hi[0]))
     return out

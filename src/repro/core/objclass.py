@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import expr as ex
 from repro.core import format as fmt
+from repro.core.logical import Dataspace, Hyperslab
 
 
 @dataclasses.dataclass(frozen=True)
@@ -353,6 +354,106 @@ def resolve_row_slice(ops: list[ObjOp], extent: tuple[int, int],
             lo = hi = s0
         out.append(op("select", rows=(lo - s0, hi - s0)))
     return out
+
+
+# ---- OSD-resolved N-d hyperslab selection (dataspace pushdown) ----
+
+
+def _hyperslab_unresolved(table, **_):
+    raise ValueError(
+        "hyperslab_slice carries a GLOBAL N-d selection; resolve it "
+        "against the object's chunk extent first (resolve_hyperslab — "
+        "on the OSD, from its own 'chunks' xattr)")
+
+
+def _hyperslab_local(table, space, sel, chunk_start, cids):
+    """Resolved executor: slice the selected cells out of this object's
+    stacked ``(k, *chunk)`` block.  Emits a two-column table — ``cells``
+    (the selected values, C-order per chunk piece) and ``chunk`` (the
+    global chunk id of each cell) — because the block format requires
+    equal-length columns; the client re-derives each piece's N-d
+    placement from (selection ∩ chunk slab), so chunk-id runs are the
+    only per-cell overhead on the wire.  Chunks are stored padded to the
+    full chunk shape; selections never reach the pad because the
+    intersection is clipped to the dataspace's logical shape."""
+    sp = Dataspace.from_json(space)
+    hs = Hyperslab.from_json(sel)
+    data = np.asarray(table["data"])
+    cells, ids = [], []
+    for local in cids:
+        cid = int(chunk_start) + int(local)
+        r = hs.intersect_slab(sp.chunk_slab(cid))
+        if r is None:
+            continue
+        locs, _offs, _counts = r
+        piece = data[local][tuple(slice(*l) for l in locs)]
+        cells.append(np.ascontiguousarray(piece).ravel())
+        ids.append(np.full(piece.size, cid, dtype=np.int32))
+    if cells:
+        return {"cells": np.concatenate(cells),
+                "chunk": np.concatenate(ids)}
+    return {"cells": np.zeros(0, dtype=np.dtype(sp.dtype)),
+            "chunk": np.zeros(0, dtype=np.int32)}
+
+
+register("hyperslab_slice", OpImpl(_hyperslab_unresolved, None,
+                                   decomposable=True))
+register("hyperslab_local", OpImpl(_hyperslab_local, None,
+                                   decomposable=True))
+
+
+def has_hyperslab(ops: list[ObjOp]) -> bool:
+    return any(o.name == "hyperslab_slice" for o in ops)
+
+
+def resolve_hyperslab(ops: list[ObjOp], chunks: tuple[int, int],
+                      chunk_zone_maps=None, where=None,
+                      clamp: bool = False
+                      ) -> tuple[list[ObjOp] | None, int]:
+    """Rewrite every ``hyperslab_slice`` op (GLOBAL N-d selection) into
+    this object's local ``hyperslab_local``, given the object's CURRENT
+    chunk extent ``[chunk_start, chunk_stop)`` — on the OSD from its own
+    ``chunks`` xattr, the same late-binding contract as
+    :func:`resolve_row_slice`, so a compiled plan keeps serving correct
+    cells after the array is re-chunked/re-partitioned under it.
+
+    ``chunk_zone_maps`` (per-LOCAL-chunk zone maps from the object's
+    xattrs, computed over UNPADDED chunk values) plus the request's
+    ``where`` prune expression drop whole chunks before any cell is
+    touched; the count of dropped chunks is returned so the serve layer
+    can meter OSD-side chunk pruning.  Returns ``(None, n_pruned)``
+    when the object serves no cells (disjoint selection, or every
+    intersecting chunk pruned) — a prune-equivalent skip — unless
+    ``clamp`` forces an empty result instead (positional responses)."""
+    pred = ex.ensure_pred(where)
+    out: list[ObjOp] = []
+    n_pruned = 0
+    served_any = False
+    for o in ops:
+        if o.name != "hyperslab_slice":
+            out.append(o)
+            continue
+        sp = Dataspace.from_json(o.params["space"])
+        hs = Hyperslab.from_json(o.params["sel"])
+        c0, c1 = int(chunks[0]), int(chunks[1])
+        cids = [cid for cid in sp.chunk_ids_overlapping(hs)
+                if c0 <= cid < c1]
+        if pred is not None and chunk_zone_maps is not None:
+            kept = []
+            for cid in cids:
+                zm = chunk_zone_maps[cid - c0]
+                if zm is not None and pred.prunes(zm):
+                    n_pruned += 1
+                else:
+                    kept.append(cid)
+            cids = kept
+        served_any = served_any or bool(cids)
+        out.append(op("hyperslab_local", space=o.params["space"],
+                      sel=o.params["sel"], chunk_start=c0,
+                      cids=[cid - c0 for cid in cids]))
+    if not served_any and not clamp:
+        return None, n_pruned
+    return out, n_pruned
 
 
 # --------------------------------------------------------------------------

@@ -24,7 +24,7 @@ import dataclasses
 import json
 from typing import Iterator
 
-from repro.core.logical import LogicalDataset, RowRange
+from repro.core.logical import Dataspace, Hyperslab, LogicalDataset, RowRange
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +130,101 @@ class ObjectMap:
         return ObjectMap.from_json(json.loads(b.decode()))
 
 
+@dataclasses.dataclass(frozen=True)
+class ArrayExtent:
+    """One object's slice of a chunked array: chunk ids
+    [chunk_start, chunk_stop) in row-major grid order."""
+
+    name: str
+    chunk_start: int
+    chunk_stop: int
+
+    def __len__(self) -> int:
+        return self.chunk_stop - self.chunk_start
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayObjectMap:
+    """Chunk-boundary index for an N-d Dataspace: object i covers chunk
+    ids [extents[i].chunk_start, extents[i].chunk_stop).  Same provenance
+    contract as ObjectMap: ``version`` is the store version of the
+    ``.objmap`` object this was read from, excluded from equality."""
+
+    space: Dataspace
+    extents: tuple[ArrayExtent, ...]
+    version: int = dataclasses.field(default=-1, compare=False)
+
+    def __post_init__(self):
+        prev = 0
+        for e in self.extents:
+            if e.chunk_start != prev:
+                raise ValueError(f"gap/overlap at chunk {prev} ({e})")
+            prev = e.chunk_stop
+        if self.extents and prev != self.space.n_chunks:
+            raise ValueError(f"coverage ends at chunk {prev} != "
+                             f"{self.space.n_chunks}")
+
+    @property
+    def n_objects(self) -> int:
+        return len(self.extents)
+
+    def lookup_chunks(self, cids: list[int]) -> list[tuple[ArrayExtent,
+                                                           list[int]]]:
+        """Objects holding any of the (sorted) chunk ids, with the ids
+        each object holds."""
+        out: list[tuple[ArrayExtent, list[int]]] = []
+        starts = [e.chunk_start for e in self.extents]
+        for cid in cids:
+            i = bisect.bisect_right(starts, cid) - 1
+            if not 0 <= i < len(self.extents):
+                continue
+            e = self.extents[i]
+            if not e.chunk_start <= cid < e.chunk_stop:
+                continue
+            if out and out[-1][0] is e:
+                out[-1][1].append(cid)
+            else:
+                out.append((e, [cid]))
+        return out
+
+    def lookup(self, hs: Hyperslab) -> list[tuple[ArrayExtent, list[int]]]:
+        return self.lookup_chunks(self.space.chunk_ids_overlapping(hs))
+
+    def object_names(self) -> list[str]:
+        return [e.name for e in self.extents]
+
+    def __iter__(self) -> Iterator[ArrayExtent]:
+        return iter(self.extents)
+
+    # ------------------------------------------------------------ (de)ser
+    def to_json(self) -> dict:
+        return {"kind": "array", "space": self.space.to_json(),
+                "extents": [[e.name, e.chunk_start, e.chunk_stop]
+                            for e in self.extents]}
+
+    @staticmethod
+    def from_json(d: dict) -> "ArrayObjectMap":
+        return ArrayObjectMap(
+            Dataspace.from_json(d["space"]),
+            tuple(ArrayExtent(n, a, b) for n, a, b in d["extents"]))
+
+    def to_bytes(self) -> bytes:
+        return json.dumps(self.to_json()).encode()
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "ArrayObjectMap":
+        return ArrayObjectMap.from_json(json.loads(b.decode()))
+
+
+def load_objmap(b: bytes) -> "ObjectMap | ArrayObjectMap":
+    """Deserialize a ``.objmap`` blob of either kind.  Table maps have no
+    "kind" field (back-compat with every already-stored map)."""
+    d = json.loads(b.decode())
+    if d.get("kind") == "array":
+        return ArrayObjectMap.from_json(d)
+    return ObjectMap.from_json(d)
+
+
 def objmap_key(dataset_name: str) -> str:
     return f"{dataset_name}/.objmap"
 
@@ -185,3 +280,23 @@ def plan_partition(ds: LogicalDataset,
     if not extents and ds.n_rows == 0:
         emit(0, 0)
     return ObjectMap(ds, tuple(extents))
+
+
+def plan_array_partition(
+        space: Dataspace,
+        policy: PartitionPolicy = PartitionPolicy()) -> ArrayObjectMap:
+    """Group row-major-consecutive chunks into objects of proper sizes —
+    the array twin of ``plan_partition`` with the chunk as the logical
+    unit.  A chunk is never split (it is the access/pruning granule), so
+    one oversized chunk makes a one-chunk object."""
+    cb = space.chunk_nbytes
+    per_obj = max(1, min(policy.target_object_bytes // cb,
+                         policy.max_object_bytes // cb) or 1)
+    extents: list[ArrayExtent] = []
+    c = 0
+    while c < space.n_chunks:
+        stop = min(c + per_obj, space.n_chunks)
+        extents.append(ArrayExtent(
+            f"{space.name}/obj.{len(extents):06d}", c, stop))
+        c = stop
+    return ArrayObjectMap(space, tuple(extents))

@@ -72,7 +72,8 @@ import numpy as np
 from repro.core import expr as ex
 from repro.core import format as fmt
 from repro.core import objclass as oc
-from repro.core.logical import RowRange, concat_tables
+from repro.core.logical import (Dataspace, Hyperslab, RowRange,
+                                concat_tables)
 from repro.core.partition import objmap_key
 
 EXEC_OSD_COMBINE = "osd-combine"
@@ -273,13 +274,19 @@ class PhysicalPlan:
     shards: tuple = ()               # ((osd_id, (name idx, ...)), ...)
     pushdown: bool = False           # pipeline ops run storage-side?
     approx_rewrite: bool = False
-    assemble: str = "table"          # "table" | "parts" (loader)
+    assemble: str = "table"          # "table" | "parts" (loader) |
+    #                                  "array" (N-d hyperslab result)
     access: str | None = None        # LocalVOL access-stats kind
     n_objects: int = 0               # dataset size before pruning
     omap_version: int = -1           # store version of the ObjectMap the
     #                                  plan compiled against (-1 unknown):
     #                                  row-sliced plans re-derive ``names``
     #                                  at execute time when the map moved
+    array_meta: Any = None           # hyperslab plans: {"space", "sel",
+    #                                  "squeeze", "fill"} — what client
+    #                                  assembly (and the targeting
+    #                                  refresh) needs to rebuild the N-d
+    #                                  result from chunk-id-tagged cells
 
 
 # --------------------------------------------------------------------------
@@ -459,6 +466,61 @@ class ScanEngine:
             omap_version=getattr(omap, "version", -1),
         )
 
+    def compile_hyperslab(self, amap, hs: Hyperslab, *, where=None,
+                          fill=0, prune: str = "auto") -> PhysicalPlan:
+        """Compile an N-d hyperslab selection over a chunked array map
+        (``partition.ArrayObjectMap``) into a ``hyperslab_slice``
+        pipeline on the server-concat plane.
+
+        The op carries only the plan-constant geometry (dataspace +
+        normalized selection); each OSD resolves it against its
+        objects' CURRENT ``chunks`` extent xattrs at execute time —
+        the same late-binding contract as ``row_slice``, so a compiled
+        plan keeps serving correct cells after the array is
+        re-partitioned.  ``where`` is a predicate over the cell values
+        (column name ``data``): it ships as the request's pushdown
+        prune tree (normalized — ``expr.normalize``) and each OSD drops
+        whole chunks against its per-chunk zone-map xattrs before any
+        cell moves; dropped chunks surface as ``fill`` in the assembled
+        result.  Zero client zone-map requests either way."""
+        if prune not in PRUNE_STRATEGIES:
+            raise ValueError(f"bad prune strategy {prune!r}; "
+                             f"known: {PRUNE_STRATEGIES}")
+        if prune == "client":
+            raise ValueError(
+                "hyperslab plans prune per chunk ON the OSDs (per-chunk "
+                "zone maps are storage-side state); use prune="
+                "'auto'/'pushdown'/'none'")
+        space = amap.space
+        pred = ex.normalize(ex.ensure_pred(where)) \
+            if prune != "none" else None
+        targets = amap.lookup(hs)
+        names = [e.name for e, _ in targets]
+        by_osd: dict[str, list[int]] = {}
+        cluster = self.vol.store.cluster
+        for i, n in enumerate(names):
+            by_osd.setdefault(cluster.primary(n), []).append(i)
+        ops = (oc.op("hyperslab_slice", space=space.to_json(),
+                     sel=hs.to_json()),)
+        return PhysicalPlan(
+            dataset=space.name,
+            exec_cls=EXEC_SERVER_CONCAT,
+            prune="pushdown" if pred is not None else "none",
+            names=tuple(names),
+            ops=ops,
+            exec_ops=ops,
+            predicates=pred,
+            shards=tuple(sorted(
+                (osd, tuple(idxs)) for osd, idxs in by_osd.items())),
+            pushdown=True,
+            assemble="array",
+            access="fetch",
+            n_objects=amap.n_objects,
+            omap_version=getattr(amap, "version", -1),
+            array_meta={"space": space.to_json(), "sel": hs.to_json(),
+                        "squeeze": tuple(hs.squeeze), "fill": fill},
+        )
+
     def compile_gather(self, names: Sequence[str],
                        pipelines: Sequence[Sequence[oc.ObjOp]],
                        packed: bool = False) -> PhysicalPlan:
@@ -488,7 +550,8 @@ class ScanEngine:
         map when the version moved."""
         if plan.omap_version < 0 or not plan.dataset \
                 or plan.exec_cls == EXEC_CLIENT_GATHER \
-                or not any(o.name == "row_slice" for o in plan.ops):
+                or not any(o.name in ("row_slice", "hyperslab_slice")
+                           for o in plan.ops):
             return plan
         hint_v = getattr(omap, "version", -1) if omap is not None else -1
         if hint_v == plan.omap_version:
@@ -504,6 +567,16 @@ class ScanEngine:
             return plan
         if fresh is None:
             fresh = self.vol.open(plan.dataset)
+        if plan.array_meta is not None:
+            # hyperslab plans re-target from the fresh chunk map; the
+            # predicate (already normalized at first compile) and fill
+            # ride along unchanged
+            return self.compile_hyperslab(
+                fresh, Hyperslab.from_json(plan.array_meta["sel"]),
+                where=plan.predicates,
+                fill=plan.array_meta.get("fill", 0),
+                prune=plan.prune if plan.predicates is not None
+                else "none")
         return self._compile(fresh, list(plan.ops),
                              prune=plan.prune, access=plan.access)
 
@@ -565,6 +638,9 @@ class ScanEngine:
             osd_pruned = list(pruned_src)
             if plan.assemble == "parts":
                 result = parts
+            elif plan.assemble == "array":
+                result = _assemble_array(plan, parts)
+                result_rows = int(result.size)
             else:
                 result = concat_tables(
                     [p for p in parts if p is not None])
@@ -686,6 +762,46 @@ def _place_frame(parts: list, frame: tuple) -> None:
     streaming consume."""
     for i, part in _iter_frame(frame):
         parts[i] = part
+
+
+def _assemble_array(plan: PhysicalPlan, parts: list) -> np.ndarray:
+    """Rebuild the dense N-d result of a hyperslab plan from the
+    per-object ``{"cells", "chunk"}`` tables the OSDs served.
+
+    Each object's cells arrive as C-order runs tagged with their global
+    chunk id; the client re-derives every run's placement from
+    (selection ∩ chunk slab) — the same arithmetic the OSD used to cut
+    the run — so no per-cell coordinates ever cross the wire.  Chunks
+    that are absent (pruned OSD-side by the predicate, or skipped
+    whole-object) stay at the plan's fill value."""
+    meta = plan.array_meta
+    sp = Dataspace.from_json(meta["space"])
+    hs = Hyperslab.from_json(meta["sel"])
+    out = np.full(hs.out_shape(), meta.get("fill", 0),
+                  dtype=np.dtype(sp.dtype))
+    for part in parts:
+        if part is None:
+            continue
+        cells = np.asarray(part["cells"])
+        cids = np.asarray(part["chunk"])
+        if cells.size == 0:
+            continue
+        # cells of one chunk are contiguous: split on chunk-id change
+        run_starts = np.flatnonzero(np.diff(cids)) + 1
+        bounds = [0, *run_starts.tolist(), len(cids)]
+        for s, e in zip(bounds[:-1], bounds[1:]):
+            hit = hs.intersect_slab(sp.chunk_slab(int(cids[s])))
+            if hit is None:
+                raise ValueError(
+                    f"{plan.dataset}: served chunk {int(cids[s])} is "
+                    "disjoint from the selection")
+            _locs, offs, counts = hit
+            out[tuple(slice(o, o + n)
+                      for o, n in zip(offs, counts))] = \
+                cells[s:e].reshape(counts)
+    if meta.get("squeeze"):
+        out = np.squeeze(out, axis=tuple(meta["squeeze"]))
+    return out
 
 
 def _result_rows(ops, result) -> int:

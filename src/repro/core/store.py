@@ -88,6 +88,8 @@ Self-healing plane (gray failures, not just fail-stop):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json as _json
 import queue as _queue
 import threading
 import time
@@ -97,13 +99,14 @@ from typing import Any, Callable, Iterable, Iterator, Sequence
 import numpy as np
 
 from repro.core import expr as ex
-from repro.core.cache import ResultCache, _MISS
+from repro.core.cache import Negative as _Negative, ResultCache, _MISS
 from repro.core.format import content_digest
 from repro.core.objclass import (
     ObjOp, apply_pipeline, concat_encode, decode_pipeline,
-    get_impl as _impl, has_row_slice, merge_partials, normalize_exprs,
-    pipeline_digest, pipeline_mergeable, required_columns,
-    resolve_row_slice, run_pipeline, table_n_rows, zone_map_prunes)
+    get_impl as _impl, has_hyperslab, has_row_slice, merge_partials,
+    normalize_exprs, pipeline_digest, pipeline_mergeable,
+    required_columns, resolve_hyperslab, resolve_row_slice,
+    run_pipeline, table_n_rows, zone_map_prunes)
 from repro.core.placement import ClusterMap, pg_delta
 
 # fixed cost modeled for one client<->OSD round trip (headers, framing,
@@ -166,6 +169,15 @@ class Fabric:
     #                             stats()["cache_resident_bytes"])
     queue_wait_s: float = 0.0   # time requests blocked behind another
     #                             scan in an OSD's modeled service queue
+    cache_neg_hits: int = 0     # nothing-to-serve answered from an OSD
+    #                             negative-cache entry (missing/skipped/
+    #                             pruned replays that bypassed the queue)
+    chunks_pruned: int = 0      # array chunks dropped OSD-side by
+    #                             per-chunk zone maps before any cell
+    #                             of the chunk was touched
+    replica_lat_s: float = 0.0  # modeled replication write latency
+    #                             (chain: per-hop, sequential; fan-out:
+    #                             one hop, parallel)
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -183,6 +195,8 @@ class Fabric:
         self.cache_hits = self.cache_misses = self.cache_evictions = 0
         self.cache_bytes = 0
         self.queue_wait_s = 0.0
+        self.cache_neg_hits = self.chunks_pruned = 0
+        self.replica_lat_s = 0.0
 
 
 def _serve_meters() -> dict:
@@ -191,7 +205,8 @@ def _serve_meters() -> dict:
     the response, and folded into the fabric by the CLIENT thread that
     issued the call — pool workers never touch fabric counters."""
     return {"cache_hits": 0, "cache_misses": 0, "cache_evictions": 0,
-            "cache_bytes": 0, "queue_wait_s": 0.0}
+            "cache_bytes": 0, "queue_wait_s": 0.0,
+            "neg_hits": 0, "chunks_pruned": 0}
 
 
 class OSDDown(RuntimeError):
@@ -504,8 +519,9 @@ class OSD:
 
     def _serve_item(self, name: str, ops: list[ObjOp], kind: str,
                     dig: str | None, meters: dict, *,
-                    clamp: bool = False,
-                    encode: bool = True) -> tuple[str, Any, int]:
+                    clamp: bool = False, encode: bool = True,
+                    prune=None, pdig: str | None = None
+                    ) -> tuple[str, Any, int]:
         """Serve one item of a batched objclass request through the
         result cache.  Returns ``(status, payload, scanned_bytes)``
         with status one of ``"ok"`` (payload = pipeline result),
@@ -519,12 +535,33 @@ class OSD:
         are keyed by the snapshot's monotonic version: any write, heal,
         or compaction bumps it, so an entry can never be served across
         a version bump — and every entry was derived from a
-        digest-verified blob at insert time."""
+        digest-verified blob at insert time.
+
+        ``prune`` (with its digest ``pdig``) is the request's pushdown
+        expression: a hyperslab pipeline resolves it against per-chunk
+        zone maps, so for those items it becomes part of the result's
+        identity — the cache key digest is extended with ``pdig`` and
+        the chunk-prune work is metered as ``chunks_pruned``.  A
+        nothing-to-serve outcome (absent object, disjoint slice, every
+        chunk pruned) is *negatively* cached under the same versioned
+        key scheme (version -1 for absence, retired by the eager
+        invalidation every write path performs), so a replay skips
+        digest verification and op resolution — metered ``neg_hits``."""
+        if prune is not None and dig is not None and has_hyperslab(ops):
+            dig = f"{dig}|{pdig}"  # result content depends on the prune
+        if self.cache.capacity > 0 and dig is not None:
+            got = self.cache.get((name, -1, kind + "#neg", dig))
+            if isinstance(got, _Negative):
+                meters["neg_hits"] += 1
+                return got.reason, None, 0
         blob, xattr = self._snapshot_copy(name)
         if blob is None:
+            if self.cache.capacity > 0 and dig is not None:
+                self.cache.put_negative(
+                    (name, -1, kind + "#neg", dig), "missing")
             return "missing", None, 0
         version = (xattr or {}).get("version")
-        key = None
+        key = negkey = None
         if (self.cache.capacity > 0 and version is not None
                 and dig is not None):
             key = (name, int(version), kind, dig)
@@ -532,6 +569,11 @@ class OSD:
             if got is not _MISS:
                 meters["cache_hits"] += 1
                 return "ok", got, 0
+            negkey = (name, int(version), kind + "#neg", dig)
+            got = self.cache.get(negkey)
+            if isinstance(got, _Negative):
+                meters["neg_hits"] += 1
+                return got.reason, None, 0
         # miss: digest-verify THIS snapshot's blob, resolve any row
         # slice against the SAME snapshot's extent, then decode
         want = (xattr or {}).get("digest")
@@ -556,9 +598,33 @@ class OSD:
             resolved = resolve_row_slice(
                 ops, (int(r[0]), int(r[1])), clamp=clamp)
             if resolved is None:
+                if negkey is not None:
+                    self.cache.put_negative(negkey, "skip")
                 return "skip", None, 0
         else:
             resolved = ops
+        if has_hyperslab(resolved):
+            ch = (xattr or {}).get("chunks")
+            if ch is None:
+                if xattr is None:  # TORN write: blob landed, xattr not
+                    self._quarantine_copy(name)
+                    return "corrupt", CorruptObject(
+                        f"{name} on {self.osd_id}: torn write (blob "
+                        "landed, xattr missing) cannot serve a "
+                        "hyperslab"), 0
+                raise ValueError(
+                    f"{name}: hyperslab_slice needs the object's chunk "
+                    "extent ('chunks' xattr, written by the VOL array "
+                    "write path) to resolve")
+            resolved, n_chunks_pruned = resolve_hyperslab(
+                resolved, (int(ch[0]), int(ch[1])),
+                chunk_zone_maps=(xattr or {}).get("chunk_zone_maps"),
+                where=prune, clamp=clamp)
+            meters["chunks_pruned"] += n_chunks_pruned
+            if resolved is None:
+                if negkey is not None:
+                    self.cache.put_negative(negkey, "skip")
+                return "skip", None, 0
         if resolved and resolved[0].name == "select_packed":
             # packed row-copy works on the raw blob — no decoded table
             # to share, so it bypasses the decode-level cache
@@ -576,18 +642,38 @@ class OSD:
             meters["cache_bytes"] += ins
         return "ok", result, scanned
 
-    def _prunes_locally(self, name: str, prune) -> bool:
+    def _prunes_locally(self, name: str, prune, pdig: str | None = None,
+                        meters: dict | None = None) -> bool:
         """Pushed-down prune: does this object's CURRENT local zone map
         prove the filter expression matches none of its rows?  Runs
         against the OSD's own xattrs, so the decision can never be
         stale — there is no client cache (and no plan→execute TOCTOU
-        window) in the loop."""
+        window) in the loop.
+
+        With ``pdig`` (the request prune expression's digest) the
+        decision itself is cached per ``(name, version, pdig)`` — a
+        version bump retires it like any result entry — so a repeat
+        scan of a pruned object skips the tree walk; replayed *pruned*
+        verdicts are metered ``neg_hits``."""
         if prune is None:
             return False
         with self.lock:
             x = self.xattrs.get(name)
-        return x is not None and zone_map_prunes(x.get("zone_map", {}),
-                                                 prune)
+        if x is None:
+            return False
+        key = None
+        if (pdig is not None and self.cache.capacity > 0
+                and x.get("version") is not None):
+            key = (name, int(x["version"]), "prune", pdig)
+            got = self.cache.get(key)
+            if got is not _MISS:
+                if got and meters is not None:
+                    meters["neg_hits"] += 1
+                return bool(got)
+        verdict = zone_map_prunes(x.get("zone_map", {}), prune)
+        if key is not None:
+            self.cache.put(key, verdict, _Negative.NBYTES)
+        return verdict
 
     def exec_cls_batch(
             self, items: Sequence[tuple[str, list[ObjOp]]],
@@ -657,6 +743,13 @@ class OSD:
                   else norm.setdefault(id(ops), normalize_exprs(ops)))
                  for name, ops in items]
         meters = _serve_meters()
+        # the prune expression's own digest: keys cached prune verdicts
+        # and extends hyperslab result keys (their content depends on it)
+        pdig = None
+        if prune is not None and self.cache.capacity > 0:
+            pdig = hashlib.sha1(_json.dumps(
+                prune.to_json(), sort_keys=True,
+                separators=(",", ":")).encode()).hexdigest()
         # one digest per distinct pipeline object (shared pipelines are
         # common: combine/concat batches reuse ONE list for all items)
         digs: dict[int, str] = {}
@@ -694,12 +787,12 @@ class OSD:
             served: list[int] = []
             counts: list[int] = []
             for k, (name, ops) in enumerate(items):
-                if self._prunes_locally(name, prune):
+                if self._prunes_locally(name, prune, pdig, meters):
                     pruned.append(name)
                     continue
                 status, out, nb = self._serve_item(
                     name, ops, "concat", dig_of(ops), meters,
-                    encode=False)
+                    encode=False, prune=prune, pdig=pdig)
                 if status == "missing":  # absent HERE: registers as
                     missing.append(name)  # missing (replica failover),
                     continue  # even if a row slice might have skipped it
@@ -724,11 +817,12 @@ class OSD:
         ops = items[0][1]
         partials: list[Any] = []
         for name, _ in items:
-            if self._prunes_locally(name, prune):
+            if self._prunes_locally(name, prune, pdig, meters):
                 pruned.append(name)
                 continue
             status, partial, nb = self._serve_item(
-                name, ops, "combine", dig_of(ops), meters)
+                name, ops, "combine", dig_of(ops), meters,
+                prune=prune, pdig=pdig)
             if status == "missing":  # absent HERE: replica failover
                 missing.append(name)
                 continue
@@ -781,6 +875,7 @@ class ObjectStore:
                  scan_bw: float | None = None,
                  cache_bytes: int = 0,
                  replication: str = "chain",
+                 hop_latency_s: float = 0.0,
                  retry: RetryPolicy | None = None):
         if replication not in ("chain", "fanout"):
             raise ValueError(f"bad replication topology {replication!r}; "
@@ -794,6 +889,10 @@ class ObjectStore:
         self.scan_bw = scan_bw
         self.cache_bytes = int(cache_bytes or 0)
         self.replication = replication
+        # modeled OSD->OSD forwarding delay per replication hop (0 =
+        # latency-free, the pre-existing behavior): chain hops pay it
+        # sequentially, fan-out pays it once — see _replicate
+        self.hop_latency_s = float(hop_latency_s or 0.0)
         # transient-fault budget for every client request (see
         # RetryPolicy); injectable per store so tests/benchmarks can
         # tighten the deadline or disable backoff
@@ -865,6 +964,8 @@ class ObjectStore:
         f.cache_evictions += m["cache_evictions"]
         f.cache_bytes += m["cache_bytes"]
         f.queue_wait_s += m["queue_wait_s"]
+        f.cache_neg_hits += m.get("neg_hits", 0)
+        f.chunks_pruned += m.get("chunks_pruned", 0)
 
     def io_simulated(self) -> bool:
         """True when requests actually *wait* (NIC/disk bandwidth or OSD
@@ -882,14 +983,24 @@ class ObjectStore:
 
     def _replicate(self, name: str, blob: bytes, xattr: dict,
                    acting: Sequence[str],
-                   entry: str | None = None) -> tuple[int, int]:
+                   entry: str | None = None) -> tuple[int, int, float]:
         """Server-side replication of one landed write from ``entry``
         (the OSD that took it — the primary, or a later replica after
         failover) across the rest of the acting set; returns
-        ``(total_bytes_moved, bytes_sent_by_entry)`` for the caller to
-        charge to ``replica_bytes`` / ``entry_egress_bytes`` — counters
-        are never touched from replication worker threads (lost-update
-        hazard under concurrent ``+=``).
+        ``(total_bytes_moved, bytes_sent_by_entry, latency_s)`` for the
+        caller to charge to ``replica_bytes`` / ``entry_egress_bytes``
+        / ``replica_lat_s`` — counters are never touched from
+        replication worker threads (lost-update hazard under concurrent
+        ``+=``).
+
+        ``hop_latency_s`` models the per-hop forwarding delay and makes
+        the chain-vs-fanout *latency* tradeoff observable next to the
+        bandwidth one: a chain is store-and-forward, so its hops
+        serialize (latency = transferred_hops x hop; each hop sleeps in
+        turn on the replication worker), while fan-out sends in
+        parallel from the entry OSD (latency = one hop regardless of
+        replica count) — the exact mirror of the egress asymmetry
+        ``entry_egress_bytes`` exposes, where the chain wins.
 
         ``chain`` (default) pipelines entry -> replica -> replica, the
         way Ceph forwards primary-copy writes: each hop moves the blob
@@ -907,19 +1018,28 @@ class ObjectStore:
         entry = acting[0] if entry is None else entry
         sender = entry
         moved = entry_moved = 0
+        lat = 0.0
+        hop = float(self.hop_latency_s or 0.0)
         for rep in acting:
             if rep == entry:
                 continue
             try:
+                if hop and self.replication == "chain":
+                    time.sleep(hop)  # store-and-forward: hops serialize
                 self._hop_put(rep, name, blob, xattr)
             except (OSDDown, TransientOSDError):
                 continue  # skipped hop: peering/recovery heals it
             moved += len(blob)
+            if hop and self.replication == "chain":
+                lat += hop
             if self.replication == "fanout" or sender == entry:
                 entry_moved += len(blob)
             if self.replication == "chain":
                 sender = rep  # the new tail forwards the next hop
-        return moved, entry_moved
+        if hop and self.replication != "chain" and moved:
+            time.sleep(hop)  # parallel sends: ONE hop of latency
+            lat = hop
+        return moved, entry_moved, lat
 
     def _hop_put(self, osd_id: str, name: str, blob: bytes,
                  xattr: dict | None) -> None:
@@ -1103,9 +1223,11 @@ class ObjectStore:
         self._client_xfer(len(blob))
         self._osd(acting[0]).put(name, blob, stamped)
         # replication is OSD->OSD (cluster network), not client bytes
-        moved, entry_moved = self._replicate(name, blob, stamped, acting)
+        moved, entry_moved, lat = self._replicate(
+            name, blob, stamped, acting)
         self.fabric.replica_bytes += moved
         self.fabric.entry_egress_bytes += entry_moved
+        self.fabric.replica_lat_s += lat
         return version
 
     def put_batch(self, names: Iterable[str],
@@ -1212,12 +1334,12 @@ class ObjectStore:
         # deadlock); bare tuples are inline results
         rep_out: list[Any] = []
 
-        def replicate(i: int, entry: str) -> tuple[int, int]:
+        def replicate(i: int, entry: str) -> tuple[int, int, float]:
             try:
                 return self._replicate(names[i], blobs_l[i], stamped[i],
                                        self._acting(names[i]), entry)
             except OSDDown:  # peering/recovery restores it later
-                return 0, 0
+                return 0, 0, 0.0
             finally:
                 # the write and its whole replica chain have landed:
                 # no retry can ever resend this blob — release it (the
@@ -1233,9 +1355,10 @@ class ObjectStore:
             # accumulate HERE, on the caller's thread (worker threads
             # never touch the fabric — no lost-update hazard)
             for r in rep_out:
-                moved, entry_moved = r.result() if use_pool else r
+                moved, entry_moved, lat = r.result() if use_pool else r
                 self.fabric.replica_bytes += moved
                 self.fabric.entry_egress_bytes += entry_moved
+                self.fabric.replica_lat_s += lat
             rep_out.clear()
 
         def write_group(osd_id: str,
@@ -2021,8 +2144,8 @@ class ObjectStore:
                        if o not in holders]
             if not targets:
                 continue
-            moved, _ = self._replicate(name, blob, xattr,
-                                       [src] + targets, entry=src)
+            moved, _, _ = self._replicate(name, blob, xattr,
+                                          [src] + targets, entry=src)
             copies = moved // len(blob) if blob else len(targets)
             self.fabric.recovery_bytes += moved
             self.fabric.heals += copies
@@ -2104,8 +2227,15 @@ class ObjectStore:
 def _prune_wire(prune):
     """Client half of the predicate transport: normalize an Expr (or
     legacy triples) to the serialized tree dict that rides inside the
-    batched request — the OSD parses it back with ``expr.from_json``."""
-    pred = ex.ensure_pred(prune)
+    batched request — the OSD parses it back with ``expr.from_json``.
+
+    The tree is run through ``expr.normalize`` first (De Morgan
+    push-down, constant folding, same-column interval merging): the
+    prune payload only ever drives zone-map *interval* decisions over
+    scalar metadata, exactly the domain where the rewrite makes more
+    trees prunable — evaluation filters inside pipelines are never
+    normalized, so row semantics are untouched."""
+    pred = ex.normalize(ex.ensure_pred(prune))
     return None if pred is None else pred.to_json()
 
 
@@ -2123,9 +2253,11 @@ def make_store(n_osds: int, *, replicas: int = 3, n_pgs: int = 128,
                scan_bw: float | None = None,
                cache_bytes: int = 0,
                replication: str = "chain",
+               hop_latency_s: float = 0.0,
                retry: RetryPolicy | None = None) -> ObjectStore:
     cm = ClusterMap(tuple(f"{prefix}.{i}" for i in range(n_osds)),
                     n_pgs=n_pgs, replicas=min(replicas, n_osds))
     return ObjectStore(cm, client_bw=client_bw, disk_bw=disk_bw,
                        scan_bw=scan_bw, cache_bytes=cache_bytes,
-                       replication=replication, retry=retry)
+                       replication=replication,
+                       hop_latency_s=hop_latency_s, retry=retry)

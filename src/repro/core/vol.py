@@ -56,9 +56,10 @@ import numpy as np
 from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core.logical import (
-    LogicalDataset, RowRange, validate_table)
+    Dataspace, Hyperslab, LogicalDataset, RowRange, validate_table)
 from repro.core.partition import (
-    ObjectMap, PartitionPolicy, objmap_key, plan_partition)
+    ArrayObjectMap, ObjectMap, PartitionPolicy, load_objmap, objmap_key,
+    plan_array_partition, plan_partition)
 from repro.core.scan import Scan, ScanEngine
 from repro.core.store import ObjectStore
 
@@ -186,13 +187,15 @@ class GlobalVOL:
         v = self.store.put(objmap_key(ds.name), omap.to_bytes())
         return dataclasses.replace(omap, version=v)
 
-    def open(self, dataset_name: str) -> ObjectMap:
-        """Bootstrap a dataset's ObjectMap from the store alone.  The
-        map carries the ``.objmap`` object's store version so compiled
-        plans can later detect a re-partition (row-slice targeting
-        refresh) without re-reading the map."""
+    def open(self, dataset_name: str) -> ObjectMap | ArrayObjectMap:
+        """Bootstrap a dataset's object map from the store alone —
+        table (``ObjectMap``) or N-d array (``ArrayObjectMap``), the
+        serialized ``kind`` field picks.  The map carries the
+        ``.objmap`` object's store version so compiled plans can later
+        detect a re-partition (row-slice / hyperslab targeting refresh)
+        without re-reading the map."""
         blob, v = self.store.get_with_version(objmap_key(dataset_name))
-        return dataclasses.replace(ObjectMap.from_bytes(blob), version=v)
+        return dataclasses.replace(load_objmap(blob), version=v)
 
     # ------------------------------------------------------------ write
     def write(self, omap: ObjectMap, table: Mapping[str, np.ndarray],
@@ -274,6 +277,120 @@ class GlobalVOL:
         for name, zm, v in zip(names, zms, versions):
             self._zm_cache[name] = (zm, v)  # keep the cache fresh
         return nbytes[0]
+
+    # ------------------------------------------------------------ arrays
+    def create_array(self, space: Dataspace,
+                     policy: PartitionPolicy = PartitionPolicy()
+                     ) -> ArrayObjectMap:
+        """Plan the chunk->object mapping for an N-d dataspace and
+        persist it to the store (the array twin of ``create``)."""
+        amap = plan_array_partition(space, policy)
+        v = self.store.put(objmap_key(space.name), amap.to_bytes())
+        return dataclasses.replace(amap, version=v)
+
+    def open_array(self, dataset_name: str) -> ArrayObjectMap:
+        """``open`` for arrays; raises if the name maps a table."""
+        amap = self.open(dataset_name)
+        if not isinstance(amap, ArrayObjectMap):
+            raise TypeError(f"{dataset_name!r} is a table dataset; "
+                            "use open()")
+        return amap
+
+    def write_array(self, amap: ArrayObjectMap, arr: np.ndarray,
+                    *, window_bytes: int | None = None,
+                    window_objects: int | None = None) -> int:
+        """Scatter a full N-d array to its objects through the batched
+        write plane.  Each object stores its chunks PADDED to the full
+        chunk shape and stacked as one ``(k, *chunk)`` block column, so
+        the OSD-side ``hyperslab_local`` executor indexes chunks by
+        position; selections never reach the pad because intersections
+        are clipped to the logical shape.  Per-chunk zone maps (over
+        UNPADDED values) ride in the ``chunk_zone_maps`` xattr — the
+        granule OSD-side chunk pruning keys on — next to the
+        ``chunks`` extent xattr that late-binds compiled hyperslab
+        plans, and an object-level ``zone_map`` merged from them keeps
+        whole-object pruning and the client zone-map cache working
+        unchanged.  Streams through ``put_batch`` exactly like
+        ``write``.  Returns bytes written."""
+        sp = amap.space
+        arr = np.asarray(arr, dtype=np.dtype(sp.dtype))
+        if arr.shape != sp.shape:
+            raise ValueError(f"array shape {arr.shape} != dataspace "
+                             f"shape {sp.shape}")
+        self._pin_epoch()
+        if window_bytes is None and window_objects is None:
+            window_bytes = self.store.default_window_bytes()
+        names = [e.name for e in amap.extents]
+        zms: list[dict] = []
+        nbytes = [0]
+
+        def encoded():
+            for ext in amap.extents:
+                stack, czms, unpadded = [], [], []
+                for cid in range(ext.chunk_start, ext.chunk_stop):
+                    slab = sp.chunk_slab(cid)
+                    piece = arr[tuple(slice(a, b) for a, b in slab)]
+                    pad = np.zeros(sp.chunk, dtype=arr.dtype)
+                    pad[tuple(slice(0, s) for s in piece.shape)] = piece
+                    stack.append(pad)
+                    czms.append(fmt.zone_map({"data": piece.ravel()}))
+                    unpadded.append(piece.ravel())
+                zm = fmt.zone_map({"data": np.concatenate(unpadded)})
+                zms.append(zm)
+                blob = self.local.encode({"data": np.stack(stack)})
+                nbytes[0] += len(blob)
+                yield blob, {"zone_map": zm,
+                             "chunks": [ext.chunk_start, ext.chunk_stop],
+                             "chunk_zone_maps": czms}
+
+        if window_bytes or window_objects:
+            versions = self.store.put_batch(
+                names, encoded(), window_bytes=window_bytes,
+                window_objects=window_objects)
+        else:
+            items = list(encoded())
+            versions = self.store.put_batch(
+                names, [b for b, _ in items], [x for _, x in items])
+        for name, zm, v in zip(names, zms, versions):
+            self._zm_cache[name] = (zm, v)
+        return nbytes[0]
+
+    def read_array(self, amap: ArrayObjectMap, key,
+                   *, where=None, fill=0,
+                   prune: str = "auto") -> np.ndarray:
+        """Gather one hyperslab selection (a numpy-style index key or a
+        :class:`Hyperslab`) through the scan engine — the ``row_slice``
+        contract lifted to N dimensions: the GLOBAL selection rides to
+        each OSD, which resolves it against its own ``chunks`` xattr
+        and prunes whole chunks via ``where`` + per-chunk zone maps."""
+        hs = key if isinstance(key, Hyperslab) \
+            else Hyperslab.from_key(amap.space.shape, key)
+        plan = self.engine.compile_hyperslab(
+            amap, hs, where=where, fill=fill, prune=prune)
+        out, _ = self.engine.execute(plan, omap=amap)
+        return out
+
+    def array(self, dataset: str | ArrayObjectMap) -> "ArrayView":
+        """Open an indexable view: ``vol.array("a")[2:10, ::3]``."""
+        amap = self.open_array(dataset) if isinstance(dataset, str) \
+            else dataset
+        return ArrayView(self, amap)
+
+    def repartition_array(self, amap: ArrayObjectMap,
+                          policy: PartitionPolicy) -> ArrayObjectMap:
+        """Re-pack the array's chunks into objects under a new policy
+        and bump the ``.objmap`` version — compiled hyperslab plans
+        keep serving correct cells through the late-binding ``chunks``
+        xattr and recompile on the version bump (``_refresh``)."""
+        sp = amap.space
+        full = tuple(slice(0, s) for s in sp.shape)
+        data = self.read_array(amap, full, prune="none")
+        new = plan_array_partition(sp, policy)
+        self.write_array(new, data)
+        for name in set(amap.object_names()) - set(new.object_names()):
+            self.store.delete(name)
+        v = self.store.put(objmap_key(sp.name), new.to_bytes())
+        return dataclasses.replace(new, version=v)
 
     # ------------------------------------------------------------ scan
     def scan(self, dataset: str | ObjectMap) -> Scan:
@@ -368,7 +485,8 @@ class GlobalVOL:
         return self.engine.execute(plan, before=before, omap=omap)
 
     # ------------------------------------------------------------ helpers
-    def _column_bounds(self, omap: ObjectMap, col: str) -> tuple[float, float]:
+    def _column_bounds(self, omap: ObjectMap,
+                       col: str) -> tuple[float, float]:
         self._warm_zone_maps([e.name for e in omap])
         lo, hi = np.inf, -np.inf
         for extent in omap:
@@ -378,3 +496,46 @@ class GlobalVOL:
         if not np.isfinite(lo):
             lo, hi = 0.0, 1.0
         return float(lo), float(hi) + 1e-9
+
+
+# --------------------------------------------------------------------------
+# ArrayView — numpy-style front end over a mapped dataspace
+# --------------------------------------------------------------------------
+
+
+class ArrayView:
+    """Indexable handle over one mapped N-d dataspace: ``view[key]``
+    compiles the key to a hyperslab plan and executes it (storage-side
+    selection + chunk pruning), returning a dense ndarray shaped like
+    ``np.asarray(full)[key]`` would be.  ``sel`` adds the pushed-down
+    ``where`` predicate (cells whose chunk is pruned come back as
+    ``fill``) — the array analogue of ``Scan.filter``."""
+
+    def __init__(self, vol: GlobalVOL, amap: ArrayObjectMap):
+        self.vol = vol
+        self.amap = amap
+
+    @property
+    def space(self) -> Dataspace:
+        return self.amap.space
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.amap.space.shape
+
+    @property
+    def dtype(self) -> np.dtype:
+        return np.dtype(self.amap.space.dtype)
+
+    def __getitem__(self, key) -> np.ndarray:
+        return self.vol.read_array(self.amap, key)
+
+    def sel(self, key, *, where=None, fill=0,
+            prune: str = "auto") -> np.ndarray:
+        return self.vol.read_array(self.amap, key, where=where,
+                                   fill=fill, prune=prune)
+
+    def refresh(self) -> "ArrayView":
+        """Re-open the map (picks up a re-partition)."""
+        self.amap = self.vol.open_array(self.amap.space.name)
+        return self

@@ -183,11 +183,19 @@ def test_str_prefix_prunes_on_string_zone_maps():
     assert st_osd["objects_pruned"] == st_cli["objects_pruned"] > 0
 
 
-def test_not_never_prunes_but_still_filters():
+def test_not_pushdown_prunes_residual_not_stays_conservative():
     store, vol, omap, table = make_world(sorted_cols=True)
-    # ~(y < 5000) matches nothing, yet NO zone map may prove a negation
-    # empty — conservative: zero pruned, zero rows
+    # ~(y < 5000) matches nothing; the prune payload is normalized
+    # (De Morgan push-down), so it ships as y >= 5000 and every zone
+    # map NOW proves its object empty — zero rows AND full pruning
     r, stats = (vol.scan("t").filter_expr(ex.Not(ex.Cmp("y", "<", 5000)))
+                .agg("count", "y").execute())
+    assert r == 0.0
+    assert stats["objects_pruned"] == omap.n_objects
+    # a negation normalize can't push down (Not over a non-empty In)
+    # still never prunes — conservative: zero pruned, zero rows
+    r, stats = (vol.scan("t")
+                .filter_expr(ex.Not(ex.In("y", list(range(1000)))))
                 .agg("count", "y").execute())
     assert r == 0.0
     assert stats["objects_pruned"] == 0

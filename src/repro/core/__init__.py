@@ -16,6 +16,8 @@ Layering (bottom up):
   scan       — the ONE query surface: Scan builder -> PhysicalPlan ->
                ScanEngine (prune pushdown, per-OSD combine/concat)
   cache      — byte-bounded LRU result cache (one per OSD, version-keyed)
+  maintenance — background daemons: continuous scrub walker, small-
+               object compaction, live rebalance, versioned GC
   session    — ScanSession: many-client admission front-end
                (single-flight dedup + projection coalescing)
   vol        — GlobalVOL (client plugin) / LocalVOL (storage plugin)
@@ -33,8 +35,9 @@ from repro.core.partition import (  # noqa: F401
 from repro.core.placement import ClusterMap  # noqa: F401
 from repro.core.store import (  # noqa: F401
     CorruptObject, DataLossError, ObjectStore, PartialWriteError,
-    RetryPolicy, TransientOSDError, make_store)
+    RetryPolicy, TokenBucket, TransientOSDError, make_store)
 from repro.core.faults import FaultInjector  # noqa: F401
+from repro.core.maintenance import MaintenancePlane  # noqa: F401
 from repro.core.cache import ResultCache  # noqa: F401
 from repro.core.scan import PhysicalPlan, Scan, ScanEngine  # noqa: F401
 from repro.core.session import ScanSession  # noqa: F401

@@ -138,6 +138,49 @@ class FaultInjector:
         with self._lock:
             self._per_osd.clear()
 
+    def campaign(self, names: list[str], *, flips: int = 3,
+                 torn: int = 1, seed: int = 0) -> list[_Injection]:
+        """A churn campaign against the scrub walker: inject ``flips``
+        bit-rot faults and ``torn`` torn writes across DISTINCT
+        ``(object, OSD)`` targets, always on a CURRENT acting-set
+        holder (so the damage is in service, not on a stray), and never
+        corrupting more than ``replicas - 1`` copies of one object —
+        the walker must always have a verified copy to heal from.
+        Deterministic per ``seed``.  Returns the injections placed
+        (also appended to :attr:`injected`); fewer than requested when
+        the name list can't support the budget safely."""
+        import random as _random
+        rng = _random.Random(seed)
+        per_name: dict[str, int] = {}
+        used: set[tuple[str, str]] = set()
+        placed: list[_Injection] = []
+        want = [("bitflip", flips), ("torn", torn)]
+        for kind, budget in want:
+            k = 0
+            attempts = 0
+            while k < budget and attempts < 64 * max(1, budget):
+                attempts += 1
+                name = rng.choice(names)
+                acting = self.store.cluster.locate(name)
+                cap = max(1, len(acting) - 1)
+                if per_name.get(name, 0) >= cap:
+                    continue
+                holders = [o for o in acting
+                           if name in self.store.osds[o].data
+                           and (name, o) not in used]
+                if not holders:
+                    continue
+                osd_id = rng.choice(holders)
+                if kind == "bitflip":
+                    self.flip_bits(name, osd_id)
+                else:
+                    self.tear_write(name, osd_id)
+                used.add((name, osd_id))
+                per_name[name] = per_name.get(name, 0) + 1
+                placed.append(self.injected[-1])
+                k += 1
+        return placed
+
     # ------------------------------------------------------------ accounting
     @property
     def corruptions_injected(self) -> int:

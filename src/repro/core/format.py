@@ -69,6 +69,26 @@ def bitpack_width(max_value: int) -> int:
     return max(1, int(max_value).bit_length())
 
 
+def auto_codecs(table: Mapping[str, np.ndarray], *,
+                bitpack_ints: bool = True) -> dict[str, str]:
+    """Default per-column codec choice for a col-layout block: bitpack
+    non-negative integer columns whose width pays off (<= 24 bits; wider
+    loses to raw int32).  Shared by ``LocalVOL.encode`` and the OSD-side
+    ``compact_merge`` op so a compacted object round-trips through the
+    same codec policy as a freshly written one."""
+    out: dict[str, str] = {}
+    if not bitpack_ints:
+        return out
+    for k, a in table.items():
+        a = np.asarray(a)
+        if (np.issubdtype(a.dtype, np.integer)
+                and a.size and int(a.min()) >= 0):
+            bits = bitpack_width(int(a.max()))
+            if bits <= 24:
+                out[k] = f"bitpack{bits}"
+    return out
+
+
 # (swap distance, mask) pairs for the 5 butterfly stages of a 32x32
 # bit-matrix transpose (Hacker's Delight §7-3): stage j exchanges the
 # masked j-bit sub-blocks between rows k and k+j.

@@ -655,6 +655,43 @@ def pipeline_digest(ops: list[ObjOp]) -> str:
                    default=repr).encode()).hexdigest()
 
 
+def compact_merge(blobs: list[bytes], *, layout: str = "col",
+                  codecs: Mapping[str, str] | None = None
+                  ) -> tuple[bytes, dict]:
+    """OSD-side small-object merge: fold a run of consecutive blocks
+    into ONE re-encoded block (row order preserved) and return it with
+    the merged table's zone map.  The maintenance plane's compactor uses
+    this to collapse one-blob-per-append ``ckpt``/kvcache runs into
+    target-sized objects without the rows ever leaving the storage side;
+    codecs are re-derived for the merged value range
+    (``format.auto_codecs``) unless pinned by the caller."""
+    if not blobs:
+        raise ValueError("compact_merge of zero blocks")
+    tables = [fmt.decode_block(b) for b in blobs]
+    keys = list(tables[0].keys())
+    for t in tables[1:]:
+        if list(t.keys()) != keys:
+            raise ValueError("compact_merge: schema mismatch across run")
+    merged = {k: np.concatenate([np.asarray(t[k]) for t in tables],
+                                axis=0)
+              for k in keys}
+    blob = fmt.encode_block(
+        merged, layout=layout,
+        codecs=codecs if codecs is not None else fmt.auto_codecs(merged))
+    return blob, fmt.zone_map(merged)
+
+
+def _compact_unresolved(table, **_):
+    raise ValueError(
+        "compact_merge folds whole encoded blocks, not one object's "
+        "table; it is dispatched via OSD.compact_merge by the "
+        "maintenance plane, never through a scan pipeline")
+
+
+register("compact_merge", OpImpl(_compact_unresolved, None,
+                                 decomposable=False, table_out=False))
+
+
 def concat_encode(tables: list[Mapping[str, np.ndarray]]) -> bytes:
     """Server-side table concat: fold result tables into ONE encoded
     block (item order preserved) — the table-out analogue of

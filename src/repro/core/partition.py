@@ -282,6 +282,64 @@ def plan_partition(ds: LogicalDataset,
     return ObjectMap(ds, tuple(extents))
 
 
+def compact_plan(omap: ObjectMap, sizes: dict[str, int],
+                 policy: PartitionPolicy = PartitionPolicy()
+                 ) -> list[tuple[int, int]]:
+    """Runs of consecutive under-target extents worth folding into one
+    object — ``[(start, stop), ...]`` extent-index ranges, each >= 2
+    members.  ``sizes`` maps object name -> stored bytes; an absent or
+    zero size breaks the run (the object is mid-write or gone — never
+    compact it).  Greedy left-to-right: a run accumulates small
+    neighbors until it reaches ``target_object_bytes`` (good enough —
+    stop growing) and never exceeds ``max_object_bytes``.  This is the
+    read side of the one-blob-per-append pattern: N tiny ``ckpt``/
+    kvcache appends become ceil(total/target) proper objects."""
+    runs: list[tuple[int, int]] = []
+    n = len(omap.extents)
+
+    def small(k: int) -> bool:
+        s = sizes.get(omap.extents[k].name)
+        return s is not None and 0 < s < policy.target_object_bytes
+
+    i = 0
+    while i < n:
+        if not small(i):
+            i += 1
+            continue
+        j, acc = i, 0
+        while j < n and small(j):
+            s = sizes[omap.extents[j].name]
+            if acc and acc + s > policy.max_object_bytes:
+                break
+            acc += s
+            j += 1
+            if acc >= policy.target_object_bytes:
+                break
+        if j - i >= 2:
+            runs.append((i, j))
+        i = max(j, i + 1)
+    return runs
+
+
+def merge_run(omap: ObjectMap, start: int, stop: int,
+              name: str) -> ObjectMap:
+    """The map rewrite for one compacted run: extents [start, stop)
+    collapse into a single extent ``name`` covering their combined row
+    range.  Contiguity is preserved by construction (the run was
+    consecutive), so the returned map revalidates; ``version`` carries
+    over as provenance until the rewritten map is persisted (which
+    stamps the real store version)."""
+    if not (0 <= start < stop <= len(omap.extents)) or stop - start < 2:
+        raise ValueError(f"bad merge run [{start}, {stop}) over "
+                         f"{len(omap.extents)} extents")
+    run = omap.extents[start:stop]
+    merged = ObjectExtent(name, run[0].row_start, run[-1].row_stop)
+    return ObjectMap(
+        omap.dataset,
+        omap.extents[:start] + (merged,) + omap.extents[stop:],
+        version=omap.version)
+
+
 def plan_array_partition(
         space: Dataspace,
         policy: PartitionPolicy = PartitionPolicy()) -> ArrayObjectMap:

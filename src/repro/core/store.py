@@ -89,8 +89,10 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json as _json
 import queue as _queue
+import random
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor, as_completed
@@ -102,7 +104,8 @@ from repro.core import expr as ex
 from repro.core.cache import Negative as _Negative, ResultCache, _MISS
 from repro.core.format import content_digest
 from repro.core.objclass import (
-    ObjOp, apply_pipeline, concat_encode, decode_pipeline,
+    ObjOp, apply_pipeline, compact_merge as _compact_merge_blocks,
+    concat_encode, decode_pipeline,
     get_impl as _impl, has_hyperslab, has_row_slice, merge_partials,
     normalize_exprs, pipeline_digest, pipeline_mergeable,
     required_columns, resolve_hyperslab, resolve_row_slice,
@@ -178,6 +181,16 @@ class Fabric:
     replica_lat_s: float = 0.0  # modeled replication write latency
     #                             (chain: per-hop, sequential; fan-out:
     #                             one hop, parallel)
+    # -- maintenance plane (core.maintenance daemons; each counter has
+    #    ONE writer thread — the daemon that owns that work) --
+    compactions: int = 0        # small-object runs folded (compact_merge)
+    compaction_bytes: int = 0   # bytes read/shipped/written by compaction
+    rebalance_bytes: int = 0    # bytes moved toward fresh placement by
+    #                             the live rebalancer (old copies kept
+    #                             until the new copy digest-verifies)
+    gc_objects: int = 0         # dead versions + quarantined copies
+    #                             reclaimed after the retention window
+    gc_bytes: int = 0           # bytes those reclaims freed
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -197,6 +210,9 @@ class Fabric:
         self.queue_wait_s = 0.0
         self.cache_neg_hits = self.chunks_pruned = 0
         self.replica_lat_s = 0.0
+        self.compactions = self.compaction_bytes = 0
+        self.rebalance_bytes = 0
+        self.gc_objects = self.gc_bytes = 0
 
 
 def _serve_meters() -> dict:
@@ -238,10 +254,18 @@ class DataLossError(RuntimeError):
     no copy left to serve or heal from.  ``objects`` lists them.  Raised
     loudly by ``recover()`` (unless ``allow_loss=True``) and by the
     read/exec planes when failover exhausts an acting set on corrupt
-    copies, instead of burying the loss in a stats dict."""
+    copies, instead of burying the loss in a stats dict.
 
-    def __init__(self, objects: Sequence[str], msg: str | None = None):
+    ``census`` maps each named object to its per-OSD copy census —
+    ``{"verified": [osd...], "divergent": [osd...], "bare": [osd...],
+    "quarantined": [osd...]}`` — so an operator can triage (is there a
+    bare copy worth adopting? a quarantined one worth inspecting?)
+    before opting into ``recover(allow_loss=True)``."""
+
+    def __init__(self, objects: Sequence[str], msg: str | None = None,
+                 census: dict | None = None):
         self.objects: tuple[str, ...] = tuple(objects)
+        self.census: dict[str, dict[str, list[int]]] = dict(census or {})
         super().__init__(
             msg or ("all replicas lost or corrupt for "
                     f"{len(self.objects)} object(s): "
@@ -257,12 +281,22 @@ class RetryPolicy:
     capped at ``cap_s``, never sleeping past the per-request
     ``deadline_s`` (None = no deadline).  Exhaustion is terminal for
     THAT replica — the item fails over down its acting set like any
-    other per-object miss."""
+    other per-object miss.
+
+    ``jitter="decorrelated"`` switches the actual sleeps to AWS-style
+    decorrelated jitter — ``sleep_k = min(cap_s, U(base_s,
+    3*sleep_{k-1}))`` — so many waiters hammered off the same recovering
+    OSD spread out instead of thundering back in lockstep.  The RNG is
+    seeded from ``(seed, salt)`` so schedules are reproducible per
+    waiter yet distinct across waiters.  ``give_up`` stays deterministic
+    (it budgets against the un-jittered ``backoff_s`` curve)."""
 
     attempts: int = 4
     base_s: float = 0.002
     cap_s: float = 0.1
     deadline_s: float | None = None
+    jitter: str = "none"          # "none" | "decorrelated"
+    seed: int | None = None
 
     def backoff_s(self, attempt: int) -> float:
         return min(self.cap_s, self.base_s * (2 ** attempt))
@@ -275,6 +309,83 @@ class RetryPolicy:
         return self.deadline_s is not None and (
             time.perf_counter() - t0 + self.backoff_s(attempt)
             > self.deadline_s)
+
+    def backoff(self, salt: int = 0) -> "_Backoff":
+        """A per-waiter sleep generator.  ``salt`` distinguishes
+        concurrent waiters sharing one policy (the batched planes pass a
+        fresh salt per group call)."""
+        return _Backoff(self, salt)
+
+    def schedule(self, n: int, salt: int = 0) -> list[float]:
+        """The first ``n`` sleeps one waiter would take — for tests
+        asserting boundedness / non-synchronization without sleeping."""
+        boff = self.backoff(salt)
+        return [boff.next_s() for _ in range(n)]
+
+
+class _Backoff:
+    """Stateful per-waiter backoff: deterministic exponential by
+    default, decorrelated-jitter when the policy asks for it.  One
+    instance per (request, replica) — never shared across threads."""
+
+    def __init__(self, policy: RetryPolicy, salt: int = 0):
+        self._policy = policy
+        self._attempt = 0
+        self._prev = 0.0
+        if policy.jitter == "decorrelated":
+            seed = (((policy.seed or 0) * 0x9E3779B1 + salt)
+                    & 0xFFFFFFFF)
+            self._rng: random.Random | None = random.Random(seed)
+        else:
+            self._rng = None
+
+    def next_s(self) -> float:
+        p = self._policy
+        if self._rng is None:
+            s = p.backoff_s(self._attempt)
+            self._attempt += 1
+            return s
+        lo = p.base_s
+        hi = max(lo, 3.0 * (self._prev if self._prev > 0.0 else lo))
+        s = min(p.cap_s, self._rng.uniform(lo, hi))
+        self._prev = s
+        return s
+
+
+class TokenBucket:
+    """Byte-rate limiter for the maintenance daemons: ``consume(n)``
+    debits ``n`` bytes against a bucket refilled at ``rate_bytes_s``
+    and sleeps until the balance is non-negative, so background work
+    (scrub verify, rebalance copies, compaction gathers) trickles at a
+    bounded rate instead of saturating the modeled disks/fabric under
+    foreground scans.  ``rate_bytes_s=None`` disables limiting.  Burst
+    capacity is one rate-second, so a single object larger than the
+    rate still passes (after proportional sleep) instead of wedging.
+    Thread-safe; each daemon usually owns its own bucket."""
+
+    def __init__(self, rate_bytes_s: float | None):
+        self.rate = float(rate_bytes_s) if rate_bytes_s else None
+        self._lock = threading.Lock()
+        self._balance = self.rate or 0.0  # start with a full burst
+        self._last = time.monotonic()
+
+    def consume(self, nbytes: int) -> float:
+        """Debit ``nbytes``; sleep off any deficit.  Returns the sleep
+        actually paid (seconds) for observability/tests."""
+        if self.rate is None or nbytes <= 0:
+            return 0.0
+        with self._lock:
+            now = time.monotonic()
+            self._balance = min(
+                self.rate, self._balance + (now - self._last) * self.rate)
+            self._last = now
+            self._balance -= float(nbytes)
+            deficit = -self._balance
+        if deficit <= 0.0:
+            return 0.0
+        wait = deficit / self.rate
+        time.sleep(wait)
+        return wait
 
 
 class PartialWriteError(ValueError):
@@ -445,6 +556,28 @@ class OSD:
         blob = self.get(name)
         ops = self._resolved(name, normalize_exprs(ops), clamp=True)
         return run_pipeline(blob, ops), len(blob)
+
+    def compact_merge(self, blobs: Sequence[bytes], out_name: str,
+                      xattr: dict | None = None) -> tuple[bytes, dict]:
+        """OSD-side merge op (``objclass.compact_merge``): fold a run of
+        consecutive small blocks into ONE block stored locally under
+        ``out_name``, stamping a fresh zone map and content digest into
+        its xattrs so the merged copy is verifiable and prunable like
+        any written object.  Returns ``(blob, stamped_xattr)`` so the
+        caller can replicate the merged object down the chain without
+        re-reading it."""
+        self._touch()
+        blob, zm = _compact_merge_blocks(list(blobs))
+        stamped = dict(xattr or {})
+        stamped["zone_map"] = zm
+        stamped["digest"] = content_digest(blob)
+        with self.lock:
+            if self.disk_bw:
+                time.sleep(len(blob) / self.disk_bw)  # serial disk
+            self.data[out_name] = bytes(blob)
+            self.xattrs[out_name] = stamped
+        self.cache.invalidate(out_name)
+        return blob, stamped
 
     def _extent(self, name: str) -> tuple[int, int] | None:
         """The object's CURRENT row extent from its own ``rows`` xattr
@@ -897,9 +1030,16 @@ class ObjectStore:
         # RetryPolicy); injectable per store so tests/benchmarks can
         # tighten the deadline or disable backoff
         self.retry = retry or RetryPolicy()
+        # per-waiter salt for jittered backoff: each retry loop takes a
+        # fresh value so concurrent waiters get distinct sleep schedules
+        self._salt = itertools.count()
         # the attached FaultInjector (core.faults), if any — kept here
         # so fail_osd/add_osds re-wire replacement OSD objects to it
         self.faults = None
+        # the attached MaintenancePlane (core.maintenance), if any —
+        # fail_osd/add_osds notify it so the rebalancer wakes up, and
+        # close() stops its daemons
+        self.maintenance = None
         self.osds: dict[str, OSD] = {
             o: OSD(o, disk_bw, scan_bw=scan_bw,
                    cache_bytes=self.cache_bytes)
@@ -934,6 +1074,11 @@ class ObjectStore:
         self.last_adaptive_windows: tuple[int, ...] = ()
 
     def close(self) -> None:
+        if self.maintenance is not None:
+            try:
+                self.maintenance.stop()
+            except Exception:
+                pass
         self._pool.shutdown(wait=False)
         self._hedge_pool.shutdown(wait=False)
 
@@ -1048,13 +1193,14 @@ class ObjectStore:
         sleep never blocks the client; fabric counters are untouched
         here).  Exhausted budgets re-raise and the hop is skipped like
         a down OSD — peering/scrub heals the copy later."""
+        boff = self.retry.backoff(salt=next(self._salt))
         for attempt in range(max(1, self.retry.attempts)):
             try:
                 return self._osd(osd_id).put(name, blob, xattr)
             except TransientOSDError:
                 if attempt + 1 >= max(1, self.retry.attempts):
                     raise
-                time.sleep(self.retry.backoff_s(attempt))
+                time.sleep(boff.next_s())
 
     # ------------------------------------------------------------ helpers
     def _acting(self, name: str) -> tuple[str, ...]:
@@ -1098,7 +1244,8 @@ class ObjectStore:
                     raise DataLossError(
                         [names[i]],
                         f"{names[i]}: every replica lost or corrupt "
-                        f"(last: {err})")
+                        f"(last: {err})",
+                        census=self.copy_census([names[i]]))
                 raise err or ObjectNotFound(names[i])
             groups.setdefault(target, []).append(i)
         # one order for dispatch AND result pairing — keep them the same
@@ -1120,13 +1267,14 @@ class ObjectStore:
         def run(osd_id, idxs):
             t0 = time.perf_counter()
             retries = 0
+            boff = policy.backoff(salt=next(self._salt))
             while True:
                 try:
                     return run_group(osd_id, idxs), retries
                 except TransientOSDError as e:
                     if policy.give_up(retries, t0):
                         return e, retries
-                    time.sleep(policy.backoff_s(retries))
+                    time.sleep(boff.next_s())
                     retries += 1
         return run
 
@@ -1590,13 +1738,14 @@ class ObjectStore:
         caller's failover loop moves on)."""
         t0 = time.perf_counter()
         attempt = 0
+        boff = self.retry.backoff(salt=next(self._salt))
         while True:
             try:
                 return fn(*args)
             except TransientOSDError:
                 if self.retry.give_up(attempt, t0):
                     raise
-                time.sleep(self.retry.backoff_s(attempt))
+                time.sleep(boff.next_s())
                 self.fabric.retries += 1
                 attempt += 1
 
@@ -1633,7 +1782,8 @@ class ObjectStore:
         if isinstance(err, CorruptObject):
             raise DataLossError(
                 [name], f"{name}: every replica lost or corrupt "
-                        f"(last: {err})")
+                        f"(last: {err})",
+                census=self.copy_census([name]))
         raise err if err else ObjectNotFound(name)
 
     def get_hedged(self, name: str, timeout_s: float) -> bytes:
@@ -1698,7 +1848,8 @@ class ObjectStore:
         if isinstance(err, CorruptObject):
             raise DataLossError(
                 [name], f"{name}: every replica lost or corrupt "
-                        f"(last: {err})")
+                        f"(last: {err})",
+                census=self.copy_census([name]))
         raise err if err else ObjectNotFound(name)
 
     def exec_batch(self, names: Iterable[str],
@@ -2050,6 +2201,8 @@ class ObjectStore:
             cache_bytes=self.cache_bytes)
         if self.faults is not None:  # keep the injector wired to the
             self.faults.attach_osd(self.osds[osd_id])  # replacement OSD
+        if self.maintenance is not None:  # wake the live rebalancer
+            self.maintenance.note_topology_change()
 
     def add_osds(self, ids: Iterable[str]) -> None:
         ids = list(ids)
@@ -2059,6 +2212,8 @@ class ObjectStore:
                                cache_bytes=self.cache_bytes)
             if self.faults is not None:
                 self.faults.attach_osd(self.osds[i])
+        if self.maintenance is not None:
+            self.maintenance.note_topology_change()
 
     # ------------------------------------------------------------ scrub/heal
     def _verified_copies(self, name: str) -> tuple[list, list, list]:
@@ -2120,40 +2275,81 @@ class ObjectStore:
         lost: list[str] = []
         undigested: list[str] = []
         for name in sorted(inventory):
-            verified, divergent, bare = self._verified_copies(name)
-            for _, _, blob, _ in verified:
-                self.fabric.scrub_bytes += len(blob)
-            for osd_id, blob, _ in divergent:
-                self.fabric.scrub_bytes += len(blob)
-                self.osds[osd_id]._quarantine_copy(name)
-                self.fabric.corruptions_detected += 1
-                found += 1
-            if not verified:
-                if divergent or any(
-                        name in self.osds[o].quarantine
-                        for o in self.cluster.up_osds):
-                    lost.append(name)  # digested object, no good copy
-                elif bare:
-                    undigested.append(name)  # legacy: nothing to check
-                continue
-            if not heal:
-                continue
-            _, src, blob, xattr = verified[0]
-            holders = {osd_id for _, osd_id, _, _ in verified}
-            targets = [o for o in self._acting(name)
-                       if o not in holders]
-            if not targets:
-                continue
-            moved, _, _ = self._replicate(name, blob, xattr,
-                                          [src] + targets, entry=src)
-            copies = moved // len(blob) if blob else len(targets)
-            self.fabric.recovery_bytes += moved
-            self.fabric.heals += copies
-            healed += copies
+            step = self._scrub_object(name, heal=heal)
+            found += step["corrupt"]
+            healed += step["healed"]
+            if step["lost"]:
+                lost.append(name)  # digested object, no good copy
+            elif step["undigested"]:
+                undigested.append(name)  # legacy: nothing to check
         return {"objects_scrubbed": len(inventory),
                 "corrupt_copies": found, "healed_copies": healed,
                 "lost": tuple(lost), "undigested": tuple(undigested),
                 "epoch": self.cluster.epoch}
+
+    def _scrub_object(self, name: str, heal: bool = True) -> dict:
+        """One object's scrub step — the unit both on-demand ``scrub()``
+        and the maintenance plane's continuous walker iterate: classify
+        every copy (``_verified_copies``), quarantine divergent/torn
+        ones, and heal missing acting-set copies from the best verified
+        source through the replication chain.  Returns ``{"bytes":
+        verified bytes (the walker's rate-limit currency), "corrupt":
+        copies quarantined, "healed": copies restored, "lost"/
+        "undigested": flags}``."""
+        out = {"bytes": 0, "corrupt": 0, "healed": 0,
+               "lost": False, "undigested": False}
+        verified, divergent, bare = self._verified_copies(name)
+        for _, _, blob, _ in verified:
+            out["bytes"] += len(blob)
+            self.fabric.scrub_bytes += len(blob)
+        for osd_id, blob, _ in divergent:
+            out["bytes"] += len(blob)
+            self.fabric.scrub_bytes += len(blob)
+            self.osds[osd_id]._quarantine_copy(name)
+            self.fabric.corruptions_detected += 1
+            out["corrupt"] += 1
+        if not verified:
+            if divergent or any(name in self.osds[o].quarantine
+                                for o in self.cluster.up_osds):
+                out["lost"] = True
+            elif bare:
+                out["undigested"] = True
+            return out
+        if not heal:
+            return out
+        _, src, blob, xattr = verified[0]
+        holders = {osd_id for _, osd_id, _, _ in verified}
+        targets = [o for o in self._acting(name) if o not in holders]
+        if not targets:
+            return out
+        moved, _, _ = self._replicate(name, blob, xattr,
+                                      [src] + targets, entry=src)
+        copies = moved // len(blob) if blob else len(targets)
+        self.fabric.recovery_bytes += moved
+        self.fabric.heals += copies
+        out["healed"] = copies
+        return out
+
+    def copy_census(self, names: Iterable[str]
+                    ) -> dict[str, dict[str, list[str]]]:
+        """Per-object copy census for operator triage: which up OSDs
+        hold a digest-``verified`` copy, a ``divergent`` one (fails its
+        own digest), a ``bare`` unverifiable one (no digest stamped),
+        and which hold a ``quarantined`` copy pulled from service.
+        Rides on every :class:`DataLossError` so the choice to
+        ``recover(allow_loss=True)`` is an informed one.  OSD-local
+        inspection only — no fabric traffic is charged."""
+        out: dict[str, dict[str, list[str]]] = {}
+        for name in dict.fromkeys(names):
+            verified, divergent, bare = self._verified_copies(name)
+            out[name] = {
+                "verified": [o for _, o, _, _ in verified],
+                "divergent": [o for o, _, _ in divergent],
+                "bare": [o for o, _, _ in bare],
+                "quarantined": [o for o in self.cluster.up_osds
+                                if name in self.osds[o].quarantine],
+            }
+        return out
 
     def recover(self, old_map: ClusterMap | None = None, *,
                 expected: Iterable[str] | None = None,
@@ -2206,9 +2402,153 @@ class ObjectStore:
             raise DataLossError(
                 lost, f"recover(): {len(lost)} object(s) have no "
                       f"surviving verified replica: {lost[:8]}"
-                      f"{'...' if len(lost) > 8 else ''}")
+                      f"{'...' if len(lost) > 8 else ''}",
+                census=self.copy_census(lost))
         return {"objects_moved": moved, "objects_lost": len(lost),
                 "lost": tuple(lost), "epoch": self.cluster.epoch}
+
+    # ------------------------------------------------------ maintenance ops
+    # primitives the background MaintenancePlane (core.maintenance)
+    # drives: each runs on the calling daemon thread — OSD-local work
+    # plus OSD->OSD traffic, never client fabric bytes — and eagerly
+    # invalidates cached forms (result cache + negative entries) of
+    # every object it rewrites, so the serve plane can never answer
+    # from a pre-rewrite entry.
+
+    def invalidate_cached(self, name: str) -> None:
+        """Drop every up OSD's cached forms of one object — positive
+        result-cache entries AND negative (nothing-to-serve) entries
+        share the per-name index, so one call retires both."""
+        for osd_id in self.cluster.up_osds:
+            self.osds[osd_id].cache.invalidate(name)
+
+    def _maint_put(self, name: str, blob: bytes,
+                   xattr: dict | None = None) -> tuple[int, int]:
+        """Maintenance-plane write: stamp a fresh version + digest and
+        land the object on its acting set (entry + replica chain), like
+        ``put`` but WITHOUT client fabric accounting — the bytes are
+        cluster-internal.  Returns ``(version, bytes_moved)``."""
+        version = self._next_version()
+        stamped = {**(xattr or {}), "version": version,
+                   "digest": content_digest(blob)}
+        acting = self._acting(name)
+        self._hop_put(acting[0], name, blob, stamped)
+        moved, _, _ = self._replicate(name, blob, stamped, acting)
+        self.invalidate_cached(name)
+        return version, len(blob) + moved
+
+    def compact_run(self, names: Sequence[str], out_name: str,
+                    rows: tuple[int, int] | None = None
+                    ) -> tuple[int, int]:
+        """Fold one run of small objects into ``out_name``: gather each
+        member's best digest-verified copy, ship the run to the merge
+        OSD (``out_name``'s primary) where the ``compact_merge``
+        objclass op concatenates and re-encodes it, then replicate the
+        merged object down its acting set.  ``rows`` stamps the merged
+        object's GLOBAL row extent so pushed-down ``row_slice`` ops
+        resolve against it exactly as they did against the members.
+        Returns ``(version, bytes)`` — bytes include member gathers,
+        the merge write, and replication (``Fabric.compaction_bytes``).
+        The members are NOT deleted here: the caller (the maintenance
+        plane) retires them through versioned GC after its retention
+        window, so in-flight scans still find them until every compiled
+        plan has refreshed onto the new map."""
+        blobs: list[bytes] = []
+        gathered = 0
+        for member in names:
+            verified, _, bare = self._verified_copies(member)
+            if verified:
+                blobs.append(verified[0][2])
+            elif bare:
+                blobs.append(bare[0][1])
+            else:
+                raise DataLossError(
+                    [member], f"compact_run: no usable copy of {member}",
+                    census=self.copy_census([member]))
+            gathered += len(blobs[-1])
+        version = self._next_version()
+        xattr: dict = {"version": version}
+        if rows is not None:
+            xattr["rows"] = [int(rows[0]), int(rows[1])]
+        acting = self._acting(out_name)
+        entry = self._osd(acting[0])
+        blob, stamped = self._osd_call(
+            entry.compact_merge, blobs, out_name, xattr)
+        moved, _, _ = self._replicate(out_name, blob, stamped, acting)
+        self.invalidate_cached(out_name)
+        nbytes = gathered + len(blob) + moved
+        self.fabric.compactions += 1
+        self.fabric.compaction_bytes += nbytes
+        return version, nbytes
+
+    def rebalance_object(self, name: str) -> int:
+        """Move one object toward its CURRENT placement: copy the best
+        verified source onto every acting OSD that lacks a copy, then —
+        only once EVERY acting copy digest-verifies — drop stray copies
+        parked on non-acting OSDs.  A failed hop or unverified acting
+        copy keeps the strays (they are still the safety margin), so a
+        crash mid-step never reduces the number of good copies.
+        Divergent copies are left for the scrub walker to quarantine —
+        the walker owns corruption accounting.  Returns bytes moved
+        (``Fabric.rebalance_bytes``)."""
+        acting = self._acting(name)
+        verified, divergent, bare = self._verified_copies(name)
+        if not verified and not bare:
+            return 0
+        if verified:
+            _, _, blob, xattr = verified[0]
+        else:
+            _, blob, xattr = bare[0]
+        # divergent copies count as holders too: overwriting one would
+        # silently repair it and rob the walker of the detection
+        holders = {o for _, o, _, _ in verified} | \
+            {o for o, _, _ in bare} | {o for o, _, _ in divergent}
+        moved = 0
+        for osd_id in acting:
+            if osd_id in holders:
+                continue
+            try:
+                self._hop_put(osd_id, name, blob, xattr)
+            except (OSDDown, TransientOSDError):
+                continue  # next pass finishes the move
+            moved += len(blob)
+        # verify-before-drop: every acting copy must check out
+        digest = (xattr or {}).get("digest")
+        for osd_id in acting:
+            osd = self.osds[osd_id]
+            with osd.lock:
+                copy = osd.data.get(name)
+                have = (osd.xattrs.get(name) or {}).get("digest")
+            if copy is None:
+                return moved  # move incomplete: keep the strays
+            if digest is not None and (
+                    have is None or content_digest(copy) != int(have)):
+                return moved
+        for osd_id in self.cluster.up_osds:
+            if osd_id in acting:
+                continue
+            osd = self.osds[osd_id]
+            with osd.lock:
+                stray = osd.data.pop(name, None)
+                osd.xattrs.pop(name, None)
+            if stray is not None:
+                osd.cache.invalidate(name)
+        if moved:
+            self.invalidate_cached(name)
+            self.fabric.rebalance_bytes += moved
+        return moved
+
+    def purge_quarantined(self, name: str) -> int:
+        """Release every quarantined copy of one object (versioned GC,
+        after the retention window).  Returns bytes freed."""
+        freed = 0
+        for osd_id in self.cluster.up_osds:
+            osd = self.osds[osd_id]
+            with osd.lock:
+                entry = osd.quarantine.pop(name, None)
+            if entry is not None:
+                freed += len(entry[0])
+        return freed
 
     # ------------------------------------------------------------ stats
     def stats(self) -> dict:

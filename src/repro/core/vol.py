@@ -87,15 +87,7 @@ class LocalVOL:
         default_factory=lambda: {"scan": 0, "fetch": 0})
 
     def codecs_for(self, table: Mapping[str, np.ndarray]) -> dict[str, str]:
-        out = {}
-        for k, a in table.items():
-            a = np.asarray(a)
-            if (self.bitpack_ints and np.issubdtype(a.dtype, np.integer)
-                    and a.size and int(a.min()) >= 0):
-                bits = fmt.bitpack_width(int(a.max()))
-                if bits <= 24:  # else bitpack loses to raw int32
-                    out[k] = f"bitpack{bits}"
-        return out
+        return fmt.auto_codecs(table, bitpack_ints=self.bitpack_ints)
 
     def encode(self, table: Mapping[str, np.ndarray]) -> bytes:
         layout = self.default_layout
@@ -196,6 +188,20 @@ class GlobalVOL:
         without re-reading the map."""
         blob, v = self.store.get_with_version(objmap_key(dataset_name))
         return dataclasses.replace(load_objmap(blob), version=v)
+
+    def reopen(self, omap: ObjectMap | ArrayObjectMap
+               ) -> ObjectMap | ArrayObjectMap:
+        """Cheap staleness check for a held map: probe the ``.objmap``
+        object's CURRENT store version (one xattr round trip) and
+        re-open only when it moved — e.g. after the maintenance plane's
+        compactor rewrote the extents under a long-lived client.  A
+        matching version returns the map unchanged."""
+        name = omap.dataset.name if isinstance(omap, ObjectMap) \
+            else omap.space.name
+        v = int(self.store.xattr(objmap_key(name)).get("version", -1))
+        if v == omap.version:
+            return omap
+        return self.open(name)
 
     # ------------------------------------------------------------ write
     def write(self, omap: ObjectMap, table: Mapping[str, np.ndarray],

@@ -1,0 +1,474 @@
+"""Online maintenance plane: continuous scrub walker, small-object
+compaction, live rebalance, versioned GC — plus the satellite pieces
+(decorrelated retry jitter, DataLossError copy census, maintenance
+rate limiting).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Column, DataLossError, FaultInjector, GlobalVOL,
+                        LogicalDataset, MaintenancePlane, PartitionPolicy,
+                        RetryPolicy, RowRange, TokenBucket, make_store)
+from repro.core import objclass as oc
+from repro.core.format import content_digest
+from repro.core.partition import (ObjectMap, PartitionPolicy as PP,
+                                  compact_plan, merge_run, objmap_key)
+
+
+def make_world(n=4096, n_osds=6, replicas=3, seed=0, unit_rows=64,
+               obj_kb=8, name="t", **store_kw):
+    rng = np.random.default_rng(seed)
+    ds = LogicalDataset(
+        name, (Column("x", "float64"), Column("y", "int32")), n, unit_rows)
+    store = make_store(n_osds, replicas=replicas, **store_kw)
+    vol = GlobalVOL(store)
+    omap = vol.create(ds, PartitionPolicy(target_object_bytes=obj_kb << 10,
+                                          max_object_bytes=obj_kb << 13))
+    table = {"x": rng.normal(size=n),
+             "y": rng.integers(0, 1000, n).astype(np.int32)}
+    vol.write(omap, table)
+    return store, vol, omap, table
+
+
+def make_tiny_append_world(n=4096, unit_rows=32, n_osds=6, replicas=3,
+                           seed=1, name="ck"):
+    """The one-blob-per-append pattern: every unit lands as its own tiny
+    object (ckpt/kvcache streams), leaving a map full of under-target
+    extents — compaction's whole reason to exist."""
+    rng = np.random.default_rng(seed)
+    ds = LogicalDataset(name, (Column("v", "float64"),), n, unit_rows)
+    store = make_store(n_osds, replicas=replicas)
+    vol = GlobalVOL(store)
+    # target below one unit's bytes => one object per append
+    omap = vol.create(ds, PartitionPolicy(
+        target_object_bytes=unit_rows * 8, max_object_bytes=1 << 20))
+    table = {"v": rng.normal(size=n)}
+    vol.write(omap, table)
+    return store, vol, omap, table
+
+
+def _copies_all_verify(store, name):
+    for osd_id in store.cluster.locate(name):
+        osd = store.osds[osd_id]
+        assert name in osd.data, (name, osd_id)
+        x = osd.xattrs.get(name) or {}
+        assert "digest" in x, (name, osd_id)
+        assert content_digest(osd.data[name]) == int(x["digest"])
+
+
+def _wait_for(cond, timeout_s=10.0, what="condition"):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout_s:
+        if cond():
+            return
+        time.sleep(0.005)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+# ===================================================== scrub walker
+def test_walker_heals_and_is_idempotent_without_ondemand_scrub():
+    """The WALKER (not on-demand scrub()) finds, quarantines, and heals
+    injected rot; after its rounds a verifying scrub() finds nothing —
+    scrub-idempotence holds when the background path does the work."""
+    store, vol, omap, table = make_world()
+    fi = FaultInjector(store)
+    names = omap.object_names()
+    hits = [fi.flip_bits(names[0], n_bits=3), fi.tear_write(names[1])]
+    plane = MaintenancePlane(store, batch_objects=4)
+    # two full synchronous rounds of the walker
+    for _ in range(2):
+        plane._scrub_cursor = ""
+        while plane.scrub_step()["objects"]:
+            pass
+    assert plane.scrub_corrupt == 2
+    assert plane.scrub_healed >= 2
+    assert store.fabric.corruptions_detected == fi.corruptions_injected
+    for name, hit in zip(names[:2], hits):
+        assert name in store.osds[hit].quarantine
+        _copies_all_verify(store, name)
+    after = store.scrub()  # on-demand verify pass: nothing left to do
+    assert after["corrupt_copies"] == 0 and after["healed_copies"] == 0
+    out = vol.read(omap, RowRange(0, len(table["x"])))
+    assert np.allclose(out["x"], table["x"])
+    plane.stop()
+
+
+def test_walker_pause_resume_survives_topology_churn():
+    """Pause the running walker, churn the topology (fail_osd +
+    add_osds + recover), resume — the walker finishes the round against
+    the NEW inventory and heals damage injected after the churn."""
+    store, vol, omap, table = make_world()
+    fi = FaultInjector(store)
+    plane = MaintenancePlane(store, batch_objects=2, interval_s=0.0005)
+    plane.start(daemons=("scrub",))
+    _wait_for(lambda: plane.scrub_objects > 0, what="walker progress")
+    plane.pause()
+    busy = plane.scrub_objects
+    time.sleep(0.02)
+    assert plane.scrub_objects <= busy + plane.batch_objects  # parked
+    # topology churn while paused
+    victim = store.cluster.up_osds[0]
+    store.fail_osd(victim)
+    store.add_osds(["osd.new0", "osd.new1"])
+    store.recover()
+    name = omap.object_names()[2]
+    fi.flip_bits(name, n_bits=2)
+    paused_progress = plane.scrub_objects
+    time.sleep(0.02)
+    assert plane.scrub_objects == paused_progress  # still parked
+    plane.resume()
+    _wait_for(lambda: plane.scrub_rounds >= 2 and plane.scrub_corrupt >= 1,
+              what="post-churn walker rounds")
+    plane.stop()
+    assert store.fabric.corruptions_detected == fi.corruptions_injected
+    _copies_all_verify(store, name)
+    out = vol.read(omap, RowRange(0, 1000))
+    assert np.allclose(out["x"], table["x"][:1000])
+
+
+def test_walker_rate_limit_bounds_scrub_throughput():
+    store, vol, omap, table = make_world(n=2048)
+    # inventory is ~tens of KB; a 1 MB/s budget forces measurable sleep
+    plane = MaintenancePlane(store, scrub_rate_bytes_s=1e6,
+                             batch_objects=64)
+    t0 = time.monotonic()
+    plane._scrub_cursor = ""
+    total = 0
+    while True:
+        got = plane.scrub_step()
+        if not got["objects"]:
+            break
+        total += got["objects"]
+    elapsed = time.monotonic() - t0
+    scrubbed = store.fabric.scrub_bytes
+    assert total > 0 and scrubbed > 0
+    # bucket grants one rate-second of burst, the rest is paid in sleep
+    assert elapsed >= (scrubbed - 1e6) / 1e6 - 0.05
+    plane.stop()
+
+
+# ===================================================== compaction
+def test_compaction_reduces_object_count_4x_and_stays_bit_exact():
+    store, vol, omap, table = make_tiny_append_world()
+    n_before = omap.n_objects
+    assert n_before >= 64  # genuinely tiny-append shaped
+    plane = MaintenancePlane(
+        store, compact_policy=PP(target_object_bytes=64 << 10,
+                                 max_object_bytes=1 << 20))
+    # compile a plan against the OLD map before compacting
+    scan = vol.scan("ck").rows(100, 2100).agg("sum", "v")
+    old_plan = scan.explain(omap)
+    assert old_plan.omap_version == omap.version
+    runs = 0
+    while plane.compact_step() is not None:
+        runs += 1
+    assert runs > 0 and plane.compact_runs == runs
+    assert store.fabric.compactions == runs
+    assert store.fabric.compaction_bytes > 0
+    fresh = vol.open("ck")
+    assert fresh.n_objects * 4 <= n_before  # >= 4x fewer objects
+    assert fresh.version > omap.version     # the map version bumped
+    # merged objects verify and carry global row extents + zone maps
+    for e in fresh:
+        if "/cmp." not in e.name:
+            continue
+        prim = store.cluster.locate(e.name)[0]
+        x = store.osds[prim].xattrs[e.name]
+        assert x["rows"] == [e.row_start, e.row_stop]
+        assert "zone_map" in x
+        _copies_all_verify(store, e.name)
+    # the OLD compiled plan re-targets through _refresh, bit-exactly
+    want = float(table["v"][100:2100].sum())
+    got, _ = vol.engine.execute(old_plan)
+    assert got == pytest.approx(want, rel=1e-12)
+    # and fresh scans over the compacted map agree
+    out = vol.read(fresh, RowRange(0, len(table["v"])))
+    assert np.allclose(out["v"], table["v"])
+    plane.stop()
+
+
+def test_compaction_members_survive_until_gc_then_collect():
+    """Versioned GC: replaced members stay servable through the
+    retention window (in-flight plans may still target them), are NOT
+    collected before the operator confirms, and vanish after."""
+    store, vol, omap, table = make_tiny_append_world(n=1024)
+    plane = MaintenancePlane(
+        store, compact_policy=PP(target_object_bytes=32 << 10,
+                                 max_object_bytes=1 << 20),
+        gc_retention_s=0.05)
+    members = []
+    while True:
+        got = plane.compact_step()
+        if got is None:
+            break
+        members.extend(got["members"])
+    assert members
+    for m in members:  # retained: old copies still in service
+        assert store.exists(m)
+    plane.gc_step()  # not confirmed: ages the ledger, deletes nothing
+    assert all(store.exists(m) for m in members)
+    assert store.fabric.gc_objects == 0
+    plane.confirm_gc()
+    plane.gc_step()  # confirmed but not yet ripe
+    assert all(store.exists(m) for m in members)
+    time.sleep(0.06)
+    got = plane.gc_step()
+    assert got["dead_reclaimed"] == len(members)
+    assert not any(store.exists(m) for m in members)
+    assert store.fabric.gc_objects == len(members)
+    assert store.fabric.gc_bytes > 0
+    # post-GC scans over the compacted map are still bit-exact
+    out = vol.read(vol.open("ck"), RowRange(0, len(table["v"])))
+    assert np.allclose(out["v"], table["v"])
+    plane.stop()
+
+
+def test_compact_plan_and_merge_run_unit():
+    ds = LogicalDataset("d", (Column("v", "float64"),), 100, 10)
+    ext = [("d/obj.%06d" % i, i * 10, (i + 1) * 10) for i in range(10)]
+    omap = ObjectMap(ds, tuple(
+        __import__("repro.core.partition", fromlist=["ObjectExtent"])
+        .ObjectExtent(n, a, b) for n, a, b in ext))
+    pol = PP(target_object_bytes=300, max_object_bytes=500)
+    sizes = {e.name: 100 for e in omap.extents}
+    sizes.pop("d/obj.000004")          # absent member breaks the run
+    sizes["d/obj.000007"] = 900        # oversized member breaks it too
+    runs = compact_plan(omap, sizes, pol)
+    assert runs == [(0, 3), (5, 7), (8, 10)]  # greedy, stop at target
+    merged = merge_run(omap, 0, 3, "d/cmp.1")
+    assert merged.n_objects == 8
+    assert merged.extents[0].name == "d/cmp.1"
+    assert (merged.extents[0].row_start, merged.extents[0].row_stop) \
+        == (0, 30)
+    with pytest.raises(ValueError):
+        merge_run(omap, 3, 4, "d/cmp.2")  # a 1-run is not a merge
+
+
+# ===================================================== live rebalance
+def test_rebalance_moves_objects_to_fresh_placement_verified():
+    store, vol, omap, table = make_world(n_osds=4, replicas=2)
+    store.add_osds([f"osd.n{i}" for i in range(3)])  # placement shifts
+    plane = MaintenancePlane(store, batch_objects=16)
+    while plane.rebalance_step()["objects"]:
+        pass
+    assert store.fabric.rebalance_bytes > 0
+    for name in omap.object_names() + [objmap_key("t")]:
+        acting = set(store.cluster.locate(name))
+        for osd_id in store.cluster.up_osds:
+            osd = store.osds[osd_id]
+            if osd_id in acting:   # every acting copy present+verified
+                assert name in osd.data
+                assert content_digest(osd.data[name]) == \
+                    int(osd.xattrs[name]["digest"])
+            else:                  # every stray dropped
+                assert name not in osd.data
+    # steady state: peering finds nothing left to move, scrub is clean
+    rec = store.recover()
+    assert rec["objects_moved"] == 0 and rec["lost"] == ()
+    assert store.scrub()["corrupt_copies"] == 0
+    out = vol.read(omap, RowRange(0, len(table["x"])))
+    assert np.allclose(out["x"], table["x"])
+    plane.stop()
+
+
+def test_rebalance_keeps_old_copy_until_new_copy_lands():
+    """Verify-before-drop: while the target OSD refuses the new copy,
+    the stray (old-placement) copy is retained — a crashed move never
+    reduces the number of good copies."""
+    store = make_store(3, replicas=1, retry=RetryPolicy(attempts=2))
+    names = [f"mv{i}" for i in range(16)]
+    olds = {}
+    for n in names:
+        store.put(n, b"payload" * 100)
+        olds[n] = store.cluster.primary(n)
+    store.add_osds(["osd.z0", "osd.z1", "osd.z2"])
+    moved_names = [n for n in names
+                   if store.cluster.primary(n) != olds[n]]
+    assert moved_names  # 16 names, 2x the OSDs: some placement moved
+    name, holder = moved_names[0], olds[moved_names[0]]
+    target = store.cluster.primary(name)
+    fi = FaultInjector(store)
+    fi.transient_failures(target, 1000)  # the new home refuses copies
+    plane = MaintenancePlane(store)
+    moved = store.rebalance_object(name)
+    assert moved == 0
+    assert name in store.osds[holder].data  # old copy retained
+    fi.clear()
+    store.rebalance_object(name)
+    assert name in store.osds[target].data
+    assert name not in store.osds[holder].data  # stray dropped AFTER
+    assert store.get(name) == b"payload" * 100
+    plane.stop()
+
+
+# ===================================================== versioned GC
+def test_gc_never_collects_sole_quarantined_copy():
+    store, vol, omap, table = make_world(n_osds=4, replicas=2)
+    fi = FaultInjector(store)
+    name = omap.object_names()[0]
+    for osd_id in list(store.cluster.locate(name)):
+        fi.flip_bits(name, osd_id=osd_id)  # EVERY replica rotten
+    store.scrub(heal=False)  # all copies quarantined, none verified
+    quarantined = [o for o in store.cluster.up_osds
+                   if name in store.osds[o].quarantine]
+    assert quarantined
+    plane = MaintenancePlane(store, gc_retention_s=0.0,
+                             gc_confirmed=True)
+    plane.gc_step()  # ages the quarantine ledger
+    time.sleep(0.01)
+    plane.gc_step()
+    # the quarantined copies are the only evidence left: kept
+    for o in quarantined:
+        assert name in store.osds[o].quarantine
+    plane.stop()
+
+
+def test_gc_purges_quarantined_copy_once_verified_copy_exists():
+    store, vol, omap, table = make_world()
+    fi = FaultInjector(store)
+    name = omap.object_names()[0]
+    hit = fi.flip_bits(name)
+    store.scrub()  # quarantines the bad copy AND heals a fresh one
+    assert name in store.osds[hit].quarantine
+    plane = MaintenancePlane(store, gc_retention_s=0.02,
+                             gc_confirmed=True)
+    plane.gc_step()  # first sight: starts the retention clock
+    assert name in store.osds[hit].quarantine
+    time.sleep(0.03)
+    got = plane.gc_step()
+    assert got["quarantine_purged"] == 1
+    assert name not in store.osds[hit].quarantine
+    assert store.fabric.gc_bytes > 0
+    _copies_all_verify(store, name)  # the live object is untouched
+    plane.stop()
+
+
+# ===================================================== retry jitter
+def test_decorrelated_jitter_schedules_bounded_and_distinct():
+    p = RetryPolicy(attempts=8, base_s=0.001, cap_s=0.05,
+                    jitter="decorrelated", seed=7)
+    schedules = [p.schedule(8, salt=s) for s in range(6)]
+    for sched in schedules:  # bounded: base <= sleep <= cap, always
+        assert all(p.base_s <= s <= p.cap_s for s in sched)
+    # non-synchronized: different waiters do NOT share a schedule
+    distinct = {tuple(s) for s in schedules}
+    assert len(distinct) == len(schedules)
+    # reproducible: same (seed, salt) -> same schedule
+    assert p.schedule(8, salt=3) == schedules[3]
+    # a different seed decorrelates the whole fleet
+    q = RetryPolicy(attempts=8, base_s=0.001, cap_s=0.05,
+                    jitter="decorrelated", seed=8)
+    assert q.schedule(8, salt=0) != schedules[0]
+
+
+def test_jitter_none_keeps_deterministic_exponential():
+    p = RetryPolicy(attempts=5, base_s=0.002, cap_s=0.1)
+    assert p.schedule(5) == [p.backoff_s(k) for k in range(5)]
+    assert p.schedule(5, salt=9) == p.schedule(5, salt=0)
+
+
+def test_jittered_policy_still_respects_deadline_and_retries():
+    # give_up budgets against the un-jittered curve: deterministic
+    p = RetryPolicy(attempts=10, base_s=0.05, cap_s=0.05,
+                    deadline_s=0.01, jitter="decorrelated", seed=1)
+    assert p.give_up(0, time.perf_counter())
+    # and a store under transient faults retries fine with jitter on
+    store, vol, omap, table = make_world(
+        n=1024, retry=RetryPolicy(attempts=4, base_s=0.0,
+                                  jitter="decorrelated", seed=3))
+    fi = FaultInjector(store)
+    fi.transient_failures(store.cluster.primary(omap.object_names()[0]), 2)
+    r, _ = vol.query(omap, [oc.op("agg", col="y", fn="count")])
+    assert r == float(len(table["y"]))
+    assert store.fabric.retries >= 2
+
+
+# ===================================================== copy census
+def test_dataloss_error_carries_copy_census():
+    store, vol, omap, table = make_world(n_osds=4, replicas=2)
+    fi = FaultInjector(store)
+    name = omap.object_names()[0]
+    acting = list(store.cluster.locate(name))
+    for osd_id in acting:
+        fi.flip_bits(name, osd_id=osd_id)
+    with pytest.raises(DataLossError) as ei:
+        store.get(name)
+    census = ei.value.census
+    assert name in census
+    c = census[name]
+    assert c["verified"] == []  # nothing serveable — that's the loss
+    # every copy is accounted somewhere: quarantined by the failed
+    # reads, or still divergent in place
+    assert set(c["quarantined"]) | set(c["divergent"]) == set(acting)
+    assert set(census[name]) == {"verified", "divergent", "bare",
+                                 "quarantined"}
+
+
+def test_recover_census_names_surviving_copy_locations():
+    store, vol, omap, table = make_world()
+    fi = FaultInjector(store)
+    name = omap.object_names()[0]
+    for osd_id in list(store.cluster.locate(name)):
+        fi.flip_bits(name, osd_id=osd_id)
+    with pytest.raises(DataLossError) as ei:
+        store.recover()
+    c = ei.value.census[name]
+    assert c["verified"] == []
+    assert len(c["quarantined"]) + len(c["divergent"]) >= 1
+    # an unrelated healthy object censuses as fully verified
+    other = omap.object_names()[1]
+    healthy = store.copy_census([other])[other]
+    assert set(healthy["verified"]) == set(store.cluster.locate(other))
+    assert healthy["divergent"] == [] and healthy["quarantined"] == []
+
+
+# ===================================================== rate limiter
+def test_token_bucket_meters_and_disables():
+    free = TokenBucket(None)
+    assert free.consume(10**9) == 0.0
+    tb = TokenBucket(1e6)           # 1 MB/s, 1 MB burst
+    assert tb.consume(1 << 19) == 0.0   # within the burst: free
+    waited = tb.consume(1 << 20)        # now in deficit: must sleep
+    assert waited > 0.0
+
+
+# ===================================================== all four at once
+def test_all_four_daemons_against_live_faults_and_churn():
+    """The tentpole scenario at test scale: all four daemons run as
+    threads while faults land and the topology changes; afterwards the
+    cluster is compacted, healed, rebalanced, GC'd — and bit-exact."""
+    store, vol, omap, table = make_tiny_append_world(n=2048)
+    fi = FaultInjector(store)
+    plane = MaintenancePlane(
+        store, compact_policy=PP(target_object_bytes=32 << 10,
+                                 max_object_bytes=1 << 20),
+        gc_retention_s=0.05, gc_confirmed=True,
+        batch_objects=16, interval_s=0.0005)
+    n_before = omap.n_objects
+    plane.start()
+    store.add_osds(["osd.x0"])
+    _wait_for(lambda: plane.compact_runs > 0, what="compaction")
+    prev = -1  # let compaction settle so the campaign hits objects
+    while plane.compact_runs != prev:  # that stay in the live map
+        prev = plane.compact_runs
+        time.sleep(0.2)
+    placed = fi.campaign(vol.open("ck").object_names(),
+                         flips=3, torn=1, seed=2)
+    assert placed
+    _wait_for(lambda: store.fabric.corruptions_detected
+              == fi.corruptions_injected, what="walker detection")
+    _wait_for(lambda: plane.gc_reclaimed > 0, timeout_s=20,
+              what="gc reclaim")
+    plane.pause()
+    time.sleep(0.01)
+    fresh = vol.open("ck")
+    assert fresh.n_objects * 4 <= n_before
+    out = vol.read(fresh, RowRange(0, len(table["v"])))
+    assert np.allclose(out["v"], table["v"])
+    plane.stop()
+    assert store.fabric.corruptions_detected == fi.corruptions_injected
+    final = store.scrub()
+    assert final["corrupt_copies"] == 0 and final["lost"] == ()

@@ -137,6 +137,56 @@ def test_scrub_quarantine_invalidates_cached_entries():
     assert np.array_equal(out["x"], table["x"])
 
 
+def test_maintenance_rewrites_never_serve_stale_entries():
+    """Every maintenance-plane rewrite path — compaction's merged
+    object + map rewrite, rebalance's stray drop, GC's delete — must
+    eagerly retire cached results (positive AND negative entries)
+    rather than wait for version-key misses to age them out."""
+    from repro.core import MaintenancePlane
+    from repro.core.partition import objmap_key
+    store, vol, omap, table = make_world(obj_kb=2, cache_bytes=8 << 20)
+    scan = vol.scan("t").project("x")
+    first, _ = scan.execute()  # populate caches over the SMALL objects
+    assert np.array_equal(first["x"], table["x"])
+    assert store.fabric.cache_misses > 0
+    plane = MaintenancePlane(
+        store, compact_policy=PartitionPolicy(
+            target_object_bytes=64 << 10, max_object_bytes=1 << 20),
+        gc_retention_s=0.0, gc_confirmed=True)
+    # compaction: merged objects + a rewritten .objmap land while the
+    # old entries are cached — the scan must re-resolve, bit-exactly
+    while plane.compact_step() is not None:
+        pass
+    assert plane.compact_runs > 0
+    mk = objmap_key("t")
+    for osd_id in store.cluster.locate(mk):  # map rewrite invalidated
+        assert store.osds[osd_id].cache.entries_for(mk) == 0
+    out, _ = scan.execute()
+    assert np.array_equal(out["x"], table["x"])
+    # rebalance after churn: dropped strays take their entries along
+    store.add_osds(["osd.s0", "osd.s1"])
+    while plane.rebalance_step()["objects"]:
+        pass
+    for name in vol.open("t").object_names():
+        for osd_id in store.cluster.up_osds:
+            if osd_id not in store.cluster.locate(name):
+                assert store.osds[osd_id].cache.entries_for(name) == 0
+    out, _ = scan.execute()
+    assert np.array_equal(out["x"], table["x"])
+    # GC: collected members leave no cache residue anywhere
+    dead = list(plane._dead)
+    assert dead
+    plane.gc_step()
+    for name in dead:
+        assert not store.exists(name)
+        for osd_id in store.cluster.up_osds:
+            assert store.osds[osd_id].cache.entries_for(name) == 0
+    out, _ = scan.execute()  # and the serve plane still answers warm
+    assert np.array_equal(out["x"], table["x"])
+    assert store.fabric.cache_hits > 0
+    plane.stop()
+
+
 def test_lru_byte_bound_holds_under_churn():
     cap = 64 << 10  # far smaller than the dataset's decoded footprint
     store, vol, omap, table = make_world(n=20_000, cache_bytes=cap)

@@ -63,6 +63,12 @@ class ResultCache:
     pays nothing for the feature.
     """
 
+    # lock-discipline contract (see ``repro.analysis``): the entry map,
+    # the per-name index, and the byte gauge move together — partial
+    # views are never visible outside ``_lock``
+    _GUARDED_BY = {"_entries": "_lock", "_by_name": "_lock",
+                   "_bytes": "_lock"}
+
     def __init__(self, capacity_bytes: int = 0):
         self.capacity = int(capacity_bytes or 0)
         self._lock = threading.Lock()

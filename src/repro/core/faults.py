@@ -165,9 +165,13 @@ class FaultInjector:
                 cap = max(1, len(acting) - 1)
                 if per_name.get(name, 0) >= cap:
                     continue
-                holders = [o for o in acting
-                           if name in self.store.osds[o].data
-                           and (name, o) not in used]
+                holders = []
+                for o in acting:
+                    osd = self.store.osds[o]
+                    with osd.lock:
+                        held = name in osd.data
+                    if held and (name, o) not in used:
+                        holders.append(o)
                 if not holders:
                     continue
                 osd_id = rng.choice(holders)
@@ -190,10 +194,15 @@ class FaultInjector:
     def _holder(self, name: str, osd_id: str | None) -> OSD:
         if osd_id is not None:
             osd = self.store.osds[osd_id]
-            if name not in osd.data:
+            with osd.lock:
+                held = name in osd.data
+            if not held:
                 raise KeyError(f"{name} not on {osd_id}")
             return osd
         for oid in self.store.cluster.up_osds:
-            if name in self.store.osds[oid].data:
-                return self.store.osds[oid]
+            osd = self.store.osds[oid]
+            with osd.lock:
+                held = name in osd.data
+            if held:
+                return osd
         raise KeyError(f"{name}: no up OSD holds a copy")

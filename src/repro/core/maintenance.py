@@ -68,6 +68,14 @@ class MaintenancePlane:
     ``store.maintenance`` so topology changes wake the rebalancer and
     ``store.close()`` tears the plane down."""
 
+    # lock-discipline contract (see ``repro.analysis``): the ledger and
+    # the walk cursors are shared between the daemons and client
+    # threads (``note_topology_change`` fires from ``fail_osd``/
+    # ``add_osds``), so every access goes through ``_lock``
+    _GUARDED_BY = {"_dead": "_lock", "_quar_seen": "_lock",
+                   "_scrub_cursor": "_lock", "_rebal_cursor": "_lock",
+                   "_compact_idx": "_lock"}
+
     def __init__(self, store: ObjectStore, *,
                  scrub_rate_bytes_s: float | None = None,
                  rebalance_rate_bytes_s: float | None = None,
@@ -195,9 +203,7 @@ class MaintenancePlane:
         read-only history awaiting GC — healing or re-replicating them
         would resurrect garbage)."""
         store = self.store
-        names = set(store.list_objects())
-        for osd_id in store.cluster.up_osds:
-            names |= set(store.osds[osd_id].quarantine)
+        names = set(store.list_objects()) | store._quarantined_names()
         with self._lock:
             names -= set(self._dead)
         return sorted(names)
@@ -219,8 +225,12 @@ class MaintenancePlane:
         rate limiter so a full-inventory round trickles instead of
         bursting."""
         names = self._inventory()
-        batch, self._scrub_cursor, wrapped = self._next_batch(
-            names, self._scrub_cursor, self.batch_objects)
+        with self._lock:
+            cursor = self._scrub_cursor
+        batch, cursor, wrapped = self._next_batch(
+            names, cursor, self.batch_objects)
+        with self._lock:
+            self._scrub_cursor = cursor
         if wrapped:
             self.scrub_rounds += 1
         out = {"objects": 0, "corrupt": 0, "healed": 0}
@@ -288,8 +298,10 @@ class MaintenancePlane:
         if not datasets:
             return None
         for _ in range(len(datasets)):
-            ds = datasets[self._compact_idx % len(datasets)]
-            self._compact_idx += 1
+            with self._lock:
+                idx = self._compact_idx
+                self._compact_idx = idx + 1
+            ds = datasets[idx % len(datasets)]
             got = self._objmap_blob(ds)
             if got is None:
                 continue
@@ -338,11 +350,11 @@ class MaintenancePlane:
         """One rebalance increment: nudge the next ``batch_objects``
         live objects toward their CURRENT acting sets (copy-verify-drop
         inside ``rebalance_object``), rate-limited by moved bytes."""
-        names = [n for n in self._inventory()
-                 if any(n in self.store.osds[o].data
-                        for o in self.store.cluster.up_osds)]
-        batch, self._rebal_cursor, wrapped = self._next_batch(
-            names, self._rebal_cursor, self.batch_objects)
+        names = [n for n in self._inventory() if self.store.exists(n)]
+        with self._lock:
+            start = self._rebal_cursor
+        batch, cursor, wrapped = self._next_batch(
+            names, start, self.batch_objects)
         if wrapped:
             self.rebalance_rounds += 1
         moved = 0
@@ -350,6 +362,12 @@ class MaintenancePlane:
             nbytes = self.store.rebalance_object(name)
             self.rebalance_limiter.consume(nbytes)
             moved += nbytes
+        with self._lock:
+            if self._rebal_cursor == start:
+                # advance only if no topology change reset the walk
+                # mid-step — the reset must win, or churn during a
+                # batch would skip the restart it asked for
+                self._rebal_cursor = cursor
         return {"objects": len(batch), "bytes": moved}
 
     # ------------------------------------------------------------ gc
@@ -451,7 +469,8 @@ class MaintenancePlane:
         operator one-shots): scrub the whole inventory, compact until
         no run remains, rebalance everything, then one GC sweep."""
         scrub = {"objects": 0, "corrupt": 0, "healed": 0}
-        self._scrub_cursor = ""
+        with self._lock:
+            self._scrub_cursor = ""
         while True:
             got = self.scrub_step()
             if not got["objects"]:
@@ -464,7 +483,8 @@ class MaintenancePlane:
             if got is None:
                 break
             compacted.append(got)
-        self._rebal_cursor = ""
+        with self._lock:
+            self._rebal_cursor = ""
         rebalanced = {"objects": 0, "bytes": 0}
         while True:
             got = self.rebalance_step()

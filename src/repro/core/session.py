@@ -78,6 +78,11 @@ class ScanSession:
         result, stats = session.execute(vol.scan("ds").project("x"))
     """
 
+    # lock-discipline contract (see ``repro.analysis``): the flight
+    # table and the admission counters are mutated by every client
+    # thread entering the session
+    _GUARDED_BY = {"_flights": "_lock", "stats": "_lock"}
+
     def __init__(self, vol, *, window_s: float = 0.0):
         self.vol = vol
         self.window_s = float(window_s)

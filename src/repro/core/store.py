@@ -110,7 +110,7 @@ from repro.core.objclass import (
     normalize_exprs, pipeline_digest, pipeline_mergeable,
     required_columns, resolve_hyperslab, resolve_row_slice,
     run_pipeline, table_n_rows, zone_map_prunes)
-from repro.core.placement import ClusterMap, pg_delta
+from repro.core.placement import ClusterMap
 
 # fixed cost modeled for one client<->OSD round trip (headers, framing,
 # dispatch) — what per-object fan-out pays N times and a batch pays once
@@ -443,6 +443,14 @@ class OSD:
     ``Fabric.queue_wait_s``) — cache hits skip the queue entirely.
     ``cache_bytes`` bounds this OSD's :class:`ResultCache` (0 disables).
     """
+
+    # lock-discipline contract, machine-checked by ``repro.analysis``:
+    # these attributes may only be read or written inside a ``with
+    # <osd>.lock`` body (any holder of the OSD reference — the store,
+    # the fault injector, the maintenance plane — plays by the same
+    # rule, since writers mutate them concurrently on pool workers)
+    _GUARDED_BY = {"data": "lock", "xattrs": "lock",
+                   "quarantine": "lock"}
 
     def __init__(self, osd_id: str, disk_bw: float | None = None, *,
                  scan_bw: float | None = None, cache_bytes: int = 0):
@@ -1001,6 +1009,10 @@ class ObjectStore:
     parallel writers amortize OSD work but not the forwarding hop — the
     paper's Table-1 structure.
     """
+
+    # lock-discipline contract (see ``repro.analysis``): the monotonic
+    # write clock is bumped by every writer thread concurrently
+    _GUARDED_BY = {"_vclock": "_lock"}
 
     def __init__(self, cluster: ClusterMap, *,
                  client_bw: float | None = None,
@@ -1731,11 +1743,11 @@ class ObjectStore:
         return failed
 
     def _osd_call(self, fn, *args):
-        """One request on a per-object path, with the same transient
-        retry budget as the batched planes.  Runs on the caller's
-        thread, so retries accrue to ``Fabric.retries`` directly; an
-        exhausted budget re-raises (terminal for that replica — the
-        caller's failover loop moves on)."""
+        """One request on a per-object CLIENT path, with the same
+        transient retry budget as the batched planes.  Runs on the
+        caller's thread, so retries accrue to ``Fabric.retries``
+        directly; an exhausted budget re-raises (terminal for that
+        replica — the caller's failover loop moves on)."""
         t0 = time.perf_counter()
         attempt = 0
         boff = self.retry.backoff(salt=next(self._salt))
@@ -1747,6 +1759,24 @@ class ObjectStore:
                     raise
                 time.sleep(boff.next_s())
                 self.fabric.retries += 1
+                attempt += 1
+
+    def _osd_call_quiet(self, fn, *args):
+        """Transient-retry twin of ``_osd_call`` for MAINTENANCE-daemon
+        paths: same backoff budget, but it touches no fabric counter —
+        ``Fabric.retries`` is client-owned (caller-thread-only
+        accounting), so a daemon retry must never ``+=`` it from a
+        background thread while a client thread is doing the same."""
+        t0 = time.perf_counter()
+        attempt = 0
+        boff = self.retry.backoff(salt=next(self._salt))
+        while True:
+            try:
+                return fn(*args)
+            except TransientOSDError:
+                if self.retry.give_up(attempt, t0):
+                    raise
+                time.sleep(boff.next_s())
                 attempt += 1
 
     def get(self, name: str) -> bytes:
@@ -2250,6 +2280,28 @@ class ObjectStore:
         verified.sort(key=lambda t: -t[0])  # newest version first
         return verified, divergent, bare
 
+    def _quarantined_on(self, name: str) -> list[str]:
+        """Up OSDs holding a quarantined copy of ``name`` — snapshotted
+        under each OSD's lock (read paths quarantine concurrently)."""
+        out = []
+        for osd_id in self.cluster.up_osds:
+            osd = self.osds[osd_id]
+            with osd.lock:
+                held = name in osd.quarantine
+            if held:
+                out.append(osd_id)
+        return out
+
+    def _quarantined_names(self) -> set[str]:
+        """Every quarantined name across the up OSDs (same snapshot
+        discipline) — the scrub/recover inventory extension."""
+        names: set[str] = set()
+        for osd_id in self.cluster.up_osds:
+            osd = self.osds[osd_id]
+            with osd.lock:
+                names |= set(osd.quarantine)
+        return names
+
     def scrub(self, heal: bool = True) -> dict:
         """Background integrity pass (the maintenance half of the
         self-healing plane): walk every up OSD, digest-verify each
@@ -2268,9 +2320,7 @@ class ObjectStore:
         touched).  Scrub is a maintenance client: its verify reads are
         OSD-local (counted in ``Fabric.scrub_bytes``, not client
         traffic), and only heal traffic crosses the OSD fabric."""
-        inventory: set[str] = set(self.list_objects())
-        for osd_id in self.cluster.up_osds:
-            inventory |= set(self.osds[osd_id].quarantine)
+        inventory = set(self.list_objects()) | self._quarantined_names()
         found = healed = 0
         lost: list[str] = []
         undigested: list[str] = []
@@ -2309,8 +2359,7 @@ class ObjectStore:
             self.fabric.corruptions_detected += 1
             out["corrupt"] += 1
         if not verified:
-            if divergent or any(name in self.osds[o].quarantine
-                                for o in self.cluster.up_osds):
+            if divergent or self._quarantined_on(name):
                 out["lost"] = True
             elif bare:
                 out["undigested"] = True
@@ -2346,8 +2395,7 @@ class ObjectStore:
                 "verified": [o for _, o, _, _ in verified],
                 "divergent": [o for o, _, _ in divergent],
                 "bare": [o for o, _, _ in bare],
-                "quarantined": [o for o in self.cluster.up_osds
-                                if name in self.osds[o].quarantine],
+                "quarantined": self._quarantined_on(name),
             }
         return out
 
@@ -2368,9 +2416,7 @@ class ObjectStore:
         extends the inventory with names the caller knows should exist
         (e.g. from an ObjectMap), so even objects whose every replica
         vanished — invisible to ``list_objects`` — are detected."""
-        inventory = set(self.list_objects())
-        for osd_id in self.cluster.up_osds:
-            inventory |= set(self.osds[osd_id].quarantine)
+        inventory = set(self.list_objects()) | self._quarantined_names()
         if expected is not None:
             inventory |= set(expected)
         moved = 0
@@ -2390,7 +2436,9 @@ class ObjectStore:
                 continue
             for osd_id in acting:
                 osd = self._osd(osd_id)
-                if name not in osd.data:
+                with osd.lock:  # writers land copies concurrently
+                    held = name in osd.data
+                if not held:
                     try:
                         self._hop_put(osd_id, name, src_blob, src_xattr)
                     except (OSDDown, TransientOSDError):
@@ -2472,7 +2520,7 @@ class ObjectStore:
             xattr["rows"] = [int(rows[0]), int(rows[1])]
         acting = self._acting(out_name)
         entry = self._osd(acting[0])
-        blob, stamped = self._osd_call(
+        blob, stamped = self._osd_call_quiet(
             entry.compact_merge, blobs, out_name, xattr)
         moved, _, _ = self._replicate(out_name, blob, stamped, acting)
         self.invalidate_cached(out_name)

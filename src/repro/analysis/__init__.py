@@ -1,0 +1,11 @@
+"""Verification plane: static invariant linter + dynamic lock checker.
+
+``python -m repro.analysis`` runs the AST passes (accounting, lock
+discipline, blocking-while-locked, write-path completeness) and the
+registry completeness pass; ``repro.analysis.lockcheck`` is the runtime
+half — an instrumented-lock harness the test suite can switch on with
+``pytest --lockcheck``.  See this package's README.md for the full
+contract list and where each one came from.
+"""
+
+from repro.analysis.base import Finding  # noqa: F401

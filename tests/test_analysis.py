@@ -1,0 +1,354 @@
+"""The verification plane verified: every invariant pass must FIRE on
+a seeded violation and stay quiet on a clean module.
+
+The AST passes run over tiny fixture trees written to tmp_path (shaped
+like ``src/repro/core/<mod>.py`` so the walker picks them up); the
+registry pass runs with injected declaration tables; the lockcheck
+harness is driven directly with hand-built lock graphs and finally as
+a full ``install()`` over a real store.
+"""
+
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import invariants, lockcheck, registry
+from repro.analysis.base import (SuppressionError, apply_suppressions,
+                                 load_suppressions)
+from repro.analysis.cli import main as analysis_main
+
+# --------------------------------------------------------------------------
+# fixture trees
+# --------------------------------------------------------------------------
+
+
+def _tree(tmp_path, source: str, name: str = "storeish.py"):
+    core = tmp_path / "src" / "repro" / "core"
+    core.mkdir(parents=True, exist_ok=True)
+    (core / name).write_text(textwrap.dedent(source))
+    return tmp_path
+
+
+VIOLATIONS = """\
+    import threading
+    import time
+
+
+    class Fabric:
+        ops: int = 0
+        scrub_bytes: int = 0
+
+
+    class OSD:
+        _GUARDED_BY = {"data": "lock"}
+
+        def __init__(self):
+            self.lock = threading.Lock()
+            self.data = {}
+            self.cache = None
+
+        def read_bad(self, name):
+            return self.data[name]          # unguarded read
+
+        def read_good(self, name):
+            with self.lock:
+                return self.data[name]
+
+        def sleepy(self):
+            with self.lock:
+                time.sleep(0.1)             # blocking while locked
+
+        def rot(self, name):
+            with self.lock:
+                self.data[name] = b""       # rewrite, no invalidation
+
+
+    class ObjectStore:
+        def __init__(self):
+            self.fabric = Fabric()
+            self._pool = None
+            self._versions = {}
+
+        def _next_version(self, name):
+            v = self._versions.get(name, 0) + 1
+            self._versions[name] = v
+            return v
+
+        def kickoff(self):
+            def worker():
+                self.fabric.ops += 1        # submit root hits counter
+            self._pool.submit(worker)
+
+        def start_daemon(self):
+            threading.Thread(target=self._loop).start()
+
+        def _loop(self):
+            self.fabric.ops += 1            # client-owned, off-thread
+            self.fabric.scrub_bytes += 1    # daemon-owned: allowed
+
+        def half_write(self, name):
+            self._versions[name] = self._next_version(name)
+"""
+
+CLEAN = """\
+    import threading
+
+
+    class Fabric:
+        ops: int = 0
+
+
+    class OSD:
+        _GUARDED_BY = {"data": "lock"}
+
+        def __init__(self):
+            self.lock = threading.Lock()
+            self.data = {}
+            self.cache = None
+
+        def get(self, name):
+            with self.lock:
+                return self.data[name]
+
+        def put(self, name, blob, version):
+            digest = content_digest(blob)
+            with self.lock:
+                self.data[name] = blob
+            self.cache.invalidate(name)
+            return digest
+
+
+    class ObjectStore:
+        def __init__(self):
+            self.fabric = Fabric()
+            self._versions = {}
+
+        def _next_version(self, name):
+            v = self._versions.get(name, 0) + 1
+            self._versions[name] = v
+            return v
+
+        def put(self, osd, name, blob):
+            self.fabric.ops += 1            # caller thread: fine
+            return osd.put(name, blob, self._next_version(name))
+"""
+
+
+def _rules(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+# --------------------------------------------------------------------------
+# AST passes fire on seeded violations
+# --------------------------------------------------------------------------
+
+
+class TestSeededViolations:
+    @pytest.fixture(scope="class")
+    def findings(self, tmp_path_factory):
+        root = _tree(tmp_path_factory.mktemp("bad"), VIOLATIONS)
+        return invariants.analyze(root)
+
+    def test_accounting_submit_root_fires(self, findings):
+        hits = _rules(findings, "accounting")
+        assert any("kickoff.worker" in f.qualname
+                   and "Fabric.ops" in f.message for f in hits)
+
+    def test_accounting_thread_root_fires(self, findings):
+        hits = _rules(findings, "accounting")
+        assert any(f.qualname == "ObjectStore._loop"
+                   and "Fabric.ops" in f.message for f in hits)
+
+    def test_accounting_daemon_counter_exempt(self, findings):
+        assert not any("scrub_bytes" in f.message
+                       for f in _rules(findings, "accounting"))
+
+    def test_lock_guard_fires(self, findings):
+        hits = _rules(findings, "lock-guard")
+        assert [f.qualname for f in hits] == ["OSD.read_bad"]
+
+    def test_lock_blocking_fires(self, findings):
+        hits = _rules(findings, "lock-blocking")
+        assert [f.qualname for f in hits] == ["OSD.sleepy"]
+        assert "time.sleep" in hits[0].message
+
+    def test_write_path_d1_fires(self, findings):
+        hits = _rules(findings, "write-path")
+        assert any(f.qualname == "OSD.rot"
+                   and "invalidation" in f.message for f in hits)
+
+    def test_write_path_d2_fires(self, findings):
+        hits = _rules(findings, "write-path")
+        assert any(f.qualname == "ObjectStore.half_write"
+                   and "content_digest" in f.message for f in hits)
+
+    def test_clean_module_is_quiet(self, tmp_path):
+        root = _tree(tmp_path, CLEAN)
+        assert invariants.analyze(root) == []
+
+
+# --------------------------------------------------------------------------
+# registry pass (injected tables)
+# --------------------------------------------------------------------------
+
+
+class TestRegistryPass:
+    def test_missing_rep_params(self):
+        hits = registry.check_registry(reps={}, ops=("select",))
+        assert any("representative params" in f.message for f in hits)
+
+    def test_undeclared_not_mergeable(self):
+        hits = registry.check_registry(
+            ops=("median",), not_mergeable=frozenset())
+        assert any("KNOWN_NOT_MERGEABLE" in f.message
+                   and f.qualname == "op:median" for f in hits)
+
+    def test_stale_not_mergeable_declaration(self):
+        hits = registry.check_registry(
+            ops=("agg",),
+            not_mergeable=frozenset({"agg"}))
+        assert any("stale" in f.message and f.qualname == "op:agg"
+                   for f in hits)
+
+    def test_undeclared_col_conservative(self):
+        hits = registry.check_registry(
+            ops=("recompress",), col_conservative=frozenset())
+        assert any("KNOWN_COL_CONSERVATIVE" in f.message
+                   for f in hits)
+
+    def test_real_registry_is_fully_declared(self):
+        assert registry.check_registry() == []
+
+
+# --------------------------------------------------------------------------
+# suppression machinery
+# --------------------------------------------------------------------------
+
+
+class TestSuppressions:
+    def test_justification_required(self, tmp_path):
+        p = tmp_path / "s.txt"
+        p.write_text("lock-guard cache.py:ResultCache._evict_lru\n")
+        with pytest.raises(SuppressionError):
+            load_suppressions(p)
+
+    def test_match_and_stale(self, tmp_path):
+        from repro.analysis.base import Finding
+        p = tmp_path / "s.txt"
+        p.write_text(
+            "lock-guard x.py:A.f -- caller holds the lock\n"
+            "accounting y.py:B.g -- never matches\n")
+        supps = load_suppressions(p)
+        f = Finding("lock-guard", "src/x.py", 3, "A.f", "m")
+        active, quiet, unused = apply_suppressions([f], supps)
+        assert active == [] and quiet == [f]
+        assert [s.key for s in unused] == ["accounting y.py:B.g"]
+
+
+# --------------------------------------------------------------------------
+# dynamic lockcheck harness
+# --------------------------------------------------------------------------
+
+
+class TestLockCheck:
+    def test_cycle_detected(self):
+        st = lockcheck.LockCheckState()
+        a = lockcheck.InstrumentedLock("A", st)
+        b = lockcheck.InstrumentedLock("B", st)
+        with a:
+            with b:
+                pass
+        with b:
+            with a:                 # inverted order: A<->B cycle
+                pass
+        assert st.cycles() == [["A", "B"]]
+        assert not st.report()["ok"]
+
+    def test_same_name_self_edge_is_cycle(self):
+        st = lockcheck.LockCheckState()
+        a1 = lockcheck.InstrumentedLock("OSD.lock", st)
+        a2 = lockcheck.InstrumentedLock("OSD.lock", st)
+        with a1:
+            with a2:                # two instances of the same lock
+                pass
+        assert st.cycles() == [["OSD.lock"]]
+
+    def test_consistent_order_is_clean(self):
+        st = lockcheck.LockCheckState()
+        a = lockcheck.InstrumentedLock("A", st)
+        b = lockcheck.InstrumentedLock("B", st)
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+        assert st.cycles() == []
+        assert st.report()["ok"]
+
+    def test_guarded_mutation_without_lock_flagged(self):
+        st = lockcheck.LockCheckState()
+        owner = lockcheck.InstrumentedLock("C._lock", st)
+        d = lockcheck._wrap_container({}, "C.table", owner, st)
+        d["k"] = 1                  # mutation, lock not held
+        assert any("C.table" in v for v in st.report()["violations"])
+
+    def test_guarded_mutation_under_lock_clean(self):
+        st = lockcheck.LockCheckState()
+        owner = lockcheck.InstrumentedLock("C._lock", st)
+        d = lockcheck._wrap_container({}, "C.table", owner, st)
+        with owner:
+            d["k"] = 1
+            d.pop("k")
+        assert st.report()["violations"] == []
+        assert d == {}
+
+    def test_cross_thread_order_edges_merge(self):
+        st = lockcheck.LockCheckState()
+        a = lockcheck.InstrumentedLock("A", st)
+        b = lockcheck.InstrumentedLock("B", st)
+
+        def t1():
+            with a:
+                with b:
+                    pass
+
+        def t2():
+            with b:
+                with a:
+                    pass
+
+        th1 = threading.Thread(target=t1)
+        th1.start()
+        th1.join()
+        th2 = threading.Thread(target=t2)
+        th2.start()
+        th2.join()
+        assert st.cycles() == [["A", "B"]]
+
+    def test_install_over_real_store(self):
+        st = lockcheck.install()
+        try:
+            from repro.core.store import make_store
+            store = make_store(3, replicas=2, cache_bytes=1 << 20)
+            store.put("obj/0", b"x" * 512)
+            assert store.get("obj/0") == b"x" * 512
+            store.delete("obj/0")
+        finally:
+            lockcheck.uninstall(st)
+        rep = st.report()
+        assert rep["locks_instrumented"] > 0
+        assert rep["containers_instrumented"] > 0
+        assert rep["acquisitions"] > 0
+        assert rep["ok"], rep
+
+
+# --------------------------------------------------------------------------
+# the repo itself is clean (same check CI runs)
+# --------------------------------------------------------------------------
+
+
+def test_repo_baseline_clean(capsys):
+    assert analysis_main([]) == 0
+    out = capsys.readouterr().out
+    assert "0 finding(s)" in out
+    assert "0 stale" in out

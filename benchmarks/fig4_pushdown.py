@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.logical import Column, LogicalDataset, RowRange
+from repro.core.logical import Column, LogicalDataset
 from repro.core.partition import PartitionPolicy
 from repro.core.skyhook import Query, SkyhookDriver
 from repro.core.store import make_store

@@ -18,14 +18,12 @@ Results land in results/train_e2e_<preset>.json.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import pathlib
 
-import jax
 import numpy as np
 
-from repro.configs.base import ArchConfig, get_config
+from repro.configs.base import ArchConfig
 from repro.core import GlobalVOL, make_store
 from repro.core.partition import PartitionPolicy
 from repro.data.corpus import CorpusSpec, build_corpus

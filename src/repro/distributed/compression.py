@@ -13,7 +13,6 @@ pod axis: quantize -> all-to-all-free psum of int8 (accumulated in int32)
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -9,7 +9,6 @@ pods in any order (composability, paper §3.2).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

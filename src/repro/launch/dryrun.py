@@ -29,7 +29,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import SHAPES, get_config, registry

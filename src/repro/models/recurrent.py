@@ -9,7 +9,6 @@ blocks with exact one-step decode recurrence.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ scan-constant).  Remat policy is configurable per step builder.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.distributed.sharding import hint
 from repro.models import attention as attn
-from repro.models import ssm
 from repro.models.layers import (
     apply_mlp,
     apply_norm,

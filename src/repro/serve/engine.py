@@ -20,7 +20,7 @@ OSD round trip and the OSD-side result caches absorb the repeats.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

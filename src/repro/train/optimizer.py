@@ -10,7 +10,7 @@ is recorded in EXPERIMENTS.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ from repro.core import (Column, GlobalVOL, LogicalDataset, PartitionPolicy,
                         Query, RowRange, SkyhookDriver, make_store)
 from repro.core import format as fmt
 from repro.core import objclass as oc
-from repro.core.store import ObjectNotFound, PER_REQUEST_OVERHEAD_BYTES
+from repro.core.store import PER_REQUEST_OVERHEAD_BYTES
 
 
 def make_world(n=4000, n_osds=5, replicas=3, seed=0):

@@ -25,7 +25,7 @@ from repro.core import expr as ex
 from repro.core import format as fmt
 from repro.core.cache import Negative, ResultCache, _MISS
 from repro.core.logical import _axis_intersect
-from repro.core.partition import load_objmap, objmap_key
+from repro.core.partition import load_objmap
 
 try:
     from hypothesis import given, settings, strategies as st

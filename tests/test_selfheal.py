@@ -12,7 +12,7 @@ from repro.core import (Column, DataLossError, FaultInjector, GlobalVOL,
                         RowRange, make_store)
 from repro.core import objclass as oc
 from repro.core.format import content_digest
-from repro.core.store import PartialWriteError, TransientOSDError
+from repro.core.store import PartialWriteError
 
 
 def make_world(n=4000, n_osds=6, replicas=3, seed=0, obj_kb=8, **store_kw):

@@ -6,7 +6,6 @@ from _hyp import given, settings, st
 
 from repro.core import (Column, GlobalVOL, LogicalDataset, PartitionPolicy,
                         Query, RowRange, SkyhookDriver, make_store)
-from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core.store import ObjectNotFound
 

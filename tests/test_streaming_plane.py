@@ -11,7 +11,6 @@ import pytest
 
 from repro.core import (Column, GlobalVOL, LogicalDataset, PartitionPolicy,
                         RowRange, make_store)
-from repro.core import format as fmt
 from repro.core import objclass as oc
 from repro.core.store import OSDDown, PartialWriteError
 

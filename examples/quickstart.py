@@ -214,7 +214,6 @@ print(f"single-flight: 8 identical concurrent scans -> "
       f"{sess.stats['deduped']} served by fan-out")
 
 # -- 7. train a tiny LM straight off the store -----------------------------
-import jax
 from repro.configs.base import get_config
 from repro.data.corpus import CorpusSpec, build_corpus
 from repro.data.pipeline import ObjectDataLoader
@@ -314,3 +313,28 @@ print(f"maintenance plane: compacted {n_small} tiny objects -> "
       f"{plane.scrub_corrupt} rotten copy, GC reclaimed "
       f"{store.fabric.gc_objects} retired objects "
       f"({store.fabric.gc_bytes >> 10} KB) — live reads stayed bit-exact")
+
+# -- 10. verifying the invariants ------------------------------------------
+# Everything above leans on contracts no unit test can enforce: Fabric
+# counters are caller-thread-owned, _GUARDED_BY state only moves under
+# its lock, every write path stamps a digest and invalidates caches,
+# every objclass op round-trips the wire.  The verification plane
+# checks them structurally — run it like CI does:
+#
+#   PYTHONPATH=src python -m repro.analysis        # static AST linter
+#   PYTHONPATH=src python -m pytest tests/test_serve_plane.py \
+#       tests/test_maintenance.py -q --lockcheck   # lock-order harness
+#
+# The linter must exit 0 with zero unsuppressed findings (intentional
+# exceptions live in src/repro/analysis/suppressions.txt, each with a
+# justification); --lockcheck fails the suite on any lock-order cycle
+# or unlocked guarded mutation, even if nothing deadlocked.  Here we
+# just run the registry pass in-process: every registered op either
+# rides a merge plane or is explicitly declared not to.
+from repro.analysis.registry import check_registry
+from repro.core.objclass import registered_ops
+
+assert check_registry() == [], "objclass registry contract broken"
+print(f"verification plane: registry contracts hold for "
+      f"{len(registered_ops())} objclass ops "
+      f"(run `python -m repro.analysis` for the full linter)")
